@@ -1,0 +1,42 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import JoinConfig, knn_join, plan_join
+from repro.core.api import JoinPlan
+from repro.data import expand_dataset, forest_like, osm_like
+
+
+@dataclasses.dataclass
+class Row:
+    bench: str
+    params: str
+    seconds: float
+    derived: Dict[str, float]
+
+    def csv(self) -> str:
+        d = ";".join(f"{k}={v:.6g}" for k, v in self.derived.items())
+        return f"{self.bench},{self.params},{self.seconds * 1e6:.1f},{d}"
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def default_forest(n: int = 20000, dim: int = 10, seed: int = 0):
+    """Stand-in for 'Forest×10' at laptop scale (paper: 5.8M × 10 attrs)."""
+    return forest_like(n, dim, seed)
+
+
+def default_osm(n: int = 20000, seed: int = 0):
+    return osm_like(n, seed)
+
+
+HEADER = "name,us_per_call,derived"

@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: jnp reference path wall-time on host + the
+roofline-relevant derived quantities. (Pallas runs interpret-mode on CPU,
+so wall-time here benchmarks the *reference*; kernel perf is assessed
+structurally via the dry-run HLO — see EXPERIMENTS.md §Roofline.)"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .common import Row
+
+
+def _bench(fn, *args, iters=5, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def distance_topk_bench() -> List[Row]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for (nr, ns, d, k) in [(1024, 8192, 10, 10), (4096, 16384, 2, 10)]:
+        r = jnp.asarray(rng.normal(size=(nr, d)).astype(np.float32))
+        s = jnp.asarray(rng.normal(size=(ns, d)).astype(np.float32))
+        secs = _bench(ops.distance_topk, r, s, k, impl="ref")
+        flops = 2.0 * nr * ns * d
+        rows.append(Row("kernel_distance_topk", f"{nr}x{ns}x{d},k={k}",
+                        secs, {"gflops_s": flops / secs / 1e9}))
+    return rows
+
+
+def assign_bench() -> List[Row]:
+    rng = np.random.default_rng(1)
+    rows = []
+    for (n, m, d) in [(65536, 256, 10), (16384, 1024, 2)]:
+        x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        p = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+        secs = _bench(ops.assign, x, p, impl="ref")
+        rows.append(Row("kernel_assign", f"{n}x{m}x{d}", secs,
+                        {"gflops_s": 2.0 * n * m * d / secs / 1e9}))
+    return rows
+
+
+def flash_attention_bench() -> List[Row]:
+    rng = np.random.default_rng(2)
+    rows = []
+    for (b, t, h, kvh, dh) in [(1, 1024, 8, 2, 64)]:
+        q = jnp.asarray(rng.normal(size=(b, t, h, dh)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(b, t, kvh, dh)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, t, kvh, dh)).astype(np.float32))
+        secs = _bench(ops.flash_attention, q, k, v, impl="ref")
+        flops = 4.0 * b * h * t * t * dh
+        rows.append(Row("kernel_flash_attention", f"b{b}t{t}h{h}", secs,
+                        {"gflops_s": flops / secs / 1e9}))
+    return rows
+
+
+ALL = [distance_topk_bench, assign_bench, flash_attention_bench]

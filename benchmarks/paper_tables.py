@@ -1,0 +1,198 @@
+"""Benchmarks reproducing every paper table/figure (§6), scaled to one
+host. Each function returns a list of Rows; run.py prints the CSV.
+
+Paper experiment → function index
+  Table 2  partition-size stats per pivot strategy/count → table2_partition_stats
+  Table 3  group-size stats                              → table3_group_stats
+  Fig 6    execution time vs (strategy × #pivots)        → fig6_tuning
+  Fig 7    selectivity & replication vs #pivots          → fig7_selectivity_replication
+  Fig 8    effect of k (Forest-like)                     → fig8_effect_k_forest
+  Fig 9    effect of k (OSM-like)                        → fig9_effect_k_osm
+  Fig 10   effect of dimensionality                      → fig10_dimensionality
+  Fig 11   scalability with data size                    → fig11_scalability
+  Fig 12   speedup with #nodes                           → fig12_speedup
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import (
+    JoinConfig, brute_force_knn, hbrj_join, knn_join, pbj_join, plan_join,
+    select_pivots, assign_to_pivots)
+from repro.data import expand_dataset
+from .common import Row, default_forest, default_osm, timed
+
+
+def table2_partition_stats(n=20000, pivot_counts=(64, 128, 256, 512)
+                           ) -> List[Row]:
+    data = default_forest(n)
+    rows = []
+    for strategy in ("random", "farthest", "kmeans"):
+        for m in pivot_counts:
+            (pivots), secs = timed(
+                select_pivots, data, m, strategy, sample=4096, seed=1)
+            part, _ = assign_to_pivots(data, pivots)
+            counts = np.bincount(part, minlength=m)
+            rows.append(Row(
+                "table2_partition_stats", f"{strategy},M={m}", secs,
+                {"min": counts.min(), "max": counts.max(),
+                 "avg": counts.mean(), "dev": counts.std()}))
+    return rows
+
+
+def table3_group_stats(n=20000, pivot_counts=(64, 128, 256),
+                       n_groups=9) -> List[Row]:
+    data = default_forest(n)
+    rows = []
+    for strategy in ("random", "farthest", "kmeans"):
+        for m in pivot_counts:
+            cfg = JoinConfig(k=10, n_pivots=m, n_groups=n_groups,
+                             pivot_strategy=strategy, grouping="geometric")
+            plan, secs = timed(plan_join, data, data, cfg)
+            sizes = np.bincount(plan.group_of_r(), minlength=n_groups)
+            rows.append(Row(
+                "table3_group_stats", f"{strategy},M={m}", secs,
+                {"min": sizes.min(), "max": sizes.max(),
+                 "avg": sizes.mean(), "dev": sizes.std()}))
+    return rows
+
+
+def fig6_tuning(n=12000, pivot_counts=(64, 128, 256)) -> List[Row]:
+    """Execution time by phase for the 6 strategy combinations (RGE, FGE,
+    KGE, RGR, FGR, KGR)."""
+    data = default_forest(n)
+    rows = []
+    combos = [(p, g) for p in ("random", "farthest", "kmeans")
+              for g in ("geometric", "greedy")]
+    for pivot_s, group_s in combos:
+        for m in pivot_counts:
+            tag = f"{pivot_s[0].upper()}G{group_s[0].upper()},M={m}"
+            cfg = JoinConfig(k=10, n_pivots=m, n_groups=9,
+                             pivot_strategy=pivot_s, grouping=group_s)
+            plan, t_plan = timed(plan_join, data, data, cfg)
+            res, t_join = timed(knn_join, data, data, config=cfg, plan=plan)
+            rows.append(Row(
+                "fig6_tuning", tag, t_plan + t_join,
+                {"plan_s": t_plan, "join_s": t_join,
+                 "selectivity": res.stats.selectivity}))
+    return rows
+
+
+def fig7_selectivity_replication(n=12000, pivot_counts=(32, 64, 128, 256)
+                                 ) -> List[Row]:
+    data = default_forest(n)
+    rows = []
+    for grouping in ("geometric", "greedy"):
+        for m in pivot_counts:
+            cfg = JoinConfig(k=10, n_pivots=m, n_groups=9, grouping=grouping)
+            res, secs = timed(knn_join, data, data, config=cfg)
+            rows.append(Row(
+                "fig7_selectivity_replication", f"{grouping},M={m}", secs,
+                {"selectivity": res.stats.selectivity,
+                 "avg_replicas": res.stats.replicas_s / n,
+                 "tile_selectivity": res.stats.tile_selectivity}))
+    return rows
+
+
+def _three_way(data, k, n_reducers=9, m=128):
+    cfg = JoinConfig(k=k, n_pivots=m, n_groups=n_reducers)
+    pgbj, t_pgbj = timed(knn_join, data, data, config=cfg)
+    pbj, t_pbj = timed(pbj_join, data, data, k,
+                       JoinConfig(k=k, n_pivots=m), n_reducers=n_reducers)
+    hbrj, t_hbrj = timed(hbrj_join, data, data, k, n_reducers=n_reducers)
+    return (pgbj, t_pgbj), (pbj, t_pbj), (hbrj, t_hbrj)
+
+
+def fig8_effect_k_forest(n=8000, ks=(10, 20, 30, 40, 50)) -> List[Row]:
+    data = default_forest(n)
+    rows = []
+    for k in ks:
+        (pg, tg), (pb, tb), (hb, th) = _three_way(data, k)
+        rows.append(Row("fig8_effect_k_forest", f"k={k}", tg + tb + th, {
+            "pgbj_s": tg, "pbj_s": tb, "hbrj_s": th,
+            "pgbj_sel": pg.stats.selectivity,
+            "pbj_sel": pb.stats.selectivity,
+            "hbrj_sel": hb.stats.selectivity,
+            "pgbj_shuffle": pg.stats.shuffle_tuples,
+            "pbj_shuffle": pb.stats.shuffle_tuples,
+            "hbrj_shuffle": hb.stats.shuffle_tuples}))
+    return rows
+
+
+def fig9_effect_k_osm(n=8000, ks=(10, 30, 50)) -> List[Row]:
+    data = default_osm(n)
+    rows = []
+    for k in ks:
+        (pg, tg), (pb, tb), (hb, th) = _three_way(data, k)
+        rows.append(Row("fig9_effect_k_osm", f"k={k}", tg + tb + th, {
+            "pgbj_s": tg, "pbj_s": tb, "hbrj_s": th,
+            "pgbj_sel": pg.stats.selectivity,
+            "hbrj_sel": hb.stats.selectivity}))
+    return rows
+
+
+def fig10_dimensionality(n=8000, dims=(2, 4, 6, 8, 10)) -> List[Row]:
+    rows = []
+    for d in dims:
+        data = default_forest(n, dim=d, seed=d)
+        (pg, tg), (pb, tb), (hb, th) = _three_way(data, 10)
+        rows.append(Row("fig10_dimensionality", f"dim={d}", tg + tb + th, {
+            "pgbj_s": tg, "pbj_s": tb, "hbrj_s": th,
+            "pgbj_sel": pg.stats.selectivity,
+            "pgbj_shuffle": pg.stats.shuffle_tuples,
+            "hbrj_shuffle": hb.stats.shuffle_tuples}))
+    return rows
+
+
+def fig11_scalability(base_n=4000, factors=(1, 2, 4)) -> List[Row]:
+    base = default_forest(base_n)
+    rows = []
+    for t in factors:
+        data = expand_dataset(base, t, seed=0) if t > 1 else base
+        (pg, tg), (pb, tb), (hb, th) = _three_way(data, 10)
+        rows.append(Row("fig11_scalability", f"x{t}", tg + tb + th, {
+            "n": data.shape[0],
+            "pgbj_s": tg, "pbj_s": tb, "hbrj_s": th,
+            "pgbj_sel": pg.stats.selectivity,
+            "hbrj_sel": hb.stats.selectivity,
+            "pgbj_shuffle": pg.stats.shuffle_tuples}))
+    return rows
+
+
+def fig12_speedup(n=12000, nodes=(4, 9, 16, 36)) -> List[Row]:
+    """Simulated cluster speedup: makespan = max per-group work."""
+    data = default_forest(n)
+    rows = []
+    for nn in nodes:
+        cfg = JoinConfig(k=10, n_pivots=128, n_groups=nn)
+        plan, _ = timed(plan_join, data, data, cfg)
+        res, secs = timed(knn_join, data, data, config=cfg, plan=plan)
+        # per-group work = |R_g| × |S_g| (pairs before pruning)
+        g_r = plan.group_of_r()
+        work = []
+        for g in range(plan.n_groups):
+            rg = (g_r == g).sum()
+            sg = plan.s_replica_mask(g).sum()
+            work.append(rg * sg)
+        total, mx = float(np.sum(work)), float(np.max(work))
+        rows.append(Row("fig12_speedup", f"nodes={nn}", secs, {
+            "sim_speedup": total / mx if mx else 0.0,
+            "ideal": nn,
+            "efficiency": (total / mx) / nn if mx else 0.0,
+            "shuffle": res.stats.shuffle_tuples}))
+    return rows
+
+
+ALL = [
+    table2_partition_stats,
+    table3_group_stats,
+    fig6_tuning,
+    fig7_selectivity_replication,
+    fig8_effect_k_forest,
+    fig9_effect_k_osm,
+    fig10_dimensionality,
+    fig11_scalability,
+    fig12_speedup,
+]

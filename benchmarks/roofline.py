@@ -1,0 +1,40 @@
+"""Roofline table assembly: reads the dry-run sweeps (results/*.json) and
+prints the per-(arch × shape × mesh) three-term roofline with bottleneck
+and useful-flop ratio. Does not compile anything itself — run
+``python -m repro.launch.dryrun --all [--multi-pod] --out …`` first."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from .common import Row
+
+RESULTS = ("results/dryrun_single_pod.json", "results/dryrun_multi_pod.json")
+
+
+def roofline_rows() -> List[Row]:
+    rows = []
+    for path in RESULTS:
+        if not os.path.exists(path):
+            continue
+        data = json.load(open(path))
+        for rec in data.get("results", []):
+            r = rec["roofline"]
+            rows.append(Row(
+                "roofline", f"{rec['arch']}:{rec['shape']}@{rec['mesh']}",
+                max(r["compute_s"], r["memory_s"], r["collective_s"]),
+                {
+                    "compute_s": r["compute_s"],
+                    "memory_s": r["memory_s"],
+                    "collective_s": r["collective_s"],
+                    "bottleneck": {"compute_s": 0, "memory_s": 1,
+                                   "collective_s": 2}[r["bottleneck"]],
+                    "useful_ratio": rec["useful_flop_ratio"],
+                    "peak_gib": rec["memory"]["peak_bytes"] / 2**30,
+                    "fits_16g": int(rec["memory"].get("fits_hbm_16g", 0)),
+                }))
+    return rows
+
+
+ALL = [roofline_rows]

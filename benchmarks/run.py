@@ -1,0 +1,45 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark function names")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller sizes (CI mode)")
+    args = ap.parse_args()
+
+    from . import kernel_bench, paper_tables, roofline
+    from .common import HEADER
+
+    fns = list(paper_tables.ALL) + list(kernel_bench.ALL) + list(roofline.ALL)
+    if args.only:
+        fns = [f for f in fns if args.only in f.__name__]
+
+    print(HEADER)
+    failures = 0
+    for fn in fns:
+        try:
+            kwargs = {}
+            if args.fast and fn.__module__.endswith("paper_tables"):
+                import inspect
+                sig = inspect.signature(fn)
+                if "n" in sig.parameters:
+                    kwargs["n"] = 3000
+                if "base_n" in sig.parameters:
+                    kwargs["base_n"] = 1500
+            for row in fn(**kwargs):
+                print(row.csv(), flush=True)
+        except Exception:  # noqa: BLE001 — keep the suite going
+            failures += 1
+            print(f"# FAILED {fn.__name__}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,58 @@
+"""Serving with kNN-LM retrieval: the paper's join as a serving feature.
+
+A small LM serves batched requests; at each decode step the batch's hidden
+states are joined (R ⋉ S, |R| = batch) against a datastore of key
+embeddings using the PGBJ machinery, and the retrieval distribution is
+interpolated with the LM head.
+
+Run:  PYTHONPATH=src python examples/serve_retrieval.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import ModelOptions, forward, init_params
+from repro.serve import (
+    BatchedServer, Datastore, KnnLMConfig, ServeConfig, interpolate,
+    knn_logits)
+
+
+def main():
+    cfg = dataclasses.replace(get_reduced("llama3.2-3b"), vocab=512)
+    opts = ModelOptions(dtype=jnp.float32, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0), opts)
+    rng = np.random.default_rng(0)
+
+    # build a datastore of (hidden state → next token) pairs from "corpus"
+    corpus = rng.integers(0, cfg.vocab, (64, 48), dtype=np.int32)
+    hs, _ = forward(params, cfg, jnp.asarray(corpus), opts=opts)
+    # use final logits' pre-head hidden? for the demo: token embeddings of
+    # contexts ≈ the model's own representations via the lm head weights
+    keys = np.asarray(hs[:, :-1].reshape(-1, cfg.vocab))[:, :64]  # (N, 64)
+    vals = corpus[:, 1:].reshape(-1)
+    store = Datastore.build(keys, vals, k=8, n_pivots=64, n_groups=4)
+    store.prepare(keys[:256])
+    kcfg = KnnLMConfig(lam=0.3, tau=100.0, k=8)
+
+    def hook(logits, cache):
+        q = np.asarray(logits)[:, :64]
+        kl = knn_logits(q, store, kcfg, vocab=cfg.vocab)
+        return interpolate(logits, kl, kcfg.lam)
+
+    srv = BatchedServer(cfg, ServeConfig(batch=4, temperature=0.0),
+                        params, opts, logits_hook=hook)
+    prompts = [rng.integers(0, cfg.vocab, rng.integers(4, 12))
+               for _ in range(6)]
+    outs = srv.generate(prompts, max_new_tokens=8)
+    for i, (p, o) in enumerate(zip(prompts, outs)):
+        print(f"req {i}: prompt={list(p)[:6]}… → {list(o)}")
+    print("\nserved 6 requests in 2 batched waves with kNN-LM retrieval ✓")
+    print(f"datastore: {store.keys.shape[0]} keys, "
+          f"{store.config.n_pivots} pivots, {store.config.n_groups} groups")
+
+
+if __name__ == "__main__":
+    main()

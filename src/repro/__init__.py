@@ -1,0 +1,2 @@
+"""repro: PGBJ kNN join (VLDB'12) as a multi-pod JAX framework."""
+__version__ = "1.0.0"

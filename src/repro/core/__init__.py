@@ -1,0 +1,25 @@
+"""PGBJ kNN join — the paper's contribution as a composable JAX module."""
+from .types import JoinConfig, JoinResult, JoinStats, SummaryTable
+from .pivots import select_pivots
+from .partition import assign_to_pivots, build_summary, assign_and_summarize
+from .bounds import (
+    pivot_distance_matrix, compute_theta, replication_lower_bounds,
+    group_lower_bounds, hyperplane_distances, ring_bounds)
+from .grouping import (
+    geometric_grouping, greedy_grouping, group_partitions,
+    replication_count_exact, replication_count_partitions)
+from .api import knn_join, plan_join, JoinPlan
+from .metrics import pairwise_dist
+from .baselines import brute_force_knn, hbrj_join, pbj_join
+
+__all__ = [
+    "JoinConfig", "JoinResult", "JoinStats", "SummaryTable",
+    "select_pivots", "assign_to_pivots", "build_summary",
+    "assign_and_summarize", "pivot_distance_matrix", "compute_theta",
+    "replication_lower_bounds", "group_lower_bounds",
+    "hyperplane_distances", "ring_bounds",
+    "geometric_grouping", "greedy_grouping", "group_partitions",
+    "replication_count_exact", "replication_count_partitions",
+    "knn_join", "plan_join", "JoinPlan", "pairwise_dist",
+    "brute_force_knn", "hbrj_join", "pbj_join",
+]

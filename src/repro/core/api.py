@@ -1,0 +1,144 @@
+"""Public entry points for the PGBJ kNN join (single-host engine).
+
+``knn_join`` runs the full paper pipeline:
+   preprocessing (pivots) → job 1 (partition + summaries) →
+   host grouping/bounds → job 2 (replicate + per-group join).
+
+The distributed (shard_map) execution lives in ``core.distributed``; it
+shares every stage of this module except the final per-group loop, which
+it runs as SPMD over the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from . import bounds as B
+from . import grouping as G
+from .join import join_group_dense, join_group_pruned
+from .partition import assign_and_summarize
+from .pivots import select_pivots
+from .types import JoinConfig, JoinResult, JoinStats, SummaryTable
+
+__all__ = ["knn_join", "JoinPlan", "plan_join"]
+
+
+@dataclasses.dataclass
+class JoinPlan:
+    """Everything job 2 needs, computed before any shuffle (paper §4.3/§5).
+
+    This is the "compLBOfReplica" product: pivots, summary tables, θ, the
+    LB matrices and the grouping. It is cheap (O(M²)) and host-resident —
+    the distributed runtime broadcasts it to every worker like the paper
+    loads pivots into every mapper.
+    """
+
+    config: JoinConfig
+    pivots: np.ndarray           # (M, dim)
+    pivd: np.ndarray             # (M, M)
+    r_part: np.ndarray           # (|R|,)
+    r_dist: np.ndarray           # (|R|,)
+    s_part: np.ndarray           # (|S|,)
+    s_dist: np.ndarray           # (|S|,)
+    t_r: SummaryTable
+    t_s: SummaryTable
+    theta: np.ndarray            # (M,)
+    lb: np.ndarray               # (M_s, M_r)   Cor. 2
+    groups: np.ndarray           # (M,) group id per R-partition
+    lb_group: np.ndarray         # (M_s, N)     Thm 6
+
+    @property
+    def n_groups(self) -> int:
+        return int(self.lb_group.shape[1])
+
+    def group_of_r(self) -> np.ndarray:
+        return self.groups[self.r_part]
+
+    def s_replica_mask(self, g: int) -> np.ndarray:
+        """Theorem 6 membership test: which S rows ship to group g."""
+        return self.s_dist >= self.lb_group[self.s_part, g]
+
+
+def plan_join(r: np.ndarray, s: np.ndarray, config: JoinConfig) -> JoinPlan:
+    """Run preprocessing + job 1 + host-side bound/grouping computation."""
+    r = np.ascontiguousarray(r, np.float32)
+    s = np.ascontiguousarray(s, np.float32)
+    m = min(config.n_pivots, r.shape[0])
+    pivots = select_pivots(
+        r, m, config.pivot_strategy,
+        sample=config.pivot_sample,
+        n_sets=config.pivot_candidate_sets,
+        seed=config.seed)
+    r_part, r_dist, t_r = assign_and_summarize(r, pivots,
+                                               metric=config.metric)
+    s_part, s_dist, t_s = assign_and_summarize(s, pivots, k=config.k,
+                                               metric=config.metric)
+    pivd = B.pivot_distance_matrix(pivots, config.metric)
+    theta = B.compute_theta(pivd, t_r, t_s, config.k)
+    lb = B.replication_lower_bounds(pivd, t_r, theta)
+    n_groups = min(config.n_groups, m)
+    groups = G.group_partitions(
+        config.grouping, pivd, t_r, n_groups, lb=lb, t_s=t_s)
+    lb_group = B.group_lower_bounds(lb, groups, n_groups)
+    return JoinPlan(
+        config=config, pivots=pivots, pivd=pivd,
+        r_part=r_part, r_dist=r_dist, s_part=s_part, s_dist=s_dist,
+        t_r=t_r, t_s=t_s, theta=theta, lb=lb,
+        groups=groups, lb_group=lb_group)
+
+
+def knn_join(
+    r: np.ndarray,
+    s: np.ndarray,
+    k: int | None = None,
+    config: Optional[JoinConfig] = None,
+    *,
+    plan: Optional[JoinPlan] = None,
+) -> JoinResult:
+    """PGBJ kNN join: for every row of ``r``, the k nearest rows of ``s``.
+
+    Returns global S row indices and true distances, ascending per query.
+    """
+    config = config or JoinConfig(k=k or 10)
+    if k is not None and k != config.k:
+        config = dataclasses.replace(config, k=k)
+    if config.k > s.shape[0]:
+        raise ValueError(f"k={config.k} > |S|={s.shape[0]}")
+    r = np.ascontiguousarray(r, np.float32)
+    s = np.ascontiguousarray(s, np.float32)
+    if plan is None:
+        plan = plan_join(r, s, config)
+    stats = JoinStats(n_r=r.shape[0], n_s=s.shape[0])
+    # job-1 mapper pivot distances count toward Eq. 13 (paper §6 note)
+    stats.pivot_pairs_computed += (r.shape[0] + s.shape[0]) * plan.pivots.shape[0]
+
+    out_d = np.full((r.shape[0], config.k), np.inf, np.float32)
+    out_i = np.full((r.shape[0], config.k), -1, np.int64)
+    s_ids_all = np.arange(s.shape[0], dtype=np.int64)
+    group_of_r = plan.group_of_r()
+    for g in range(plan.n_groups):
+        r_sel = np.where(group_of_r == g)[0]
+        if r_sel.size == 0:
+            continue
+        s_mask = plan.s_replica_mask(g)
+        stats.replicas_s += int(s_mask.sum())
+        s_sel = np.where(s_mask)[0]
+        if config.use_tile_pruning:
+            gd, gi = join_group_pruned(
+                r[r_sel], plan.r_part[r_sel],
+                s[s_sel], plan.s_part[s_sel], plan.s_dist[s_sel],
+                s_ids_all[s_sel],
+                plan.pivots, plan.pivd, plan.theta,
+                plan.t_s.lower, plan.t_s.upper, config.k,
+                tile_r=config.tile_r, tile_s=config.tile_s, stats=stats,
+                metric=config.metric)
+        else:
+            gd, gi = join_group_dense(
+                r[r_sel], s[s_sel], s_ids_all[s_sel], config.k,
+                tile_r=config.tile_r, tile_s=config.tile_s, stats=stats,
+                metric=config.metric)
+        out_d[r_sel] = gd
+        out_i[r_sel] = gi
+    return JoinResult(indices=out_i, distances=out_d, stats=stats)

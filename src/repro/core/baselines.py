@@ -1,0 +1,135 @@
+"""Baselines the paper compares against (§3, §6): brute force oracle,
+H-BRJ [Zhang et al., EDBT'12] and PBJ (PGBJ bounds without grouping).
+
+H-BRJ on TPU: the original uses per-reducer R-trees; tree traversal is
+pointer-chasing and has no sensible TPU mapping (DESIGN.md §7), so each
+(R_i, S_j) block join is a blocked brute-force top-k — the same reducer
+compute its shuffle pattern implies. Shuffle accounting follows §3:
+√N·(|R|+|S|) for job 1 plus k·|R|·√N partial results for the merge job.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import numpy as np
+
+from .join import join_group_dense, topk_merge
+from .partition import assign_and_summarize
+from .pivots import select_pivots
+from .types import JoinConfig, JoinResult, JoinStats
+from . import bounds as B
+
+__all__ = ["brute_force_knn", "hbrj_join", "pbj_join"]
+
+
+def brute_force_knn(
+    r: np.ndarray, s: np.ndarray, k: int, *, tile_r: int = 256,
+    tile_s: int = 2048, metric: str = "l2",
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact oracle: (dists, ids), ascending. O(|R||S|)."""
+    stats = JoinStats()
+    d, i = join_group_dense(
+        np.asarray(r, np.float32), np.asarray(s, np.float32),
+        np.arange(s.shape[0], dtype=np.int64), k,
+        tile_r=tile_r, tile_s=tile_s, stats=stats, metric=metric)
+    return d, i
+
+
+def hbrj_join(
+    r: np.ndarray, s: np.ndarray, k: int, *, n_reducers: int = 16, seed: int = 0
+) -> JoinResult:
+    """H-BRJ: random √N × √N block join + merge job."""
+    r = np.asarray(r, np.float32); s = np.asarray(s, np.float32)
+    root = max(1, int(math.isqrt(n_reducers)))
+    rng = np.random.default_rng(seed)
+    r_blk = rng.integers(0, root, r.shape[0])
+    s_blk = rng.integers(0, root, s.shape[0])
+    stats = JoinStats(n_r=r.shape[0], n_s=s.shape[0])
+    # job-1 shuffle: each R_i goes to √N reducers, each S_j to √N reducers
+    stats.replicas_s = root * s.shape[0] + (root - 1) * r.shape[0]
+    out_d = np.full((r.shape[0], k), np.inf, np.float32)
+    out_i = np.full((r.shape[0], k), -1, np.int64)
+    s_ids = np.arange(s.shape[0], dtype=np.int64)
+    for i in range(root):
+        r_sel = np.where(r_blk == i)[0]
+        if r_sel.size == 0:
+            continue
+        bd = np.full((r_sel.size, k), np.inf, np.float32)
+        bi = np.full((r_sel.size, k), -1, np.int64)
+        for j in range(root):
+            s_sel = np.where(s_blk == j)[0]
+            if s_sel.size == 0:
+                continue
+            kk = min(k, s_sel.size)
+            gd, gi = join_group_dense(
+                r[r_sel], s[s_sel], s_ids[s_sel], kk, stats=stats)
+            # merge job (the 2nd MapReduce): combine partial top-k
+            bd, bi = topk_merge(bd, bi, gd.astype(np.float32) ** 2, gi, k)
+        out_d[r_sel] = np.sqrt(bd)
+        out_i[r_sel] = bi
+    return JoinResult(indices=out_i, distances=out_d, stats=stats)
+
+
+def pbj_join(
+    r: np.ndarray, s: np.ndarray, k: int,
+    config: JoinConfig | None = None, *, n_reducers: int = 16,
+) -> JoinResult:
+    """PBJ: PGBJ's pivots/bounds, H-BRJ's ungrouped √N×√N framework.
+
+    R is randomly split into √N subsets and S into √N subsets; a reducer
+    joins (R_i, S_j) using a θ bound derived from the objects it received
+    (paper §6: "without grouping ... randomness results in a loose distance
+    bound"), then a merge job combines partials.
+    """
+    config = config or JoinConfig(k=k)
+    r = np.asarray(r, np.float32); s = np.asarray(s, np.float32)
+    root = max(1, int(math.isqrt(n_reducers)))
+    rng = np.random.default_rng(config.seed)
+    m = min(config.n_pivots, r.shape[0])
+    pivots = select_pivots(r, m, config.pivot_strategy,
+                           sample=config.pivot_sample, seed=config.seed)
+    r_part, r_dist, t_r = assign_and_summarize(r, pivots)
+    s_part, s_dist, t_s = assign_and_summarize(s, pivots, k=k)
+    pivd = B.pivot_distance_matrix(pivots)
+
+    stats = JoinStats(n_r=r.shape[0], n_s=s.shape[0])
+    stats.pivot_pairs_computed += (r.shape[0] + s.shape[0]) * m
+    stats.replicas_s = root * s.shape[0] + (root - 1) * r.shape[0]
+
+    r_blk = rng.integers(0, root, r.shape[0])
+    s_blk = rng.integers(0, root, s.shape[0])
+    s_ids = np.arange(s.shape[0], dtype=np.int64)
+    out_d = np.full((r.shape[0], k), np.inf, np.float32)
+    out_i = np.full((r.shape[0], k), -1, np.int64)
+    from .join import join_group_pruned  # local to avoid cycle at import
+    for i in range(root):
+        r_sel = np.where(r_blk == i)[0]
+        if r_sel.size == 0:
+            continue
+        bd = np.full((r_sel.size, k), np.inf, np.float32)
+        bi = np.full((r_sel.size, k), -1, np.int64)
+        for j in range(root):
+            s_sel = np.where(s_blk == j)[0]
+            if s_sel.size == 0:
+                continue
+            kk = min(k, s_sel.size)
+            # per-reducer θ from the received S_j subset only (loose, as
+            # the paper observes): k-th smallest ub over T_S restricted to
+            # the subset is not available, so bound from subset stats.
+            sub_t_s = _subset_table(s_part[s_sel], s_dist[s_sel], m, kk)
+            theta = B.compute_theta(pivd, t_r, sub_t_s, kk)
+            gd, gi = join_group_pruned(
+                r[r_sel], r_part[r_sel],
+                s[s_sel], s_part[s_sel], s_dist[s_sel], s_ids[s_sel],
+                pivots, pivd, theta, sub_t_s.lower, sub_t_s.upper, kk,
+                tile_r=config.tile_r, tile_s=config.tile_s, stats=stats)
+            bd, bi = topk_merge(bd, bi, gd.astype(np.float32) ** 2, gi, k)
+        out_d[r_sel] = np.sqrt(bd)
+        out_i[r_sel] = bi
+    return JoinResult(indices=out_i, distances=out_d, stats=stats)
+
+
+def _subset_table(part: np.ndarray, dist: np.ndarray, m: int, k: int):
+    from .partition import build_summary
+    return build_summary(part, dist, m, k=k)

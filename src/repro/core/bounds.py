@@ -1,0 +1,164 @@
+"""Distance bounds of PGBJ (paper §4.3, Theorems 1-6, Algorithms 1-2).
+
+Everything here is a function of the summary tables and the pivot-pivot
+distance matrix only — O(M^2 + M·k) work, independent of |R|, |S|. This is
+the paper's point: the bounds let the second job ship and prune data
+without ever joining.
+
+Vectorization note: Algorithm 1 (boundingKNN) walks each sorted T_S row
+with a priority queue and early exit. The vectorized form below computes
+the identical θ_i = k-th smallest of {|p_i,p_j| + p_j.d_l} + U(P_i^R)
+without the queue; early exit is a sequential-machine optimization with no
+TPU analogue (and no effect on the result).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .types import SummaryTable
+
+__all__ = [
+    "pivot_distance_matrix",
+    "compute_theta",
+    "replication_lower_bounds",
+    "group_lower_bounds",
+    "hyperplane_distances",
+    "ring_bounds",
+]
+
+
+def pivot_distance_matrix(pivots: np.ndarray, metric: str = "l2"
+                          ) -> np.ndarray:
+    """(M, M) true pivot-pivot distances |p_i, p_j|."""
+    if metric != "l2":
+        from .metrics import pairwise_dist
+        out = pairwise_dist(pivots, pivots, metric)
+        np.fill_diagonal(out, 0.0)
+        return out
+    p = np.asarray(pivots, np.float64)
+    sq = (p * p).sum(-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (p @ p.T)
+    np.maximum(d2, 0.0, out=d2)
+    out = np.sqrt(d2, dtype=np.float64)
+    np.fill_diagonal(out, 0.0)
+    return out.astype(np.float32)
+
+
+def compute_theta(
+    pivd: np.ndarray,
+    t_r: SummaryTable,
+    t_s: SummaryTable,
+    k: int,
+    *,
+    block: int = 512,
+) -> np.ndarray:
+    """θ_i for every R-partition (Eq. 6 / Algorithm 1).
+
+    θ_i = k-th smallest ub(s, P_i^R) over the per-partition pivot-kNN lists
+    of T_S, where ub(s, P_i^R) = U(P_i^R) + |p_i, p_j| + |p_j, s| (Thm 3).
+    Empty R-partitions get θ_i = -inf (nothing to bound, nothing shipped).
+
+    Exactness caveat (inherited from the paper): T_S keeps only the k
+    nearest objects per S-partition, so θ uses at most k candidates per
+    partition — precisely the set the paper proves sufficient (text under
+    Eq. 6: only the k closest objects of each P_j^S can contribute).
+    """
+    m_r = t_r.n_partitions
+    assert t_s.knn_dists is not None, "T_S must carry pivot-kNN distances"
+    knn = t_s.knn_dists[:, :k]                      # (M_s, k), +inf padded
+    u_r = t_r.upper                                  # (M_r,)
+    theta = np.full((m_r,), -np.inf, np.float32)
+    occupied = t_r.counts > 0
+    # total candidates must be at least k for a valid bound
+    if np.isfinite(knn).sum() < k:
+        raise ValueError(
+            f"T_S holds {int(np.isfinite(knn).sum())} finite candidates; "
+            f"need >= k={k} (is |S| >= k?)")
+    for lo in range(0, m_r, block):
+        hi = min(lo + block, m_r)
+        rows = np.arange(lo, hi)
+        # ub without the U term: (rows, M_s, k)
+        ub = pivd[rows][:, :, None] + knn[None, :, :]
+        flat = ub.reshape(hi - lo, -1)
+        kth = np.partition(flat, k - 1, axis=1)[:, k - 1]
+        theta[rows] = np.where(occupied[rows], kth + u_r[rows], -np.inf)
+    return theta.astype(np.float32)
+
+
+def replication_lower_bounds(
+    pivd: np.ndarray, t_r: SummaryTable, theta: np.ndarray
+) -> np.ndarray:
+    """LB(P_j^S, P_i^R) matrix of Corollary 2 / Algorithm 2, shape (M_s, M_r).
+
+    s ∈ P_j^S must be shipped to partition i iff |s, p_j| >= LB[j, i].
+    Empty R-partitions get LB = +inf (never ship).
+    """
+    lb = pivd.T - t_r.upper[None, :] - theta[None, :]     # (M_s, M_r)
+    lb = np.where(np.isfinite(theta)[None, :], lb, np.inf)
+    return np.maximum(lb, 0.0).astype(np.float32)
+
+
+def group_lower_bounds(lb: np.ndarray, groups: np.ndarray, n_groups: int) -> np.ndarray:
+    """LB(P_j^S, G_g) = min_{i ∈ G_g} LB(P_j^S, P_i^R)  (Theorem 6).
+
+    Parameters
+    ----------
+    lb:      (M_s, M_r) from `replication_lower_bounds`
+    groups:  (M_r,) int — group id of each R-partition
+    Returns (M_s, n_groups).
+    """
+    out = np.full((lb.shape[0], n_groups), np.inf, np.float32)
+    np.minimum.at(out.T, groups, lb.T)  # scatter-min over partitions
+    return out
+
+
+def hyperplane_distances(
+    query_to_pivots: np.ndarray, pivd: np.ndarray, home: np.ndarray
+) -> np.ndarray:
+    """d(q, HP(p_home, p_j)) for each query and every other pivot (Thm 1).
+
+    d = (|q,p_j|^2 - |q,p_home|^2) / (2 |p_home, p_j|);  Corollary 1: if
+    d > θ the whole partition P_j can be skipped for q.
+
+    Parameters
+    ----------
+    query_to_pivots: (n, M) true distances from each query to every pivot
+    pivd:            (M, M) pivot-pivot distances
+    home:            (n,) int — home partition of each query
+    Returns (n, M); the home column is +inf (never prune own partition).
+    """
+    q2 = query_to_pivots.astype(np.float64) ** 2
+    home_sq = np.take_along_axis(q2, home[:, None], axis=1)        # (n,1)
+    denom = 2.0 * pivd[home]                                       # (n, M)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        d = (q2 - home_sq) / denom
+    n = np.arange(home.shape[0])
+    d[n, home] = np.inf
+    return d.astype(np.float32)
+
+
+def ring_bounds(
+    dist_to_pivot: np.ndarray,
+    theta: np.ndarray,
+    t_s: SummaryTable,
+    s_part: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Theorem 2 interval per (query, S-partition) pair.
+
+    Candidates s ∈ P_j^S can matter for query q only if
+      max{L(P_j^S), |p_j,q| - θ} <= |p_j, s| <= min{U(P_j^S), |p_j,q| + θ}.
+
+    Parameters
+    ----------
+    dist_to_pivot: (n, M_s) |q, p_j|
+    theta:         (n,) per-query kNN radius bound
+    s_part:        partitions under consideration (column index space)
+    Returns (lo, hi) arrays of shape (n, len(s_part)).
+    """
+    lo = np.maximum(t_s.lower[s_part][None, :],
+                    dist_to_pivot[:, s_part] - theta[:, None])
+    hi = np.minimum(t_s.upper[s_part][None, :],
+                    dist_to_pivot[:, s_part] + theta[:, None])
+    return lo.astype(np.float32), hi.astype(np.float32)

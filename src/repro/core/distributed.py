@@ -1,0 +1,321 @@
+"""Distributed PGBJ execution with shard_map (the MapReduce mapping).
+
+Stage layout (DESIGN.md §2):
+
+  phase 1  (SPMD)  — every device assigns its R/S shard to pivots and
+                     computes partial summary tables; ``psum/pmin/pmax``
+                     merge them (the paper's job-1 map + stat merge).
+  planning (host)  — θ, LB, grouping, **capacity** from the cost model
+                     (Thm 7): the static shapes of the shuffle buffers.
+  phase 2a (SPMD)  — the shuffle: each device packs (group, slot)-addressed
+                     send buffers and a single ``all_to_all`` delivers every
+                     group's R rows and replicated S rows (paper's job-2
+                     map + shuffle).
+  phase 2b (SPMD)  — per-device reducer: blocked top-k join over the
+                     received buffers (paper's job-2 reduce), optionally via
+                     the Pallas kernel on TPU.
+
+Static-shape contract: MapReduce shuffles ragged lists; XLA cannot. The
+capacities are derived *before* the shuffle from LB/T_S — this is exactly
+the paper's replication cost model (Eq. 10) made load-bearing. Padding
+rows carry ``valid=False`` and are masked in the join.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .api import JoinPlan
+from .types import JoinResult, JoinStats
+
+__all__ = ["DistributedJoinSpec", "build_shuffle_spec", "distributed_knn_join"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedJoinSpec:
+    """Static shapes + host-computed routing for one distributed join."""
+
+    n_devices: int
+    cap_r_send: int   # max R rows any device sends to any group
+    cap_s_send: int   # max S replicas any device sends to any group
+    dim: int
+    k: int
+
+
+def _route_counts(dest: np.ndarray, n_src: int, n_dst: int,
+                  src_of_row: np.ndarray) -> int:
+    """Max rows on any (src → dst) edge (static capacity)."""
+    cnt = np.zeros((n_src, n_dst), np.int64)
+    np.add.at(cnt, (src_of_row, dest), 1)
+    return int(cnt.max())
+
+
+def build_shuffle_spec(plan: JoinPlan, n_devices: int) -> DistributedJoinSpec:
+    """Capacities from the plan (cost model, Thm 7) — no data touched."""
+    n_r = plan.r_part.shape[0]
+    n_s = plan.s_part.shape[0]
+    src_r = (np.arange(n_r) * n_devices) // max(n_r, 1)
+    g_r = plan.group_of_r()
+    cap_r = _route_counts(g_r, n_devices, plan.n_groups, src_r)
+    # S: replicated edges — count each (src, dst) with multiplicity
+    src_s = (np.arange(n_s) * n_devices) // max(n_s, 1)
+    ship = plan.s_dist[:, None] >= plan.lb_group[plan.s_part]  # (n_s, G)
+    cnt = np.zeros((n_devices, plan.n_groups), np.int64)
+    np.add.at(cnt, (np.repeat(src_s, plan.n_groups),
+                    np.tile(np.arange(plan.n_groups), n_s)), ship.ravel())
+    cap_s = int(cnt.max())
+    return DistributedJoinSpec(
+        n_devices=n_devices,
+        cap_r_send=max(1, cap_r),
+        cap_s_send=max(1, cap_s),
+        dim=plan.pivots.shape[1],
+        k=plan.config.k)
+
+
+def _pack_send_buffers(rows, aux, dest, src_of_row, n_src, n_dst, cap):
+    """Host-side packing: (n_src, n_dst, cap) buffers + validity.
+
+    ``dest`` may contain a row multiple times (S replication); callers
+    pre-expand. aux is a dict of per-row int/float arrays packed alongside.
+    """
+    nbuf = {k: np.zeros((n_src, n_dst, cap) + v.shape[1:], v.dtype)
+            for k, v in aux.items()}
+    buf = np.zeros((n_src, n_dst, cap, rows.shape[1]), rows.dtype)
+    valid = np.zeros((n_src, n_dst, cap), bool)
+    slot = np.zeros((n_src, n_dst), np.int64)
+    for i in range(rows.shape[0]):
+        s, d = src_of_row[i], dest[i]
+        j = slot[s, d]
+        if j >= cap:
+            raise AssertionError("capacity model violated — bug in Thm 7 path")
+        buf[s, d, j] = rows[i]
+        for k, v in aux.items():
+            nbuf[k][s, d, j] = v[i]
+        valid[s, d, j] = True
+        slot[s, d] = j + 1
+    return buf, nbuf, valid
+
+
+def _local_topk(d2: jnp.ndarray, ids: jnp.ndarray, k: int):
+    """(nq, ns) squared distances → ascending (nq, k) (dist², id)."""
+    neg, idx = jax.lax.top_k(-d2, k)
+    return -neg, jnp.take_along_axis(ids[None, :].repeat(d2.shape[0], 0), idx, 1)
+
+
+def _reducer_join(r_buf, r_valid, s_buf, s_valid, s_ids, k, tile_s,
+                  axis_names=()):
+    """Per-device blocked join: exact top-k of valid R rows over valid S."""
+    nq = r_buf.shape[0]
+    ns = s_buf.shape[0]
+    r2 = jnp.sum(r_buf * r_buf, axis=-1)
+    best_d = jnp.full((nq, k), jnp.inf, jnp.float32)
+    best_i = jnp.full((nq, k), -1, jnp.int32)
+    if axis_names:
+        # inside shard_map the scan carry must match the tiles' varying
+        # manual axes; fresh constants start unvarying
+        best_d = jax.lax.pvary(best_d, axis_names)
+        best_i = jax.lax.pvary(best_i, axis_names)
+
+    n_tiles = -(-ns // tile_s)
+    pad = n_tiles * tile_s - ns
+    s_pad = jnp.pad(s_buf, ((0, pad), (0, 0)))
+    sv_pad = jnp.pad(s_valid, (0, pad))
+    si_pad = jnp.pad(s_ids, (0, pad), constant_values=-1)
+
+    def body(carry, tile):
+        bd, bi = carry
+        st, sv, si = tile
+        d2 = (r2[:, None] + jnp.sum(st * st, axis=-1)[None, :]
+              - 2.0 * (r_buf @ st.T))
+        d2 = jnp.where(sv[None, :], jnp.maximum(d2, 0.0), jnp.inf)
+        td, ti = _local_topk(d2, si, min(k, tile_s))
+        cd = jnp.concatenate([bd, td], axis=1)
+        ci = jnp.concatenate([bi, ti], axis=1)
+        nd, sel = jax.lax.top_k(-cd, k)
+        return (-nd, jnp.take_along_axis(ci, sel, axis=1)), None
+
+    tiles = (s_pad.reshape(n_tiles, tile_s, -1),
+             sv_pad.reshape(n_tiles, tile_s),
+             si_pad.reshape(n_tiles, tile_s))
+    (best_d, best_i), _ = jax.lax.scan(body, (best_d, best_i), tiles)
+    best_d = jnp.where(r_valid[:, None], jnp.sqrt(best_d), jnp.inf)
+    best_i = jnp.where(r_valid[:, None], best_i, -1)
+    return best_d, best_i
+
+
+def distributed_knn_join(
+    r: np.ndarray,
+    s: np.ndarray,
+    plan: JoinPlan,
+    mesh: Mesh,
+    *,
+    axis: str | Tuple[str, ...] = "data",
+    tile_s: int = 512,
+) -> JoinResult:
+    """Execute job 2 as SPMD over ``mesh`` (one group per device along
+    ``axis``); phase-1/planning come in via ``plan``.
+
+    The shuffle is a genuine ``jax.lax.all_to_all`` on (n_dev, n_dev, cap)
+    send buffers; the reducers never see rows the bounds did not ship.
+    """
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+    if plan.n_groups != n_dev:
+        raise ValueError(
+            f"plan has {plan.n_groups} groups but mesh axis size is {n_dev}")
+    spec = build_shuffle_spec(plan, n_dev)
+    k = plan.config.k
+
+    # ---- host-side packing (the mapper emit; becomes device-side sort/
+    # scatter on a real pod — see DESIGN.md §2.1 ragged-shuffle note)
+    n_r, n_s = r.shape[0], s.shape[0]
+    src_r = (np.arange(n_r) * n_dev) // max(n_r, 1)
+    g_r = plan.group_of_r()
+    # int32 on device: x64 is disabled by default and |R|,|S| < 2^31 here
+    r_ids = np.arange(n_r, dtype=np.int32)
+    r_buf, r_aux, r_valid = _pack_send_buffers(
+        np.asarray(r, np.float32), {"id": r_ids},
+        g_r, src_r, n_dev, n_dev, spec.cap_r_send)
+
+    ship = plan.s_dist[:, None] >= plan.lb_group[plan.s_part]   # (n_s, G)
+    s_row, s_dst = np.nonzero(ship)
+    src_s = (s_row * n_dev) // max(n_s, 1)
+    s_ids = np.arange(n_s, dtype=np.int32)
+    s_buf, s_aux, s_valid = _pack_send_buffers(
+        np.asarray(s, np.float32)[s_row],
+        {"id": s_ids[s_row]},
+        s_dst, src_s, n_dev, n_dev, spec.cap_s_send)
+
+    stats = JoinStats(n_r=n_r, n_s=n_s)
+    stats.replicas_s = int(ship.sum())
+    stats.pivot_pairs_computed = (n_r + n_s) * plan.pivots.shape[0]
+    stats.pairs_computed = int(
+        (r_valid.sum(axis=(0, 2))[None, :]
+         * s_valid.sum(axis=(0, 2))[:, None]).trace())
+    stats.tiles_total = stats.tiles_visited = (
+        n_dev * (-(-(n_dev * spec.cap_s_send) // tile_s)))
+
+    pspec = P(axes if len(axes) > 1 else axes[0])
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(pspec,) * 6, out_specs=(pspec, pspec, pspec, pspec))
+    def job2(r_buf, r_valid, r_id, s_buf, s_valid, s_id):
+        # collapse the leading sharded axis (size 1 per device)
+        r_buf, r_valid, r_id = r_buf[0], r_valid[0], r_id[0]
+        s_buf, s_valid, s_id = s_buf[0], s_valid[0], s_id[0]
+        # ---- the shuffle: one all_to_all per payload
+        a2a = partial(jax.lax.all_to_all, axis_name=axes if len(axes) > 1
+                      else axes[0], split_axis=0, concat_axis=0, tiled=True)
+        r_buf, r_valid, r_id = a2a(r_buf), a2a(r_valid), a2a(r_id)
+        s_buf, s_valid, s_id = a2a(s_buf), a2a(s_valid), a2a(s_id)
+        # ---- the reducer: flatten received buffers, blocked top-k join
+        rb = r_buf.reshape(-1, r_buf.shape[-1])
+        rv = r_valid.reshape(-1)
+        ri = r_id.reshape(-1)
+        sb = s_buf.reshape(-1, s_buf.shape[-1])
+        sv = s_valid.reshape(-1)
+        si = s_id.reshape(-1)
+        bd, bi = _reducer_join(rb, rv, sb, sv, si, k, tile_s,
+                               axis_names=axes)
+        return (bd[None], bi[None], ri[None], rv[None])
+
+    with mesh:
+        sh = NamedSharding(mesh, pspec)
+        args = [jax.device_put(x, sh) for x in
+                (r_buf, r_valid, r_aux["id"], s_buf, s_valid, s_aux["id"])]
+        bd, bi, ri, rv = jax.jit(job2)(*args)
+
+    bd, bi, ri, rv = map(np.asarray, (bd, bi, ri, rv))
+    out_d = np.full((n_r, k), np.inf, np.float32)
+    out_i = np.full((n_r, k), -1, np.int64)
+    flat_v = rv.reshape(-1)
+    flat_r = ri.reshape(-1)[flat_v]
+    out_d[flat_r] = bd.reshape(-1, k)[flat_v]
+    out_i[flat_r] = bi.reshape(-1, k)[flat_v]
+    return JoinResult(indices=out_i, distances=out_d, stats=stats)
+
+
+# --------------------------------------------------------------- phase 1
+def distributed_phase1(
+    data: np.ndarray,
+    pivots: np.ndarray,
+    mesh: Mesh,
+    *,
+    k: int | None = None,
+    axis: str = "data",
+):
+    """SPMD job-1: every device assigns its shard and computes partial
+    summary tables; ``psum/pmin/pmax`` merge them (the paper's map-side
+    stats + merge-on-completion, DESIGN.md §2 table).
+
+    Returns (part_ids (n,), dists (n,), SummaryTable) — bit-identical to
+    the host `assign_and_summarize` (the merge operators are exact).
+    """
+    from .partition import build_summary
+    from .types import SummaryTable
+
+    n = data.shape[0]
+    n_dev = mesh.shape[axis]
+    m = pivots.shape[0]
+    pad = (-n) % n_dev
+    padded = np.pad(np.asarray(data, np.float32), ((0, pad), (0, 0)))
+    kk = 0 if k is None else k
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(axis), P()),
+             out_specs=(P(axis), P(axis), P(), P(), P(), P()),
+             check_vma=False)  # all_gather+sort output is replicated in
+                               # value; the static VMA check can't see it
+    def phase1(x, piv):
+        d2 = (jnp.sum(x * x, 1)[:, None] + jnp.sum(piv * piv, 1)[None, :]
+              - 2.0 * (x @ piv.T))
+        d2 = jnp.maximum(d2, 0.0)
+        pid = jnp.argmin(d2, axis=1).astype(jnp.int32)
+        dist = jnp.sqrt(jnp.take_along_axis(d2, pid[:, None], 1))[:, 0]
+        # padding rows: assign to partition 0 at +inf so they never alter
+        # mins/maxes or the top-k lists
+        row = jax.lax.axis_index(axis) * x.shape[0] + jnp.arange(x.shape[0])
+        valid = row < n
+        dist = jnp.where(valid, dist, jnp.inf)
+        pid = jnp.where(valid, pid, 0)
+        counts = jnp.zeros((m,), jnp.int32).at[pid].add(
+            valid.astype(jnp.int32))
+        lower = jnp.full((m,), jnp.inf, jnp.float32).at[pid].min(dist)
+        upper = jnp.zeros((m,), jnp.float32).at[pid].max(
+            jnp.where(valid, dist, 0.0))
+        counts = jax.lax.psum(counts, axis)
+        lower = jax.lax.pmin(lower, axis)
+        upper = jax.lax.pmax(upper, axis)
+        if kk:
+            # local k smallest per partition, then gather + global k smallest
+            order = jnp.lexsort((dist, pid))
+            sp, sd = pid[order], dist[order]
+            idx = jnp.arange(sp.shape[0])
+            seg = jnp.full((m,), sp.shape[0], jnp.int32).at[sp].min(
+                idx.astype(jnp.int32))
+            rank = idx - seg[sp]
+            keep = rank < kk
+            local = jnp.full((m, kk), jnp.inf, jnp.float32)
+            local = local.at[jnp.where(keep, sp, m - 1),
+                             jnp.where(keep, rank, kk - 1)].min(
+                                 jnp.where(keep, sd, jnp.inf))
+            gathered = jax.lax.all_gather(local, axis, axis=1)  # (m, ndev, k)
+            knn = jax.lax.sort(gathered.reshape(m, -1), dimension=1)[:, :kk]
+        else:
+            knn = jnp.zeros((m, 1), jnp.float32)
+        return (pid, jnp.where(valid, dist, 0.0), counts, lower, upper, knn)
+
+    with mesh:
+        pid, dist, counts, lower, upper, knn = phase1(
+            jnp.asarray(padded), jnp.asarray(pivots, jnp.float32))
+    table = SummaryTable(
+        counts=np.asarray(counts), lower=np.asarray(lower),
+        upper=np.asarray(upper),
+        knn_dists=np.asarray(knn) if kk else None)
+    return (np.asarray(pid)[:n], np.asarray(dist)[:n], table)

@@ -1,0 +1,54 @@
+"""Distance metrics for the join (paper §2.1: the methods apply to any
+metric with the triangle inequality — L2, L1 (Manhattan), L∞ (max)).
+
+The bounds (Theorems 3-6) use only true distances + triangle inequality,
+so they transfer unchanged. L2 keeps its MXU-friendly squared fast path;
+L1/L∞ run on the VPU path (elementwise |a-b| reductions).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+METRICS = ("l2", "l1", "linf")
+
+
+def pairwise_dist(a: np.ndarray, b: np.ndarray, metric: str = "l2",
+                  *, block: int = 2048) -> np.ndarray:
+    """True (non-squared) distances, shape (na, nb). Blocked over rows."""
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    if metric == "l2":
+        a2 = (a * a).sum(-1)[:, None]
+        b2 = (b * b).sum(-1)[None, :]
+        d2 = a2 + b2 - 2.0 * (a @ b.T)
+        return np.sqrt(np.maximum(d2, 0.0, out=d2))
+    out = np.empty((a.shape[0], b.shape[0]), np.float32)
+    for lo in range(0, a.shape[0], block):
+        hi = min(lo + block, a.shape[0])
+        diff = np.abs(a[lo:hi, None, :] - b[None, :, :])
+        out[lo:hi] = (diff.sum(-1) if metric == "l1"
+                      else diff.max(-1))
+    return out
+
+
+def cmp_dist(a: np.ndarray, b: np.ndarray, metric: str = "l2",
+             *, block: int = 2048) -> np.ndarray:
+    """Distances in *comparable* space (monotone in true distance):
+    squared for L2 (cheaper; no sqrt), true distance otherwise."""
+    if metric == "l2":
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        d2 = ((a * a).sum(-1)[:, None] + (b * b).sum(-1)[None, :]
+              - 2.0 * (a @ b.T))
+        return np.maximum(d2, 0.0, out=d2)
+    return pairwise_dist(a, b, metric, block=block)
+
+
+def from_cmp(d: np.ndarray, metric: str) -> np.ndarray:
+    """Comparable space → true distance."""
+    return np.sqrt(d) if metric == "l2" else d
+
+
+def to_cmp(d: np.ndarray, metric: str) -> np.ndarray:
+    """True distance → comparable space."""
+    return np.square(d) if metric == "l2" else d

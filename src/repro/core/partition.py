@@ -1,0 +1,123 @@
+"""Phase-1 of PGBJ: Voronoi assignment + summary tables (paper §4.2).
+
+This is the paper's first MapReduce job: each object of R ∪ S is mapped to
+its nearest pivot; per-partition statistics (count, L, U and — for S — the
+k smallest object→pivot distances) are aggregated into the summary tables
+T_R / T_S.
+
+The assignment hot-loop is also available as a Pallas TPU kernel
+(`repro.kernels.assign`); this module is the jnp reference path used by the
+single-host engine and by the distributed runtime on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pivots import pairwise_sqdist
+from .types import SummaryTable
+
+__all__ = ["assign_to_pivots", "build_summary", "assign_and_summarize"]
+
+
+@partial(jax.jit, static_argnames=("block",))
+def _assign_blocked(data: jnp.ndarray, pivots: jnp.ndarray, block: int = 4096):
+    """(part_id, dist) for every object, computed in row blocks.
+
+    Tie-break note: jnp.argmin picks the lowest pivot index on exact ties.
+    The paper breaks ties toward the smaller partition; ties have
+    probability ~0 on real-valued data and the join is correct under any
+    deterministic tie-break (the bounds only use the *assigned* distance).
+    """
+    n = data.shape[0]
+    pad = (-n) % block
+    padded = jnp.pad(data, ((0, pad), (0, 0)))
+
+    def body(chunk):
+        d2 = pairwise_sqdist(chunk, pivots)           # (block, M)
+        pid = jnp.argmin(d2, axis=1)
+        dist = jnp.sqrt(jnp.take_along_axis(d2, pid[:, None], axis=1))[:, 0]
+        return pid.astype(jnp.int32), dist
+
+    chunks = padded.reshape(-1, block, data.shape[1])
+    pids, dists = jax.lax.map(body, chunks)
+    return pids.reshape(-1)[:n], dists.reshape(-1)[:n]
+
+
+def assign_to_pivots(
+    data: np.ndarray, pivots: np.ndarray, *, block: int = 4096,
+    metric: str = "l2",
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Nearest-pivot assignment. Returns (part_ids (n,), dists (n,)).
+
+    L2 uses the jnp/MXU path; L1/L∞ use the blocked numpy VPU path
+    (paper §2.1 metric generality)."""
+    if data.shape[0] == 0:
+        return (np.zeros((0,), np.int32), np.zeros((0,), np.float32))
+    if metric == "l2":
+        pid, dist = _assign_blocked(jnp.asarray(data, jnp.float32),
+                                    jnp.asarray(pivots, jnp.float32),
+                                    block=block)
+        return np.asarray(pid), np.asarray(dist)
+    from .metrics import pairwise_dist
+    pid = np.empty((data.shape[0],), np.int32)
+    dist = np.empty((data.shape[0],), np.float32)
+    for lo in range(0, data.shape[0], block):
+        hi = min(lo + block, data.shape[0])
+        d = pairwise_dist(data[lo:hi], pivots, metric)
+        pid[lo:hi] = d.argmin(1)
+        dist[lo:hi] = d.min(1)
+    return pid, dist
+
+
+@partial(jax.jit, static_argnames=("m", "k"))
+def _summarize(part_ids: jnp.ndarray, dists: jnp.ndarray, *, m: int, k: int | None):
+    counts = jnp.zeros((m,), jnp.int32).at[part_ids].add(1)
+    lower = jnp.full((m,), jnp.inf, jnp.float32).at[part_ids].min(dists)
+    upper = jnp.zeros((m,), jnp.float32).at[part_ids].max(dists)
+    knn = None
+    if k is not None:
+        # k smallest |s, p_j| per partition: segmented top-k via sort.
+        # Sort by (partition, distance), then the first k entries of each
+        # partition segment are its k nearest-to-pivot objects.
+        order = jnp.lexsort((dists, part_ids))
+        sp, sd = part_ids[order], dists[order]
+        # rank within segment
+        idx = jnp.arange(sp.shape[0])
+        seg_start = jnp.full((m,), sp.shape[0], jnp.int32).at[sp].min(
+            idx.astype(jnp.int32))
+        rank = idx - seg_start[sp]
+        knn = jnp.full((m, k), jnp.inf, jnp.float32)
+        keep = rank < k
+        knn = knn.at[jnp.where(keep, sp, m - 1),
+                     jnp.where(keep, rank, k - 1)].min(
+                         jnp.where(keep, sd, jnp.inf))
+    return counts, lower, upper, knn
+
+
+def build_summary(
+    part_ids: np.ndarray, dists: np.ndarray, m: int, k: int | None = None
+) -> SummaryTable:
+    """Build T_R (k=None) or T_S (k=paper's k) from phase-1 output."""
+    counts, lower, upper, knn = _summarize(
+        jnp.asarray(part_ids), jnp.asarray(dists), m=m, k=k)
+    return SummaryTable(
+        counts=np.asarray(counts),
+        lower=np.asarray(lower),
+        upper=np.asarray(upper),
+        knn_dists=None if knn is None else np.asarray(knn),
+    )
+
+
+def assign_and_summarize(
+    data: np.ndarray, pivots: np.ndarray, *, k: int | None = None,
+    metric: str = "l2",
+) -> Tuple[np.ndarray, np.ndarray, SummaryTable]:
+    """Fused phase-1 for one dataset: (part_ids, dists, summary table)."""
+    part_ids, dists = assign_to_pivots(data, pivots, metric=metric)
+    table = build_summary(part_ids, dists, pivots.shape[0], k=k)
+    return part_ids, dists, table

@@ -1,0 +1,116 @@
+"""Shared types for the PGBJ kNN-join core.
+
+Conventions
+-----------
+* Datasets are dense float arrays of shape ``(n, dim)``.
+* ``M`` is the number of pivots; partitions are indexed ``0..M-1``.
+* All *bounds* (Theorems 1-6 of the paper) operate on true Euclidean
+  distances, never squared distances — the triangle inequality the paper
+  leans on does not survive squaring. Squared distances are used only
+  inside dense tile computations where monotonicity suffices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinConfig:
+    """Configuration of one kNN-join execution (paper §4-§5 knobs)."""
+
+    k: int = 10
+    metric: str = "l2"              # l2 | l1 | linf  (paper §2.1)
+    # §4.1 preprocessing
+    n_pivots: int = 64
+    pivot_strategy: str = "random"  # random | farthest | kmeans
+    pivot_sample: int = 4096        # sample size for farthest/kmeans selection
+    pivot_candidate_sets: int = 8   # T random sets for random selection
+    # §5 grouping
+    n_groups: int = 8
+    grouping: str = "geometric"     # geometric | greedy | none
+    # reducer engine
+    tile_r: int = 128               # R rows per distance tile
+    tile_s: int = 512               # S rows per distance tile
+    use_tile_pruning: bool = True   # Cor. 1 / Thm 2 adapted to tile masking
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.pivot_strategy not in ("random", "farthest", "kmeans"):
+            raise ValueError(f"unknown pivot strategy {self.pivot_strategy!r}")
+        if self.grouping not in ("geometric", "greedy", "none"):
+            raise ValueError(f"unknown grouping {self.grouping!r}")
+        if self.k < 1:
+            raise ValueError("k must be >= 1")
+        if self.metric not in ("l2", "l1", "linf"):
+            raise ValueError(f"unknown metric {self.metric!r}")
+
+
+@dataclasses.dataclass
+class SummaryTable:
+    """Per-partition statistics — the paper's summary tables T_R / T_S (§4.2).
+
+    Attributes
+    ----------
+    counts:    (M,) int32   — |P_i|
+    lower:     (M,) float32 — L(P_i) = min object->pivot distance (+inf if empty)
+    upper:     (M,) float32 — U(P_i) = max object->pivot distance (0 if empty)
+    knn_dists: (M, k) float32 or None — for T_S only: |p_i, o| of the k
+               objects of P_i^S nearest to p_i, ascending, padded with +inf.
+               (``p_i.d_j`` in the paper's Figure 3.)
+    """
+
+    counts: np.ndarray
+    lower: np.ndarray
+    upper: np.ndarray
+    knn_dists: Optional[np.ndarray] = None
+
+    @property
+    def n_partitions(self) -> int:
+        return int(self.counts.shape[0])
+
+
+@dataclasses.dataclass
+class JoinStats:
+    """Instrumentation mirroring the paper's reported metrics (§6)."""
+
+    n_r: int = 0
+    n_s: int = 0
+    # shuffling cost:  |R| + sum of replicas of S  (paper §3)
+    replicas_s: int = 0
+    # of object pairs whose distance was actually computed (Eq. 13 numerator)
+    pairs_computed: int = 0
+    # pivot-distance computations (included in selectivity per paper §6)
+    pivot_pairs_computed: int = 0
+    # tile bookkeeping for the TPU-adapted engine
+    tiles_total: int = 0
+    tiles_visited: int = 0
+
+    @property
+    def selectivity(self) -> float:
+        """Computation selectivity, Eq. 13 (pivot distances included)."""
+        denom = float(self.n_r) * float(self.n_s)
+        if denom == 0:
+            return 0.0
+        return (self.pairs_computed + self.pivot_pairs_computed) / denom
+
+    @property
+    def shuffle_tuples(self) -> int:
+        return self.n_r + self.replicas_s
+
+    @property
+    def tile_selectivity(self) -> float:
+        if self.tiles_total == 0:
+            return 0.0
+        return self.tiles_visited / self.tiles_total
+
+
+@dataclasses.dataclass
+class JoinResult:
+    """kNN-join output:  indices into S and distances, per object of R."""
+
+    indices: np.ndarray    # (|R|, k) int32 — row ids into S, by ascending distance
+    distances: np.ndarray  # (|R|, k) float32 — true (non-squared) distances
+    stats: JoinStats

@@ -1,0 +1,6 @@
+from .pipeline import (
+    DataConfig, batch_iterator, expand_dataset, forest_like, osm_like,
+    synthetic_lm_batch)
+
+__all__ = ["DataConfig", "batch_iterator", "expand_dataset", "forest_like",
+           "osm_like", "synthetic_lm_batch"]

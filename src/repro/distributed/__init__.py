@@ -1,0 +1,9 @@
+from .sharding import (
+    axis_rules, current_mesh, logical_to_pspec, param_logical_axes,
+    param_pspecs, param_shardings, shard)
+from .fault import GroupExecutor, GroupRun, grow_groups, regroup, shrink_groups
+
+__all__ = ["axis_rules", "current_mesh", "logical_to_pspec",
+           "param_logical_axes", "param_pspecs", "param_shardings", "shard",
+           "GroupExecutor", "GroupRun", "grow_groups", "regroup",
+           "shrink_groups"]

@@ -1,0 +1,170 @@
+"""Fault tolerance & straggler mitigation for the join runtime.
+
+MapReduce's resilience model — deterministic, idempotent tasks re-executed
+on failure — is the paper's implicit substrate (§2.2 JobTracker). Ported
+here explicitly:
+
+* ``GroupExecutor`` runs join groups as independent work units with
+  bounded retries; a group's output depends only on (plan, group id), so
+  re-execution is always safe.
+* Speculative execution: after ``speculate_after`` fraction of groups
+  finish, still-running groups are re-issued (first finisher wins) —
+  Hadoop's backup tasks. On a real pod the backup lands on an idle device;
+  here both run on host, and the *scheduling logic* is what's under test.
+* ``ElasticPlan`` regroups partitions when the device count changes:
+  scale-down merges groups (θ/LB stay valid — Thm 6 min over a superset is
+  still a lower bound); scale-up splits the most-loaded groups (bounds
+  recomputed per new group: cheap host work on T_R/T_S).
+
+Training-side fault tolerance lives in train/checkpoint.py (atomic save,
+elastic restore) and data/pipeline.py (stateless stream).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import group_lower_bounds
+from repro.core.api import JoinPlan
+
+
+@dataclasses.dataclass
+class GroupRun:
+    group: int
+    attempts: int = 0
+    done: bool = False
+    result: Any = None
+    seconds: float = 0.0
+    speculated: bool = False
+
+
+class GroupExecutor:
+    """Run per-group work with retries + speculative re-issue."""
+
+    def __init__(self, max_retries: int = 2, speculate: bool = True,
+                 speculate_after: float = 0.75, max_workers: int = 4):
+        self.max_retries = max_retries
+        self.speculate = speculate
+        self.speculate_after = speculate_after
+        self.max_workers = max_workers
+
+    def run(self, group_fn: Callable[[int], Any], groups: List[int],
+            ) -> Dict[int, GroupRun]:
+        runs = {g: GroupRun(group=g) for g in groups}
+
+        def attempt(g):
+            t0 = time.monotonic()
+            out = group_fn(g)
+            return g, out, time.monotonic() - t0
+
+        pool = ThreadPoolExecutor(max_workers=self.max_workers)
+        try:
+            fut_group = {pool.submit(attempt, g): g for g in groups}
+            pending = set(fut_group)
+            speculated = False
+            while pending:
+                if all(r.done for r in runs.values()):
+                    break   # stragglers' twins won; don't wait for losers
+                done, pending = wait(pending, return_when=FIRST_COMPLETED)
+                for fut in done:
+                    g = fut_group[fut]
+                    r = runs[g]
+                    r.attempts += 1
+                    if fut.exception() is not None:
+                        if r.done:
+                            continue  # a speculative twin already finished
+                        if r.attempts > self.max_retries:
+                            raise RuntimeError(
+                                f"group {g} failed after {r.attempts} attempts"
+                            ) from fut.exception()
+                        nf = pool.submit(attempt, g)
+                        fut_group[nf] = g
+                        pending.add(nf)
+                        continue
+                    _, out, secs = fut.result()
+                    if not r.done:
+                        r.done, r.result, r.seconds = True, out, secs
+                n_done = sum(r.done for r in runs.values())
+                if (self.speculate and not speculated
+                        and n_done >= self.speculate_after * len(groups)
+                        and n_done < len(groups)):
+                    speculated = True
+                    for g, r in runs.items():
+                        if not r.done:
+                            r.speculated = True
+                            nf = pool.submit(attempt, g)
+                            fut_group[nf] = g
+                            pending.add(nf)
+        finally:
+            pool.shutdown(wait=False, cancel_futures=True)
+        return runs
+
+    def run_with_retries(self, group_fn: Callable[[int], Any],
+                         groups: List[int]) -> Dict[int, GroupRun]:
+        """Retry loop around `run` for fault injection tests."""
+        runs: Dict[int, GroupRun] = {g: GroupRun(group=g) for g in groups}
+        remaining = list(groups)
+        for attempt_no in range(self.max_retries + 1):
+            failed = []
+            for g in remaining:
+                runs[g].attempts += 1
+                try:
+                    t0 = time.monotonic()
+                    runs[g].result = group_fn(g)
+                    runs[g].seconds = time.monotonic() - t0
+                    runs[g].done = True
+                except Exception:
+                    failed.append(g)
+            remaining = failed
+            if not remaining:
+                break
+        if remaining:
+            raise RuntimeError(
+                f"groups {remaining} failed after {self.max_retries + 1} attempts")
+        return runs
+
+
+# ----------------------------------------------------------- elasticity
+def shrink_groups(plan: JoinPlan, new_n: int) -> JoinPlan:
+    """Merge groups for a smaller device count (θ, LB stay valid)."""
+    old_n = plan.n_groups
+    assert new_n < old_n
+    mapping = np.arange(old_n) % new_n
+    groups = mapping[plan.groups]
+    lb_group = group_lower_bounds(plan.lb, groups, new_n)
+    return dataclasses.replace(plan, groups=groups.astype(np.int32),
+                               lb_group=lb_group)
+
+
+def grow_groups(plan: JoinPlan, new_n: int) -> JoinPlan:
+    """Split the most-populated groups for a larger device count."""
+    old_n = plan.n_groups
+    assert new_n > old_n
+    groups = plan.groups.copy().astype(np.int64)
+    counts = plan.t_r.counts.astype(np.int64)
+    next_id = old_n
+    while next_id < new_n:
+        load = np.zeros(next_id, np.int64)
+        np.add.at(load, groups, counts)
+        heavy = int(np.argmax(load))
+        members = np.where(groups == heavy)[0]
+        if members.size <= 1:
+            break  # cannot split single-partition groups further
+        # move the later half of its partitions (by pivot order) out
+        movers = members[members.size // 2:]
+        groups[movers] = next_id
+        next_id += 1
+    lb_group = group_lower_bounds(plan.lb, groups.astype(np.int32), next_id)
+    return dataclasses.replace(plan, groups=groups.astype(np.int32),
+                               lb_group=lb_group)
+
+
+def regroup(plan: JoinPlan, new_n: int) -> JoinPlan:
+    if new_n == plan.n_groups:
+        return plan
+    return shrink_groups(plan, new_n) if new_n < plan.n_groups \
+        else grow_groups(plan, new_n)

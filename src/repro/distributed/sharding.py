@@ -1,0 +1,199 @@
+"""Logical-axis sharding: one rules table maps param/activation logical
+axes onto mesh axes; models stay mesh-agnostic.
+
+- ``param_pspecs(params)`` derives PartitionSpecs from leaf *paths* (the
+  param naming convention is the contract — see _PARAM_RULES).
+- ``shard(x, *axes)`` constrains activations inside model code; it is a
+  no-op unless a rules context is active, so CPU unit tests never touch
+  mesh machinery.
+
+Default mapping (DESIGN.md §5):
+  batch  → ("pod", "data")   (pod absent on single-pod meshes)
+  model-parallel width (heads/ff/experts/vocab) → "model"
+  fsdp (parameter d_model / reduction dims)     → "data"  (ZeRO-3)
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _axes(mesh: Mesh) -> dict:
+    names = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in names) or (None,)
+    return {
+        "batch": batch if len(batch) > 1 else batch[0],
+        "fsdp": "data" if "data" in names else None,
+        "model": "model" if "model" in names else None,
+        None: None,
+    }
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]],
+                     mesh: Optional[Mesh] = None) -> P:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return P(*axes)
+    table = _axes(mesh)
+    return P(*(table.get(a, a) for a in axes))
+
+
+def shard(x, *axes):
+    """Constrain an activation to logical axes (no-op without rules)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_pspec(axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---- parameter specs ---------------------------------------------------
+# path regex → logical axes of the *trailing* dims (leading scan/stack
+# dims are padded with None automatically)
+_PARAM_RULES = [
+    (r"embed$", ("model", "fsdp")),               # (V, D) vocab-TP + FSDP
+    (r"pos_embed$", (None, "fsdp")),
+    (r"(q|up|gate|in|ffn_up|ffn_gate|q_rope)/w$", ("fsdp", "model")),
+    # GQA/MQA kv projections: sharding (kvh·dh) over more ways than there
+    # are kv heads splits heads mid-vector — XLA then all-reduces full f32
+    # attention logits (measured 1.7 TB/step on qwen3 prefill, §Perf iter 3).
+    # "kv" resolves to "model" only when kv heads divide the axis.
+    (r"(k|v)/w$", ("fsdp", "kv")),
+    (r"(o|down|out|ffn_down)/w$", ("model", "fsdp")),
+    (r"(dkv|k_rope)/w$", ("fsdp", None)),         # MLA latent projections
+    (r"(uk|uv)/w$", (None, "model")),
+    (r"router/w$", ("fsdp", None)),
+    (r"moe/(gate|up)$", ("model", "fsdp", None)),  # (E, D, F) expert-sharded
+    (r"moe/down$", ("model", None, "fsdp")),       # (E, F, D)
+    (r"(igate|fgate)/w$", (None, None)),
+    (r"r_[ifzo]$", (None, None, None)),   # (H, dh, dh): H is tiny, replicate
+    (r"conv/w$", (None, "model")),
+    (r"(w_a|b_a|w_x|b_x|lam)$", ("model",)),
+    (r"(scale|bias|f_bias|fgate_bias)$", (None,)),
+    (r"lm_head$", ("fsdp", "model")),              # (D, V)
+]
+
+
+def _spec_for_path(path: str, ndim: int) -> P:
+    for pat, axes in _PARAM_RULES:
+        if re.search(pat, path):
+            axes = tuple(axes)
+            if len(axes) > ndim:      # e.g. vector param matched a 2d rule
+                axes = axes[-ndim:]
+            pad = (None,) * (ndim - len(axes))
+            return tuple(pad) + axes
+    return (None,) * ndim
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def param_logical_axes(params: Any):
+    """Tree of logical-axis tuples matching the params tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: _spec_for_path(_path_str(p), x.ndim), params)
+
+
+def param_pspecs(params: Any, mesh: Mesh, *, mode: str = "train",
+                 kv_heads_divide: bool = True, fsdp_over_pod: bool = False):
+    """PartitionSpecs for a params (or optimizer-state) tree.
+
+    Shape-aware: a mesh axis that does not divide its dimension is dropped
+    (e.g. whisper's vocab 51865 on a 16-wide model axis stays replicated
+    rather than requiring padding).
+
+    mode="serve": inference keeps weights tensor-parallel only ("model")
+    and replicates across the data axis — ZeRO-style "fsdp" sharding would
+    re-all-gather every layer's weights on every decode step (measured:
+    the dominant collective term on qwen3-14b prefill, EXPERIMENTS.md
+    §Perf iter 2)."""
+    table = dict(_axes(mesh))
+    if fsdp_over_pod and "pod" in mesh.axis_names:
+        # ZeRO-3 across pods too: a 480B model's params/grads must shard
+        # over all 512 chips (crossing the DCI per layer gather) — the only
+        # way arctic-class training fits 16 GiB/chip (§Perf iter 7)
+        table["fsdp"] = ("pod", "data")
+    table["kv"] = "model" if kv_heads_divide else None
+    serve_table = dict(table)
+    serve_table["fsdp"] = None
+
+    def axis_size(a) -> int:
+        if a is None:
+            return 1
+        if isinstance(a, tuple):
+            n = 1
+            for x in a:
+                n *= mesh.shape[x]
+            return n
+        return mesh.shape[a]
+
+    # serve mode drops fsdp (TP-only weights, no per-layer gathers) EXCEPT
+    # for leaves that stay big after model-sharding — replicating arctic's
+    # expert stacks across the data axis would cost ~60 GiB/device.
+    # 128 MiB ≈ 1% of HBM: below it replication is free; above it, keeping
+    # the gathers is cheaper than the memory.
+    _SERVE_REPLICATION_BUDGET = 128 * 2**20
+
+    def _resolved_per_device_bytes(axes, leaf) -> float:
+        factor = 1
+        for dim, a in zip(leaf.shape, [table.get(x, x) for x in axes]):
+            if a and a != "data" and dim % axis_size(a) == 0:
+                factor *= axis_size(a)
+        return leaf.size * leaf.dtype.itemsize / max(factor, 1)
+
+    def to_pspec(axes, leaf):
+        use = table
+        if mode == "serve" and \
+                _resolved_per_device_bytes(axes, leaf) <= _SERVE_REPLICATION_BUDGET:
+            use = serve_table
+        mesh_axes = [use.get(a, a) for a in axes]
+        out = []
+        for dim, a in zip(leaf.shape, mesh_axes):
+            out.append(a if a and dim % axis_size(a) == 0 else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map(
+        to_pspec, param_logical_axes(params), params,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, (str, tuple)) for a in x))
+
+
+def param_shardings(params: Any, mesh: Mesh, *, mode: str = "train",
+                    kv_heads_divide: bool = True,
+                    fsdp_over_pod: bool = False):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_pspecs(params, mesh, mode=mode,
+                     kv_heads_divide=kv_heads_divide,
+                     fsdp_over_pod=fsdp_over_pod),
+        is_leaf=lambda x: isinstance(x, P))

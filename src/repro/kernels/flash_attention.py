@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: flash attention (forward) for the LM substrate.
+
+Used by the serving path (prefill) and available to training; the jnp
+reference path (ref.flash_attention_ref) is what the dry-run lowers, so
+kernels never block CPU compilation. Supports causal masking, GQA
+(kv_heads dividing q heads) and local windows (recurrentgemma).
+
+Grid: ``(batch*heads, q_tiles, kv_tiles)`` — online softmax statistics
+(running max m, normalizer l, accumulator acc) live in VMEM scratch across
+the kv (minor) dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .distance_topk import pl_scratch
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int | None,
+    bq: int, bk: int, nk_tiles: int, n_q: int, n_k: int,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # global positions; queries are right-aligned to the kv sequence
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + (n_k - n_q)
+    k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # tile-level skip: fully-masked tiles never touch the MXU
+    first_q = qi * bq + (n_k - n_q)
+    last_q = first_q + bq - 1
+    first_k, last_k = kj * bk, kj * bk + bk - 1
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant &= first_k <= last_q
+    if window is not None:
+        relevant &= last_k > first_q - window
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        mask = (k_pos < n_k) & (q_pos < n_k)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_scr[..., 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[..., 0] = l_scr[..., 0] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[..., 0] = m_new
+
+    @pl.when(kj == nk_tiles - 1)
+    def _flush():
+        l = l_scr[..., 0]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,   # (b, nq, h, d)
+    k: jnp.ndarray,   # (b, nk, kvh, d)
+    v: jnp.ndarray,   # (b, nk, kvh, d)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+):
+    b, nq, h, d = q.shape
+    _, nk, kvh, _ = k.shape
+    assert h % kvh == 0
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    nq_tiles = -(-nq // bq)
+    nk_tiles = -(-nk // bk)
+    # layout: (b*h, seq, d) with kv heads repeated logically via index_map
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, nq, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kvh, nk, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kvh, nk, d)
+    qr = jnp.pad(qr, ((0, 0), (0, nq_tiles * bq - nq), (0, 0)))
+    kr = jnp.pad(kr, ((0, 0), (0, nk_tiles * bk - nk), (0, 0)))
+    vr = jnp.pad(vr, ((0, 0), (0, nk_tiles * bk - nk), (0, 0)))
+    rep = h // kvh
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nk_tiles=nk_tiles, n_q=nq, n_k=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq_tiles, nk_tiles),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+            # kv head shared across `rep` q heads (GQA)
+            pl.BlockSpec((1, bk, d), lambda g, i, j, rep=rep: (g // rep, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, i, j, rep=rep: (g // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, nq_tiles * bq, d), q.dtype),
+        scratch_shapes=[
+            pl_scratch((bq, 1), jnp.float32),
+            pl_scratch((bq, 1), jnp.float32),
+            pl_scratch((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out[:, :nq].reshape(b, h, nq, d).transpose(0, 2, 1, 3)

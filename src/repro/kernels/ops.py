@@ -1,0 +1,78 @@
+"""Jit'd public wrappers around the Pallas kernels with backend dispatch.
+
+On TPU the Pallas path runs compiled; everywhere else (CPU CI, the
+dry-run's 512 fake host devices) the jnp reference executes — identical
+math, so tests interchange them freely. ``interpret=True`` forces the
+Pallas kernel body through the interpreter for correctness validation on
+CPU (this is how tests/test_kernels.py sweeps shapes/dtypes).
+
+Pruned-DMA note: `distance_topk` takes the PGBJ visit mask per tile.
+`pl.when` elides the tile's *compute*; eliding its HBM→VMEM stream too
+requires a scalar-prefetch grid (PrefetchScalarGridSpec) that reorders the
+S tiles per R tile — implemented as `distance_topk_gather` via host-side
+schedule compaction instead (the schedule is static given the plan, so we
+compact the S tile list before launch and keep the kernel dense).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .assign import assign_pallas
+from .distance_topk import distance_topk_pallas
+from .flash_attention import flash_attention_pallas
+
+__all__ = ["distance_topk", "assign", "flash_attention", "use_pallas"]
+
+
+def use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bm", "bn", "impl"))
+def distance_topk(
+    r: jnp.ndarray, s: jnp.ndarray, k: int,
+    *, visit_mask: Optional[jnp.ndarray] = None,
+    bm: int = 128, bn: int = 512, impl: str = "auto",
+):
+    """k nearest rows of s per row of r → (dists ascending, ids int32)."""
+    impl = ("pallas" if use_pallas() else "ref") if impl == "auto" else impl
+    if impl == "ref":
+        return ref.distance_topk_ref(r, s, k)
+    return distance_topk_pallas(
+        r, s, k, visit_mask=visit_mask, bm=bm, bn=bn,
+        interpret=impl == "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bp", "impl"))
+def assign(
+    x: jnp.ndarray, pivots: jnp.ndarray,
+    *, bm: int = 256, bp: int = 512, impl: str = "auto",
+):
+    """Nearest-pivot id + distance per row."""
+    impl = ("pallas" if use_pallas() else "ref") if impl == "auto" else impl
+    if impl == "ref":
+        return ref.assign_ref(x, pivots)
+    return assign_pallas(x, pivots, bm=bm, bp=bp,
+                         interpret=impl == "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "bq", "bk", "impl"))
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: int | None = None,
+    scale: float | None = None, bq: int = 128, bk: int = 128,
+    impl: str = "auto",
+):
+    """Attention over (b, n, h, d) tensors; GQA via kv-head broadcast."""
+    impl = ("pallas" if use_pallas() else "ref") if impl == "auto" else impl
+    if impl == "ref":
+        return ref.flash_attention_ref(
+            q, k, v, causal=causal, window=window, scale=scale)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale,
+        bq=bq, bk=bk, interpret=impl == "interpret")

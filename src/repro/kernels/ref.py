@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["distance_topk_ref", "assign_ref", "flash_attention_ref"]
+
+
+def distance_topk_ref(r: jnp.ndarray, s: jnp.ndarray, k: int):
+    """Exact k smallest L2 distances of each r row over s rows.
+
+    Returns (dists (nr, k) ascending true distances, ids (nr, k) int32).
+    """
+    r = r.astype(jnp.float32)
+    s = s.astype(jnp.float32)
+    d2 = (jnp.sum(r * r, 1)[:, None] + jnp.sum(s * s, 1)[None, :]
+          - 2.0 * (r @ s.T))
+    d2 = jnp.maximum(d2, 0.0)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return jnp.sqrt(-neg), idx.astype(jnp.int32)
+
+
+def assign_ref(x: jnp.ndarray, pivots: jnp.ndarray):
+    """Nearest pivot per row: (part_id int32, true distance f32)."""
+    x = x.astype(jnp.float32)
+    p = pivots.astype(jnp.float32)
+    d2 = (jnp.sum(x * x, 1)[:, None] + jnp.sum(p * p, 1)[None, :]
+          - 2.0 * (x @ p.T))
+    d2 = jnp.maximum(d2, 0.0)
+    pid = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return pid, jnp.sqrt(jnp.take_along_axis(d2, pid[:, None], 1))[:, 0]
+
+
+def flash_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    *, causal: bool = True, window: int | None = None,
+    scale: float | None = None,
+):
+    """Reference attention. q (b, nq, h, d); k/v (b, nk, kvh, d).
+
+    GQA: h must be a multiple of kvh; kv heads are repeated.
+    ``window``: local attention — query i sees keys in (i-window, i].
+    """
+    b, nq, h, d = q.shape
+    _, nk, kvh, _ = k.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    rep = h // kvh
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qi = jnp.arange(nq)[:, None] + (nk - nq)   # align to right edge (decode)
+    ki = jnp.arange(nk)[None, :]
+    mask = jnp.ones((nq, nk), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out

@@ -1,0 +1,327 @@
+"""Post-SPMD HLO cost accounting with while-loop trip-count scaling.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a scan over
+88 layers × 16 accumulation steps under-reports flops/collective bytes by
+~3 orders of magnitude. This walks the HLO call graph instead:
+
+  total(comp) = Σ own ops + Σ fusion/call children + trip_count × while body
+
+Trip counts come from XLA's own loop analysis (``known_trip_count`` in the
+while op's backend_config — present for all lax.scan/fori lowered loops).
+
+Accounting rules (per device — the module is already partitioned):
+  flops       — dot ops: 2 · |result| · |contraction dims|
+  hbm bytes   — fusion/dot/collective/copy/DUS/gather ops: operands+result
+                (assumes each fused region reads inputs / writes outputs
+                once — the standard roofline approximation)
+  collectives — result-shape bytes per op kind, trip-scaled
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(text: str) -> int:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class OpRecord:
+    kind: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Optional[Tuple[str, float]] = None
+    calls: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class CompTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def cpu_bf16_convert_staging_bytes(hlo: str, min_bytes: int = 1 << 28) -> int:
+    """Bytes of bulk bf16→f32 staging buffers XLA-CPU inserts because its
+    dot kernels take f32 operands. A TPU feeds bf16 to the MXU directly, so
+    these buffers don't exist on the target — the dry-run reports peak both
+    raw and with this artifact removed (EXPERIMENTS.md §Dry-run).
+
+    Detection: top-level convert ops (or convert-only fusions — XLA names
+    them `wrapped_convert*`) producing an f32 tensor ≥ min_bytes."""
+    total = 0
+    seen_shapes = set()
+    for line in hlo.splitlines():
+        m = re.match(
+            r"\s*(?:ROOT\s+)?%([\w.\-]*convert[\w.\-]*)\s*=\s*"
+            r"(f32\[[0-9,]+\])[^=]*\b(?:convert|fusion)\(", line)
+        if not m:
+            continue
+        shape = m.group(2)
+        if shape in seen_shapes:
+            continue  # same-shape converts share one reused allocation
+        nb = _shape_bytes(shape)
+        if nb >= min_bytes:
+            seen_shapes.add(shape)
+            total += nb
+    return total
+
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_KIND_RE = re.compile(r"^((?:\([^)]*\)|\S+?))\s+([\w\-]+)\(")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+# ops whose operand/result traffic counts toward HBM bytes
+_MEM_OPS = {"fusion", "dot", "copy", "dynamic-update-slice", "dynamic-slice",
+            "gather", "scatter", "convolution", "transpose", "reshape",
+            "broadcast", "iota", "reduce", "sort", "concatenate", "pad",
+            "select-and-scatter", "custom-call"}
+# cheap ops fused on TPU; standalone on CPU-HLO — counting them would
+# overstate HBM traffic badly, so only count when they stand alone AND are
+# "large" (heuristic threshold below)
+_LIGHT_OPS = {"transpose", "reshape", "broadcast", "iota", "pad",
+              "concatenate"}
+
+
+def parse_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.rstrip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{", s)
+        if header and not s.startswith(" "):
+            cur = header.group(1)
+            comps[cur] = []
+            if s.strip().startswith("ENTRY"):
+                comps["__entry__"] = comps[cur]
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and "=" in s:
+            comps[cur].append(s.strip())
+    return comps
+
+
+def _operands(rest: str) -> List[str]:
+    """Names referenced inside the op's first balanced paren group."""
+    start = rest.find("(")
+    if start < 0:
+        return []
+    depth, i = 0, start
+    for i in range(start, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    inner = rest[start + 1:i]
+    return re.findall(r"%([\w.\-]+)", inner)
+
+
+def analyze(hlo: str) -> CompTotals:
+    comps = parse_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # per-computation result-shape map (for operand shape resolution)
+    shapes: Dict[str, Dict[str, str]] = {}
+    for cname, lines in comps.items():
+        if cname == "__entry__":
+            continue
+        m: Dict[str, str] = {}
+        for ln in lines:
+            om = _OP_RE.match(ln)
+            if om:
+                rest = om.group(2)
+                km = _KIND_RE.match(rest)
+                m[om.group(1)] = km.group(1) if km else rest.split()[0]
+        shapes[cname] = m
+
+    memo: Dict[str, CompTotals] = {}
+    body_bytes_memo: Dict[str, float] = {}
+    _SLICERS = ("dynamic-slice", "gather", "slice")
+
+    def fusion_body_bytes(cname: str) -> float:
+        """Operand traffic of one fusion execution, resolved inside the
+        body: a parameter consumed only by slice-like ops contributes its
+        *slice* bytes, not its full (possibly layer-stacked) size."""
+        if cname in body_bytes_memo:
+            return body_bytes_memo[cname]
+        lines = comps.get(cname, [])
+        smap = shapes.get(cname, {})
+        params: Dict[str, str] = {}
+        for ln in lines:
+            om = _OP_RE.match(ln)
+            if om and " parameter(" in om.group(2):
+                km = _KIND_RE.match(om.group(2))
+                params[om.group(1)] = km.group(1) if km else ""
+        total = 0.0
+        for pname, pshape in params.items():
+            ref = re.compile(r"%" + re.escape(pname) + r"\b")
+            consumers = []
+            for ln in lines:
+                om = _OP_RE.match(ln)
+                if not om or om.group(1) == pname:
+                    continue
+                if ref.search(om.group(2)):
+                    km = _KIND_RE.match(om.group(2))
+                    if km:
+                        consumers.append((km.group(2), km.group(1)))
+            if consumers and all(k in _SLICERS for k, _ in consumers):
+                total += sum(_shape_bytes(rs) for _, rs in consumers)
+            else:
+                total += _shape_bytes(pshape)
+        body_bytes_memo[cname] = total
+        return total
+
+    def visit(cname: str) -> CompTotals:
+        if cname in memo:
+            return memo[cname]
+        total = CompTotals()
+        memo[cname] = total
+        smap = shapes.get(cname, {})
+        for ln in comps.get(cname, []):
+            om = _OP_RE.match(ln)
+            if not om:
+                continue
+            rest = om.group(2)
+            km = _KIND_RE.match(rest)
+            if not km:
+                continue
+            rshape, kind = km.group(1), km.group(2)
+
+            if kind == "while":
+                trip = 1.0
+                tm = _TRIP_RE.search(rest)
+                if tm:
+                    trip = float(tm.group(1))
+                bm = _CALLS_RE.search(rest)
+                if bm:
+                    sub = visit(bm.group(1))
+                    total.flops += trip * sub.flops
+                    total.bytes += trip * sub.bytes
+                    for k, v in sub.coll.items():
+                        total.coll[k] = total.coll.get(k, 0) + trip * v
+                continue
+            if kind == "conditional":
+                bm = _BRANCHES_RE.search(rest)
+                if bm:
+                    subs = [visit(b.strip().lstrip("%"))
+                            for b in bm.group(1).split(",")]
+                    # worst-case branch
+                    best = max(subs, key=lambda s: s.flops + s.bytes,
+                               default=None)
+                    if best:
+                        total.flops += best.flops
+                        total.bytes += best.bytes
+                        for k, v in best.coll.items():
+                            total.coll[k] = total.coll.get(k, 0) + v
+                continue
+            if kind in ("fusion", "call", "async-start"):
+                bm = _CALLS_RE.search(rest)
+                body = bm.group(1) if bm and bm.group(1) in comps else None
+                if body is not None:
+                    sub = visit(body)
+                    total.flops += sub.flops
+                    for k, v in sub.coll.items():
+                        total.coll[k] = total.coll.get(k, 0) + v
+                if kind == "fusion" and body is not None:
+                    # operand traffic resolved inside the body: slice-only
+                    # parameters (scan weight indexing) count slice bytes
+                    total.bytes += _shape_bytes(rshape) \
+                        + fusion_body_bytes(body)
+                else:
+                    total.bytes += _shape_bytes(rshape) + sum(
+                        _shape_bytes(smap.get(o, ""))
+                        for o in _operands(rest))
+                continue
+
+            base = kind.replace("-start", "")
+            if base in _COLL_KINDS:
+                nb = _shape_bytes(rshape)
+                total.coll[base] = total.coll.get(base, 0) + nb
+                total.bytes += nb + sum(_shape_bytes(smap.get(o, ""))
+                                        for o in _operands(rest))
+                continue
+            if kind == "dot":
+                out_elems = _shape_elems(rshape)
+                contract = 1
+                cm = _CONTRACT_RE.search(rest)
+                ops = _operands(rest)
+                if cm and ops:
+                    lhs_shape = smap.get(ops[0], "")
+                    sm = _SHAPE_RE.search(lhs_shape)
+                    if sm:
+                        dims = [int(d) for d in sm.group(2).split(",") if d]
+                        for idx in cm.group(1).split(","):
+                            if idx and int(idx) < len(dims):
+                                contract *= dims[int(idx)]
+                total.flops += 2.0 * out_elems * contract
+                total.bytes += _shape_bytes(rshape) + sum(
+                    _shape_bytes(smap.get(o, "")) for o in ops)
+                continue
+            if kind in ("dynamic-slice", "gather", "slice"):
+                # reads only the sliced region — counting the full operand
+                # inflates scan weight-indexing by the layer count
+                # (observed 100× on granite-34b train)
+                total.bytes += 2.0 * _shape_bytes(rshape)
+                continue
+            if kind == "dynamic-update-slice":
+                # in-place update: read+write of the updated region only;
+                # the region size is the update operand (second operand)
+                ops = _operands(rest)
+                upd = _shape_bytes(smap.get(ops[1], "")) if len(ops) > 1 \
+                    else _shape_bytes(rshape)
+                total.bytes += 2.0 * upd
+                continue
+            if kind in _MEM_OPS:
+                nb = _shape_bytes(rshape)
+                if kind in _LIGHT_OPS and nb < (1 << 20):
+                    continue
+                total.bytes += nb + sum(_shape_bytes(smap.get(o, ""))
+                                        for o in _operands(rest))
+        return total
+
+    # find the entry computation's real name
+    for cname, lines in comps.items():
+        if cname != "__entry__" and lines is entry:
+            return visit(cname)
+    raise ValueError("entry not resolved")

@@ -1,0 +1,237 @@
+"""Per-(arch × shape) step builders + ShapeDtypeStruct input specs.
+
+``build_cell`` returns everything the dry-run (and a real launch) needs:
+the step function, abstract inputs, and input shardings — no allocation
+(weak-type-correct ShapeDtypeStructs throughout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
+from repro.distributed.sharding import (
+    axis_rules, param_shardings, logical_to_pspec)
+from repro.models import ModelOptions, forward, init_cache, init_params
+from repro.train import OptConfig, TrainConfig, make_train_step
+
+# archs whose AdamW state cannot fit one pod (12 B/param > HBM) use
+# adafactor + bf16 grad accumulation — recorded in EXPERIMENTS.md §Dry-run
+_ADAFACTOR_ABOVE = 100e9
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: ArchConfig
+    shape: ShapeConfig
+    opts: ModelOptions
+    step_fn: Any                 # jit-able python callable
+    abstract_args: Tuple         # ShapeDtypeStructs, positional
+    in_shardings: Tuple
+    kind: str                    # train | prefill | decode
+    notes: str = ""
+
+
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def model_options(arch: ArchConfig, shape: ShapeConfig) -> ModelOptions:
+    return ModelOptions(
+        dtype=jnp.bfloat16,
+        remat=shape.kind == "train",
+        chunk_q=2048,
+        max_abs_pos=max(4096, shape.seq_len + shape.cache_len + 1),
+        readonly_cache=shape.kind == "decode",
+    )
+
+
+def abstract_params(arch: ArchConfig, opts: ModelOptions):
+    return jax.eval_shape(
+        lambda k: init_params(arch, k, opts), jax.random.PRNGKey(0))
+
+
+def _kv_divides(arch: ArchConfig, mesh: Mesh) -> bool:
+    tp = mesh.shape.get("model", 1)
+    return arch.n_kv_heads % tp == 0
+
+
+def _extras_specs(arch: ArchConfig, lead: Tuple[int, ...], seq: int,
+                  batch_axes, *, for_train: bool):
+    """(avals, shardings-spec) for enc_frames / vision / mrope positions."""
+    av: Dict[str, Any] = {}
+    sp: Dict[str, Any] = {}
+    nb = len(lead)
+    bspec = (None,) * (nb - 1) + (batch_axes,)
+    if arch.n_enc_layers:
+        av["enc_frames"] = _sds(lead + (arch.enc_len, arch.d_model),
+                                jnp.bfloat16)
+        sp["enc_frames"] = P(*bspec, None, None)
+    if arch.rope == "mrope":
+        # (…, 3, B, T) positions; scanned micro-axis leads in train mode
+        if for_train:
+            av["positions"] = _sds((lead[0], 3, lead[1], seq), jnp.int32)
+            sp["positions"] = P(None, None, batch_axes, None)
+        else:
+            av["positions"] = _sds((3,) + lead + (seq,), jnp.int32)
+            sp["positions"] = P(None, batch_axes, None)
+        av["vision_embeds"] = _sds(lead + (arch.n_vision_embeds,
+                                           arch.d_model), jnp.bfloat16)
+        sp["vision_embeds"] = P(*bspec, None, None)
+    return av, sp
+
+
+def build_train_cell(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh
+                     ) -> Cell:
+    opts = model_options(arch, shape)
+    baxes = _batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in baxes]))
+    mb_global = nb                      # 1 sequence per data replica
+    accum = max(1, shape.global_batch // mb_global)
+    big = arch.param_count() > _ADAFACTOR_ABOVE
+    tcfg = TrainConfig(
+        opt=OptConfig(name="adafactor" if big else "adamw"),
+        accum=accum,
+        accum_dtype=jnp.bfloat16 if big else jnp.float32)
+    opt_init, train_step = make_train_step(arch, tcfg, opts)
+
+    params_av = abstract_params(arch, opts)
+    opt_av = jax.eval_shape(opt_init, params_av)
+    lead = (accum, mb_global)
+    batch_av = {
+        "tokens": _sds(lead + (shape.seq_len,), jnp.int32),
+        "labels": _sds(lead + (shape.seq_len,), jnp.int32),
+    }
+    batch_sp = {
+        "tokens": P(None, baxes, None),
+        "labels": P(None, baxes, None),
+    }
+    eav, esp = _extras_specs(arch, lead, shape.seq_len, baxes, for_train=True)
+    batch_av.update(eav)
+    batch_sp.update(esp)
+
+    kvd = _kv_divides(arch, mesh)
+    p_sh = param_shardings(params_av, mesh, kv_heads_divide=kvd,
+                           fsdp_over_pod=big)
+    o_sh = param_shardings(opt_av, mesh, kv_heads_divide=kvd,
+                           fsdp_over_pod=big)
+    b_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), batch_sp,
+        is_leaf=lambda x: isinstance(x, P))
+
+    def step(params, opt_state, batch):
+        with axis_rules(mesh):
+            return train_step(params, opt_state, batch)
+
+    notes = f"accum={accum} mb={mb_global} opt={tcfg.opt.name}"
+    return Cell(arch, shape, opts, step,
+                (params_av, opt_av, batch_av), (p_sh, o_sh, b_sh),
+                "train", notes)
+
+
+def build_prefill_cell(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh
+                       ) -> Cell:
+    opts = model_options(arch, shape)
+    baxes = _batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in baxes]))
+    b = shape.global_batch
+    bspec = baxes if b % max(nb, 1) == 0 and b >= nb else None
+    lead = (b,)
+    tokens_av = _sds(lead + (shape.seq_len,), jnp.int32)
+    params_av = abstract_params(arch, opts)
+    eav, esp = _extras_specs(arch, lead, shape.seq_len, bspec,
+                             for_train=False)
+
+    def step(params, tokens, extras):
+        with axis_rules(mesh):
+            logits, _ = forward(params, arch, tokens, opts=opts,
+                                mode="prefill", **extras)
+            return logits[:, -1]       # serving returns last-position logits
+
+    p_sh = param_shardings(params_av, mesh, mode="serve",
+                           kv_heads_divide=_kv_divides(arch, mesh))
+    t_sh = NamedSharding(mesh, P(bspec, None))
+    e_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), esp,
+        is_leaf=lambda x: isinstance(x, P))
+    return Cell(arch, shape, opts, step, (params_av, tokens_av, eav),
+                (p_sh, t_sh, e_sh), "prefill", f"B={b} T={shape.seq_len}")
+
+
+def _cache_pspec(path_str: str, leaf, baxes) -> P:
+    """Sharding for decode caches: batch on batch axes; the *length* dim of
+    big attention caches on "model" (the serving layout the readonly path
+    assumes); small/recurrent state replicated across model."""
+    nd = leaf.ndim
+    if nd == 0:
+        return P()
+    big = any(s in path_str for s in ("/k", "/v", "ckv", "k_rope"))
+    ring = "local" in path_str
+    spec = [None] * nd
+    # leading axis is the scan stack (reps); batch is axis 1
+    if nd >= 2:
+        spec[1] = baxes
+    if big and not ring and nd >= 3 and leaf.shape[2] % 16 == 0:
+        spec[2] = "model"
+    return P(*spec)
+
+
+def build_decode_cell(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh
+                      ) -> Cell:
+    opts = model_options(arch, shape)
+    baxes = _batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in baxes]))
+    b = shape.global_batch
+    bspec = baxes if b % max(nb, 1) == 0 and b >= nb else None
+    params_av = abstract_params(arch, opts)
+    cache_av = jax.eval_shape(
+        lambda: init_cache(arch, b, shape.cache_len, opts))
+    # decode enters with a full cache (pos = cache_len - 1 headroom)
+    token_av = _sds((b, 1), jnp.int32)
+    eav, esp = _extras_specs(arch, (b,), 1, bspec, for_train=False)
+    eav.pop("vision_embeds", None)  # vision merged at prefill only
+    esp.pop("vision_embeds", None)
+
+    def step(params, token, cache, extras):
+        with axis_rules(mesh):
+            logits, new_cache = forward(
+                params, arch, token, cache=cache, opts=opts,
+                mode="decode", **extras)
+            return logits[:, -1], new_cache
+
+    p_sh = param_shardings(params_av, mesh, mode="serve",
+                           kv_heads_divide=_kv_divides(arch, mesh))
+    t_sh = NamedSharding(mesh, P(bspec, None))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_av)
+    c_sh = jax.tree_util.tree_unflatten(treedef, [
+        NamedSharding(mesh, _cache_pspec(
+            "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                     for e in path), leaf, bspec))
+        for path, leaf in flat])
+    e_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), esp,
+        is_leaf=lambda x: isinstance(x, P))
+    return Cell(arch, shape, opts, step,
+                (params_av, token_av, cache_av, eav),
+                (p_sh, t_sh, c_sh, e_sh), "decode",
+                f"B={b} C={shape.cache_len} readonly")
+
+
+def build_cell(arch: ArchConfig, shape_name: str, mesh: Mesh) -> Cell:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_cell(arch, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_cell(arch, shape, mesh)
+    return build_decode_cell(arch, shape, mesh)

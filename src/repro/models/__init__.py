@@ -1,0 +1,6 @@
+"""LM substrate: composable model definitions for the assigned archs."""
+from .model import (
+    ModelOptions, count_params, encode, forward, init_cache, init_params)
+
+__all__ = ["ModelOptions", "count_params", "encode", "forward",
+           "init_cache", "init_params"]

@@ -1,0 +1,182 @@
+"""Transformer/recurrent blocks — one (init, apply) pair per layer kind.
+
+Every block is pre-norm residual. ``apply`` returns (x, new_cache); cache
+pytrees are kind-specific and stacked along the scan axis by model.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ArchConfig, ATTN, ATTN_BIDIR, LOCAL, MLSTM, RGLRU, SLSTM, XATTN)
+from repro.distributed.sharding import shard
+from . import recurrent as R
+from .layers import (
+    attn_apply, attn_init, apply_norm, dense, mla_apply, mla_init,
+    mlp_apply, mlp_init, norm_init)
+from .moe import moe_apply, moe_init
+
+Params = Dict[str, Any]
+
+
+def _ffn_init(key, cfg: ArchConfig, dtype, *, dense_ff: int = 0):
+    """MoE or dense FFN depending on the arch (dense_ff overrides MoE)."""
+    if cfg.moe is not None and not dense_ff:
+        return {"moe": moe_init(key, cfg, dtype)}
+    return {"mlp": mlp_init(key, cfg, dense_ff or cfg.d_ff, dtype)}
+
+
+def _ffn_apply(p: Params, x, cfg: ArchConfig):
+    if "moe" in p:
+        return moe_apply(p["moe"], x, cfg)
+    return mlp_apply(p["mlp"], x, cfg.act)
+
+
+def block_init(kind: str, key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 4)
+    base = kind.replace("_dense", "")
+    dense_ff = (cfg.moe.first_dense_ff
+                if (cfg.moe and kind.endswith("_dense")) else 0)
+    if base in (ATTN, ATTN_BIDIR, LOCAL):
+        attn = (mla_init(ks[0], cfg, dtype) if cfg.mla is not None
+                else attn_init(ks[0], cfg, dtype))
+        return {
+            "norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+            "attn": attn,
+            "norm2": norm_init(cfg.d_model, cfg.norm, dtype),
+            **_ffn_init(ks[1], cfg, dtype, dense_ff=dense_ff),
+        }
+    if base == XATTN:
+        return {
+            "norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+            "attn": attn_init(ks[0], cfg, dtype),
+            "normx": norm_init(cfg.d_model, cfg.norm, dtype),
+            "xattn": attn_init(ks[1], cfg, dtype),
+            "norm2": norm_init(cfg.d_model, cfg.norm, dtype),
+            **_ffn_init(ks[2], cfg, dtype, dense_ff=dense_ff),
+        }
+    if base == RGLRU:
+        return {
+            "norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+            "rnn": R.rglru_block_init(ks[0], cfg, dtype),
+            "norm2": norm_init(cfg.d_model, cfg.norm, dtype),
+            **_ffn_init(ks[1], cfg, dtype, dense_ff=dense_ff),
+        }
+    if base == MLSTM:
+        return {"norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+                "cell": R.mlstm_block_init(ks[0], cfg, dtype)}
+    if base == SLSTM:
+        return {"norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+                "cell": R.slstm_block_init(ks[0], cfg, dtype)}
+    raise ValueError(kind)
+
+
+def block_apply(
+    kind: str,
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    *,
+    positions: jnp.ndarray,
+    cache: Optional[Params] = None,
+    enc_out: Optional[jnp.ndarray] = None,
+    chunk_q: int = 0,
+    readonly: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    base = kind.replace("_dense", "")
+    new_cache: Optional[Params] = None
+    if base in (ATTN, ATTN_BIDIR, LOCAL):
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        if cfg.mla is not None:
+            a, new_cache = mla_apply(
+                p["attn"], h, cfg, positions=positions, cache=cache,
+                chunk_q=chunk_q, readonly=readonly)
+        else:
+            a, new_cache = attn_apply(
+                p["attn"], h, cfg, positions=positions,
+                causal=base != ATTN_BIDIR,
+                window=cfg.local_window if base == LOCAL else None,
+                cache=cache, chunk_q=chunk_q, readonly=readonly)
+        x = x + a
+        x = shard(x, "batch", None, None)
+        x = x + _ffn_apply(p, apply_norm(p["norm2"], x, cfg.norm), cfg)
+        x = shard(x, "batch", None, None)
+        return x, new_cache
+    if base == XATTN:
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        self_cache = None if cache is None else cache.get("self")
+        a, new_self = attn_apply(
+            p["attn"], h, cfg, positions=positions, causal=True,
+            cache=self_cache, chunk_q=chunk_q, readonly=readonly)
+        x = x + a
+        hx = apply_norm(p["normx"], x, cfg.norm)
+        if enc_out is None and cache is not None and "xk" in cache:
+            # decode without the encoder: reuse prefill's projected enc kv
+            xk, xv = cache["xk"], cache["xv"]
+        else:
+            b = x.shape[0]
+            kvh, dh = cfg.n_kv_heads, cfg.dh
+            xk = dense(p["xattn"]["k"], enc_out).reshape(b, -1, kvh, dh)
+            xv = dense(p["xattn"]["v"], enc_out).reshape(b, -1, kvh, dh)
+        xa, _ = attn_apply(
+            p["xattn"], hx, cfg, positions=positions, xattn_kv=(xk, xv))
+        x = x + xa
+        x = x + _ffn_apply(p, apply_norm(p["norm2"], x, cfg.norm), cfg)
+        if cache is not None or new_self is not None:
+            new_cache = {"self": new_self, "xk": xk, "xv": xv}
+        return x, new_cache
+    if base == RGLRU:
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        a, new_cache = R.rglru_block_apply(p["rnn"], h, cfg, state=cache)
+        x = x + a
+        x = x + _ffn_apply(p, apply_norm(p["norm2"], x, cfg.norm), cfg)
+        return x, new_cache
+    if base == MLSTM:
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        a, new_cache = R.mlstm_block_apply(p["cell"], h, cfg, state=cache)
+        return x + a, new_cache
+    if base == SLSTM:
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        a, new_cache = R.slstm_block_apply(p["cell"], h, cfg, state=cache)
+        return x + a, new_cache
+    raise ValueError(kind)
+
+
+def init_block_cache(kind: str, cfg: ArchConfig, batch: int, cache_len: int,
+                     dtype) -> Optional[Params]:
+    """Decode-time cache pytree for one layer of this kind."""
+    base = kind.replace("_dense", "")
+    kvh, dh = cfg.n_kv_heads, cfg.dh
+    if base in (ATTN, ATTN_BIDIR):
+        if cfg.mla is not None:
+            c = cfg.mla
+            return {"ckv": jnp.zeros((batch, cache_len, c.kv_lora_rank), dtype),
+                    "k_rope": jnp.zeros((batch, cache_len, c.rope_head_dim),
+                                        dtype),
+                    "pos": jnp.zeros((), jnp.int32)}
+        return {"k": jnp.zeros((batch, cache_len, kvh, dh), dtype),
+                "v": jnp.zeros((batch, cache_len, kvh, dh), dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+    if base == LOCAL:
+        w = min(cfg.local_window, cache_len)
+        return {"k": jnp.zeros((batch, w, kvh, dh), dtype),
+                "v": jnp.zeros((batch, w, kvh, dh), dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+    if base == XATTN:
+        return {
+            "self": {"k": jnp.zeros((batch, cache_len, kvh, dh), dtype),
+                     "v": jnp.zeros((batch, cache_len, kvh, dh), dtype),
+                     "pos": jnp.zeros((), jnp.int32)},
+            "xk": jnp.zeros((batch, cfg.enc_len, kvh, dh), dtype),
+            "xv": jnp.zeros((batch, cfg.enc_len, kvh, dh), dtype),
+        }
+    if base == RGLRU:
+        return R.rglru_init_state(cfg, batch, dtype)
+    if base == MLSTM:
+        return R.mlstm_init_state(cfg, batch, dtype)
+    if base == SLSTM:
+        return R.slstm_init_state(cfg, batch, dtype)
+    raise ValueError(kind)

@@ -1,0 +1,415 @@
+"""Primitive layers for the LM substrate (pure-functional, pjit-friendly).
+
+Parameters are nested dicts of jnp arrays. Initializers take an explicit
+PRNG key and dtype; applies are shape-polymorphic over batch/seq so the
+same code serves train (full seq), prefill, and decode (seq=1 + cache).
+
+The attention here is the jnp path the dry-run lowers; on real TPUs the
+Pallas flash kernel (repro.kernels) slots in via ``impl`` — identical math.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------- utils
+def dense_init(key, d_in: int, d_out: int, dtype, *, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+                  * scale).astype(dtype)}
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"]
+
+
+def norm_init(d: int, kind: str, dtype):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "ln":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, kind: str, eps: float = 1e-6):
+    """Statistics in f32, elementwise math in the input dtype.
+
+    The f32 upcast feeds ONLY the reductions (so it fuses into them and is
+    never materialized). An `x.astype(f32)` with multiple consumers gets
+    hoisted by XLA out of the layer scan's backward into a bulk f32 copy
+    of the whole saved-residual stack — +8.25 GiB on granite-34b train
+    (EXPERIMENTS.md §Perf iter 4)."""
+    if kind == "rms":
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        return x * inv * p["scale"]
+    mu32 = jnp.mean(x.astype(jnp.float32), -1, keepdims=True)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True) \
+        - jnp.square(mu32)
+    inv = jax.lax.rsqrt(jnp.maximum(var, 0.0) + eps).astype(x.dtype)
+    return (x - mu32.astype(x.dtype)) * inv * p["scale"] + p["bias"]
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(dh_half: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(dh_half, dtype=jnp.float32) / dh_half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x (B, T, H, dh), positions (B, T) int32 → rotated x (split halves)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh // 2, theta)                          # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (B, T, dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: Tuple[int, ...]):
+    """M-RoPE (Qwen2-VL): positions (3, B, T) — temporal/height/width ids
+    drive disjoint frequency sections of the half-dim."""
+    dh = x.shape[-1]
+    assert sum(sections) == dh // 2, (sections, dh)
+    freqs = rope_freqs(dh // 2, theta)                          # (dh/2,)
+    # pick which position axis (t/h/w) drives each frequency slot
+    sect_id = jnp.repeat(jnp.arange(len(sections)),
+                         jnp.asarray(sections), total_repeat_length=dh // 2)
+    pos_all = jnp.moveaxis(positions, 0, -1).astype(jnp.float32)  # (B,T,3)
+    pos_slot = jnp.take_along_axis(
+        pos_all,
+        jnp.broadcast_to(sect_id[None, None, :],
+                         pos_all.shape[:-1] + (dh // 2,)),
+        axis=-1)                                                # (B,T,dh/2)
+    angles = pos_slot * freqs                                   # (B, T, dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLP
+def mlp_init(key, cfg: ArchConfig, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    p = {"down": dense_init(ks[0], d_ff, d, dtype)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["gate"] = dense_init(ks[1], d, d_ff, dtype)
+        p["up"] = dense_init(ks[2], d, d_ff, dtype)
+    else:
+        p["up"] = dense_init(ks[1], d, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+    elif act == "geglu":
+        h = jax.nn.gelu(dense(p["gate"], x)) * dense(p["up"], x)
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(dense(p["up"], x)))
+    elif act == "gelu":
+        h = jax.nn.gelu(dense(p["up"], x))
+    else:
+        raise ValueError(act)
+    return dense(p["down"], h)
+
+
+# ------------------------------------------------------- core attention
+def _sdpa(q, k, v, *, causal: bool, window: Optional[int],
+          q_offset, softcap: float, chunk_q: int = 0):
+    """Softmax attention. q (B,T,H,dh); k,v (B,C,H,dh) (kv already
+    head-repeated). ``q_offset``: position of q[0] on the kv timeline —
+    int or (B,) array. Full-logit path, optionally scanned over q chunks."""
+    b, tq, h, dh = q.shape
+    scale = dh ** -0.5
+
+    def block(qc, off_extra):
+        # qc (B, tc, H, dh); off_extra: static int chunk offset
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qc, k).astype(jnp.float32)
+        logits *= scale
+        if softcap > 0:
+            logits = jnp.tanh(logits / softcap) * softcap
+        qpos = jnp.arange(qc.shape[1])[:, None] + off_extra       # (tc,1)
+        if isinstance(q_offset, jnp.ndarray) and q_offset.ndim == 1:
+            qpos = qpos[None] + q_offset[:, None, None]           # (B,tc,1)
+        else:
+            qpos = (qpos + q_offset)[None]                        # (1,tc,1)
+        kpos = jnp.arange(k.shape[1])[None, None, :]              # (1,1,C)
+        mask = jnp.ones(jnp.broadcast_shapes(qpos.shape, kpos.shape), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask[:, None], logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+    dv = v.shape[-1]                    # may differ from dh (MLA)
+    if chunk_q and tq > chunk_q and tq % chunk_q == 0:
+        qs = q.reshape(b, tq // chunk_q, chunk_q, h, dh)
+
+        def body(_, it):
+            qc, i = it
+            return None, jax.checkpoint(
+                lambda qq: block(qq, i * chunk_q))(qc)
+
+        _, out = jax.lax.scan(
+            body, None, (jnp.moveaxis(qs, 1, 0),
+                         jnp.arange(tq // chunk_q)))
+        return jnp.moveaxis(out, 0, 1).reshape(b, tq, h, dv)
+    return block(q, 0)
+
+
+def repeat_kv(x: jnp.ndarray, rep: int) -> jnp.ndarray:
+    if rep == 1:
+        return x
+    return jnp.repeat(x, rep, axis=2)
+
+
+# ------------------------------------------------------------ attention
+def attn_init(key, cfg: ArchConfig, dtype, *, cross: bool = False):
+    d, dh = cfg.d_model, cfg.dh
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "q": dense_init(ks[0], d, h * dh, dtype),
+        "k": dense_init(ks[1], d, kvh * dh, dtype),
+        "v": dense_init(ks[2], d, kvh * dh, dtype),
+        "o": dense_init(ks[3], h * dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(dh, "rms", dtype)
+        p["k_norm"] = norm_init(dh, "rms", dtype)
+    return p
+
+
+def attn_apply(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    *,
+    positions: jnp.ndarray,            # (B, T) or (3, B, T) for mrope
+    causal: bool = True,
+    window: Optional[int] = None,
+    cache: Optional[Params] = None,    # {"k","v","pos"} decode cache
+    xattn_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    chunk_q: int = 0,
+    readonly: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Self- or cross-attention with optional KV cache update."""
+    b, t, d = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = dense(p["q"], x).reshape(b, t, h, dh)
+    if xattn_kv is not None:
+        k, v = xattn_kv                                  # precomputed (B,C,kvh,dh)
+        new_cache = None
+        q_off = 0
+        causal, window = False, None
+    else:
+        k = dense(p["k"], x).reshape(b, t, kvh, dh)
+        v = dense(p["v"], x).reshape(b, t, kvh, dh)
+        if cfg.qk_norm:
+            q = apply_norm(p["q_norm"], q, "rms")
+            k = apply_norm(p["k_norm"], k, "rms")
+        if cfg.rope == "std":
+            pos2 = positions if positions.ndim == 2 else positions[0]
+            q = apply_rope(q, pos2, cfg.rope_theta)
+            k = apply_rope(k, pos2, cfg.rope_theta)
+        elif cfg.rope == "mrope":
+            assert positions.ndim == 3, "mrope needs (3, B, T) positions"
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        if cache is not None and window is not None and cache["k"].shape[1] <= window:
+            # ring-buffer cache for local attention (decode, t == 1):
+            # slot j holds global index pos - ((pos - j) mod W)
+            assert t == 1, "ring cache supports single-step decode only"
+            w_sz = cache["k"].shape[1]
+            pos = cache["pos"]
+            slot = jnp.mod(pos, w_sz)
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+            new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+            slot_idx = jnp.arange(w_sz)
+            global_idx = pos - jnp.mod(pos - slot_idx, w_sz)    # (W,)
+            valid = global_idx >= 0
+            q = q.astype(jnp.float32)
+            logits = jnp.einsum(
+                "bqhd,bkhd->bhqk", q,
+                repeat_kv(ck, h // kvh).astype(jnp.float32)) * (dh ** -0.5)
+            if cfg.attn_logit_softcap > 0:
+                logits = jnp.tanh(logits / cfg.attn_logit_softcap) \
+                    * cfg.attn_logit_softcap
+            logits = jnp.where(valid[None, None, None, :], logits, -jnp.inf)
+            probs = jax.nn.softmax(logits, -1)
+            out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(x.dtype),
+                             repeat_kv(cv, h // kvh))
+            return dense(p["o"], out.reshape(b, t, h * dh)), new_cache
+        elif cache is not None and readonly:
+            # serving layout: the big cache is a read-only input (sharded
+            # along its length on the model axis); the step's fresh kv is
+            # returned for out-of-band append (vLLM-style page write).
+            # Softmax merges the two pieces — the cache is never gathered.
+            assert t == 1, "readonly cache is a decode-only path"
+            pos = cache["pos"]
+            ck, cv = cache["k"], cache["v"]
+            qf = q.astype(jnp.float32)
+            scale = dh ** -0.5
+            lc = jnp.einsum("bqhd,bkhd->bhqk", qf,
+                            repeat_kv(ck, h // kvh).astype(jnp.float32))
+            lc = lc * scale
+            kpos = jnp.arange(ck.shape[1])[None, None, None]
+            lc = jnp.where(kpos < pos, lc, -jnp.inf)
+            ln = jnp.einsum("bqhd,bkhd->bhqk", qf,
+                            repeat_kv(k, h // kvh).astype(jnp.float32))
+            ln = ln * scale
+            if cfg.attn_logit_softcap > 0:
+                cap = cfg.attn_logit_softcap
+                lc, ln = jnp.tanh(lc / cap) * cap, jnp.tanh(ln / cap) * cap
+            m = jnp.maximum(jnp.max(lc, -1, keepdims=True),
+                            jnp.max(ln, -1, keepdims=True))
+            pc, pn = jnp.exp(lc - m), jnp.exp(ln - m)
+            denom = pc.sum(-1, keepdims=True) + pn.sum(-1, keepdims=True)
+            out = (jnp.einsum("bhqk,bkhd->bqhd", pc / denom,
+                              repeat_kv(cv, h // kvh).astype(jnp.float32))
+                   + jnp.einsum("bhqk,bkhd->bqhd", pn / denom,
+                                repeat_kv(v, h // kvh).astype(jnp.float32))
+                   ).astype(x.dtype)
+            new_cache = {"k_new": k, "v_new": v, "pos": pos + t}
+            return dense(p["o"], out.reshape(b, t, h * dh)), new_cache
+        elif cache is not None:
+            # decode: write new kv at index `pos` (same for whole batch)
+            pos = cache["pos"]                            # scalar int32
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, 1)
+            new_cache = {"k": ck, "v": cv, "pos": pos + t}
+            k, v = ck, cv
+            q_off = pos
+        else:
+            new_cache = None
+            q_off = 0
+    out = _sdpa(q, repeat_kv(k, h // k.shape[2]), repeat_kv(v, h // v.shape[2]),
+                causal=causal, window=window, q_offset=q_off,
+                softcap=cfg.attn_logit_softcap, chunk_q=chunk_q)
+    return dense(p["o"], out.reshape(b, t, h * dh)), new_cache
+
+
+# ------------------------------------------------------------------ MLA
+def mla_init(key, cfg: ArchConfig, dtype):
+    c = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        # queries: full-rank (lite model has no q-lora)
+        "q": dense_init(ks[0], d, h * (c.qk_nope_head_dim + c.rope_head_dim),
+                        dtype),
+        # compressed kv + shared rope key
+        "dkv": dense_init(ks[1], d, c.kv_lora_rank, dtype),
+        "k_rope": dense_init(ks[2], d, c.rope_head_dim, dtype),
+        "kv_norm": norm_init(c.kv_lora_rank, "rms", dtype),
+        # up-projections out of the latent
+        "uk": dense_init(ks[3], c.kv_lora_rank, h * c.qk_nope_head_dim, dtype),
+        "uv": dense_init(ks[4], c.kv_lora_rank, h * c.v_head_dim, dtype),
+        "o": dense_init(ks[5], h * c.v_head_dim, d, dtype),
+    }
+
+
+def mla_apply(
+    p: Params, x: jnp.ndarray, cfg: ArchConfig, *,
+    positions: jnp.ndarray, cache: Optional[Params] = None,
+    chunk_q: int = 0, absorb: bool = True, readonly: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Multi-head Latent Attention (DeepSeek-V2). The decode path uses the
+    weight-absorbed form: scores come from the *compressed* cache directly,
+    so per-step work is O(C · kv_lora) not O(C · H · dh)."""
+    c = cfg.mla
+    b, t, d = x.shape
+    h = cfg.n_heads
+    dq = c.qk_nope_head_dim + c.rope_head_dim
+
+    q = dense(p["q"], x).reshape(b, t, h, dq)
+    q_nope, q_rope = q[..., :c.qk_nope_head_dim], q[..., c.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = apply_norm(p["kv_norm"], dense(p["dkv"], x), "rms")   # (B,T,L)
+    k_rope = dense(p["k_rope"], x).reshape(b, t, 1, c.rope_head_dim)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+
+    if cache is not None and readonly:
+        # serving layout: compressed cache is read-only (sharded on length);
+        # fresh latent is returned for out-of-band append.
+        assert t == 1
+        pos = cache["pos"]
+        wuk = p["uk"]["w"].reshape(c.kv_lora_rank, h, c.qk_nope_head_dim)
+        wuv = p["uv"]["w"].reshape(c.kv_lora_rank, h, c.v_head_dim)
+        scale = (c.qk_nope_head_dim + c.rope_head_dim) ** -0.5
+        q_abs = jnp.einsum("bthd,lhd->bthl", q_nope, wuk)
+        lc = (jnp.einsum("bthl,bcl->bhtc", q_abs, cache["ckv"])
+              + jnp.einsum("bthd,bcd->bhtc", q_rope, cache["k_rope"])
+              ).astype(jnp.float32) * scale
+        kpos = jnp.arange(cache["ckv"].shape[1])[None, None, None]
+        lc = jnp.where(kpos < pos, lc, -jnp.inf)
+        ln = (jnp.einsum("bthl,bcl->bhtc", q_abs, ckv)
+              + jnp.einsum("bthd,bcd->bhtc", q_rope, k_rope)
+              ).astype(jnp.float32) * scale
+        m = jnp.maximum(jnp.max(lc, -1, keepdims=True),
+                        jnp.max(ln, -1, keepdims=True))
+        pc, pn = jnp.exp(lc - m), jnp.exp(ln - m)
+        denom = pc.sum(-1, keepdims=True) + pn.sum(-1, keepdims=True)
+        o_lat = (jnp.einsum("bhtc,bcl->bthl", (pc / denom).astype(x.dtype),
+                            cache["ckv"])
+                 + jnp.einsum("bhtc,bcl->bthl", (pn / denom).astype(x.dtype),
+                              ckv))
+        out = jnp.einsum("bthl,lhv->bthv", o_lat, wuv)
+        new_cache = {"ckv_new": ckv, "k_rope_new": k_rope, "pos": pos + t}
+        return dense(p["o"], out.reshape(b, t, h * c.v_head_dim)), new_cache
+
+    if cache is not None:
+        pos = cache["pos"]
+        ckv_all = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, pos, 1)
+        kr_all = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, pos, 1)
+        new_cache = {"ckv": ckv_all, "k_rope": kr_all, "pos": pos + t}
+        q_off = pos
+    else:
+        ckv_all, kr_all = ckv, k_rope
+        new_cache = None
+        q_off = 0
+
+    scale = (c.qk_nope_head_dim + c.rope_head_dim) ** -0.5
+    if cache is not None and absorb:
+        # absorbed decode: q_abs (B,T,H,L); scores vs latent cache directly
+        wuk = p["uk"]["w"].reshape(c.kv_lora_rank, h, c.qk_nope_head_dim)
+        q_abs = jnp.einsum("bthd,lhd->bthl", q_nope, wuk)
+        logits = (jnp.einsum("bthl,bcl->bhtc", q_abs, ckv_all)
+                  + jnp.einsum("bthd,bcd->bhtc", q_rope, kr_all)
+                  ).astype(jnp.float32) * scale
+        qpos = jnp.arange(t)[None, :, None] + q_off
+        kpos = jnp.arange(ckv_all.shape[1])[None, None, :]
+        logits = jnp.where((kpos <= qpos)[:, None], logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, -1).astype(x.dtype)
+        o_lat = jnp.einsum("bhtc,bcl->bthl", probs, ckv_all)    # (B,T,H,L)
+        wuv = p["uv"]["w"].reshape(c.kv_lora_rank, h, c.v_head_dim)
+        out = jnp.einsum("bthl,lhv->bthv", o_lat, wuv)
+    else:
+        # train/prefill: expand latent to per-head K/V (flops-optimal here)
+        k_nope = dense(p["uk"], ckv_all).reshape(b, -1, h, c.qk_nope_head_dim)
+        v = dense(p["uv"], ckv_all).reshape(b, -1, h, c.v_head_dim)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None],
+                                      kr_all.shape[:2] + (h, c.rope_head_dim))],
+            axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _sdpa(q_full, k_full, v, causal=True, window=None,
+                    q_offset=q_off, softcap=0.0, chunk_q=chunk_q)
+    return dense(p["o"], out.reshape(b, t, h * c.v_head_dim)), new_cache

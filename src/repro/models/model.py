@@ -1,0 +1,204 @@
+"""Full LM assembly: embedding → scanned super-blocks → norm → head.
+
+The layer stack follows ``cfg.layout()``: each (unit, reps) group is one
+``jax.lax.scan`` over params stacked along a leading ``reps`` axis —
+constant-size HLO regardless of depth (an 88-layer granite compiles as
+fast as a 2-layer smoke config). ``jax.checkpoint`` wraps the scan body in
+train mode (per-layer remat; the gradient-accumulation loop in
+train/train_step.py handles the batch dimension of memory).
+
+Modes:
+  train/prefill — full sequence, cache optional (prefill fills it)
+  decode        — seq == 1 against a cache/state
+Enc-dec (whisper): ``enc_frames`` (stub frontend output) is encoded once;
+decoder cross-attends. VLM (qwen2-vl): ``vision_embeds`` overwrite the
+first n_vision positions (stub vision tower).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ATTN_BIDIR
+from repro.distributed.sharding import shard
+from .blocks import block_apply, block_init, init_block_cache
+from .layers import apply_norm, dense, norm_init
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOptions:
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    chunk_q: int = 2048      # q-chunked attention above this seq length
+    max_abs_pos: int = 4096  # learned pos-embed table (rope == "none")
+    # serving layout: decode treats big KV caches as read-only inputs and
+    # returns fresh kv for out-of-band append (length-sharded caches never
+    # round-trip through dynamic-update-slice) — see layers.attn_apply
+    readonly_cache: bool = False
+
+
+def _stack_init(unit, reps, key, cfg, dtype):
+    """Params for one scan group: each leaf gains a leading (reps,) axis."""
+    def init_one(k):
+        ks = jax.random.split(k, len(unit))
+        return {f"l{j}_{kind}": block_init(kind, ks[j], cfg, dtype)
+                for j, kind in enumerate(unit)}
+    return jax.vmap(init_one)(jax.random.split(key, reps))
+
+
+def init_params(cfg: ArchConfig, key, opts: ModelOptions = ModelOptions()):
+    dtype = opts.dtype
+    ks = jax.random.split(key, 8)
+    params: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if cfg.rope == "none" and cfg.abs_pos:
+        params["pos_embed"] = (jax.random.normal(
+            ks[1], (opts.max_abs_pos, cfg.d_model), jnp.float32)
+            * 0.02).astype(dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            ks[2], (cfg.d_model, cfg.vocab), jnp.float32)
+            * cfg.d_model ** -0.5).astype(dtype)
+    groups = []
+    gkeys = jax.random.split(ks[3], len(list(cfg.layout())))
+    for gk, (unit, reps) in zip(gkeys, cfg.layout()):
+        groups.append(_stack_init(unit, reps, gk, cfg, dtype))
+    params["groups"] = groups
+    if cfg.n_enc_layers:
+        params["encoder"] = _stack_init(
+            (ATTN_BIDIR,), cfg.n_enc_layers, ks[4], cfg, dtype)
+        params["enc_norm"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        params["enc_pos_embed"] = (jax.random.normal(
+            ks[5], (cfg.enc_len, cfg.d_model), jnp.float32) * 0.02
+            ).astype(dtype)
+    return params
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
+               opts: ModelOptions = ModelOptions()):
+    """Stacked decode caches mirroring the params group structure."""
+    groups = []
+    for unit, reps in cfg.layout():
+        one = {f"l{j}_{kind}": init_block_cache(
+            kind, cfg, batch, cache_len, opts.dtype)
+            for j, kind in enumerate(unit)}
+        groups.append(jax.tree_util.tree_map(
+            lambda x: jnp.tile(x, (reps,) + (1,) * x.ndim), one))
+    return groups
+
+
+def _scan_group(unit, gparams, x, cfg, *, positions, gcache, enc_out,
+                chunk_q, remat, readonly=False):
+    """Scan one (unit, reps) group; cache (if any) rides as scan xs/ys."""
+    def body(carry, xs):
+        h = carry
+        lp, lc = xs
+        new_lc = {} if lc is not None else None
+        for j, kind in enumerate(unit):
+            name = f"l{j}_{kind}"
+            c = None if lc is None else lc[name]
+            h, nc = block_apply(
+                kind, lp[name], h, cfg, positions=positions, cache=c,
+                enc_out=enc_out, chunk_q=chunk_q, readonly=readonly)
+            if new_lc is not None:
+                new_lc[name] = nc
+        return h, new_lc
+
+    wrapped = jax.checkpoint(body) if remat else body
+    x, new_cache = jax.lax.scan(wrapped, x, (gparams, gcache))
+    return x, new_cache
+
+
+def encode(params: Params, cfg: ArchConfig, enc_frames: jnp.ndarray,
+           opts: ModelOptions = ModelOptions()):
+    """Whisper encoder over stub frame embeddings (B, enc_len, D)."""
+    x = enc_frames.astype(opts.dtype) + params["enc_pos_embed"][None]
+    pos = jnp.broadcast_to(jnp.arange(cfg.enc_len)[None],
+                           (x.shape[0], cfg.enc_len))
+    x, _ = _scan_group((ATTN_BIDIR,), params["encoder"], x, cfg,
+                       positions=pos, gcache=None, enc_out=None,
+                       chunk_q=opts.chunk_q, remat=opts.remat)
+    return apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def forward(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,                    # (B, T) int32
+    *,
+    positions: Optional[jnp.ndarray] = None,  # (B,T) or (3,B,T); default iota
+    cache: Optional[Any] = None,
+    enc_frames: Optional[jnp.ndarray] = None,
+    enc_out: Optional[jnp.ndarray] = None,
+    vision_embeds: Optional[jnp.ndarray] = None,
+    opts: ModelOptions = ModelOptions(),
+    mode: str = "train",
+) -> Tuple[jnp.ndarray, Optional[Any]]:
+    """Returns (logits (B,T,V) float32, new_cache)."""
+    b, t = tokens.shape
+    if positions is None:
+        base = jnp.arange(t, dtype=jnp.int32)[None]
+        if cache is not None and mode == "decode":
+            base = base + _cache_pos(cache)
+        positions = jnp.broadcast_to(base, (b, t))
+        if cfg.rope == "mrope":
+            positions = jnp.broadcast_to(positions[None], (3, b, t))
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(opts.dtype)
+    x = shard(x, "batch", None, None)
+    if cfg.rope == "none" and cfg.abs_pos:
+        pos2 = positions if positions.ndim == 2 else positions[0]
+        x = x + jnp.take(params["pos_embed"], pos2, axis=0).astype(opts.dtype)
+    if (vision_embeds is not None and cfg.n_vision_embeds
+            and mode != "decode"):
+        nv = cfg.n_vision_embeds
+        x = jnp.concatenate(
+            [vision_embeds.astype(opts.dtype), x[:, nv:]], axis=1)
+
+    if cfg.n_enc_layers and enc_out is None:
+        assert enc_frames is not None, "enc-dec arch needs enc_frames"
+        enc_out = encode(params, cfg, enc_frames, opts)
+
+    chunk_q = opts.chunk_q if t > opts.chunk_q else 0
+    remat = opts.remat and mode == "train"
+    new_groups = []
+    cache = cache if cache is not None else [None] * len(list(cfg.layout()))
+    for gi, (unit, reps) in enumerate(cfg.layout()):
+        x, nc = _scan_group(
+            unit, params["groups"][gi], x, cfg, positions=positions,
+            gcache=cache[gi], enc_out=enc_out, chunk_q=chunk_q, remat=remat,
+            readonly=opts.readonly_cache and mode == "decode")
+        new_groups.append(nc)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = (x @ head).astype(jnp.float32)
+    logits = shard(logits, "batch", None, "model")
+    return logits, (new_groups if any(c is not None for c in new_groups)
+                    else None)
+
+
+def _cache_pos(cache):
+    """Current decode position from the first attention-style cache."""
+    for g in cache:
+        if g is None:
+            continue
+        for layer in jax.tree_util.tree_leaves(
+                g, is_leaf=lambda n: isinstance(n, dict) and "pos" in n):
+            if isinstance(layer, dict) and "pos" in layer:
+                return layer["pos"][0] if layer["pos"].ndim else layer["pos"]
+    return jnp.zeros((), jnp.int32)
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

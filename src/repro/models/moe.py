@@ -1,0 +1,118 @@
+"""Mixture-of-Experts layer (Arctic dense+MoE hybrid, DeepSeek shared
+experts) with capacity-bounded einsum dispatch.
+
+Dispatch is the mesh-TF/MaxText one-hot formulation: static shapes, so it
+pjit-shards cleanly (experts over the "model" axis → XLA inserts the
+token all_to_all). Tokens over capacity are dropped (standard; the
+capacity_factor config bounds drop probability).
+
+The router's top-k over expert logits is the same streaming-top-k problem
+as the PGBJ reducer — on TPU both lower onto the kernels' merge network.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import dense, dense_init, mlp_apply, mlp_init
+
+Params = Dict[str, Any]
+
+
+def moe_init(key, cfg: ArchConfig, dtype):
+    mo = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    mult = 3 if cfg.act in ("swiglu", "geglu") else 2
+    shapes = {"up": (mo.n_experts, d, mo.expert_ff),
+              "down": (mo.n_experts, mo.expert_ff, d)}
+    p: Params = {
+        "router": dense_init(ks[0], d, mo.n_experts, dtype, scale=0.02),
+        "up": (jax.random.normal(ks[1], shapes["up"], jnp.float32)
+               * d ** -0.5).astype(dtype),
+        "down": (jax.random.normal(ks[2], shapes["down"], jnp.float32)
+                 * mo.expert_ff ** -0.5).astype(dtype),
+    }
+    if mult == 3:
+        p["gate"] = (jax.random.normal(ks[3], shapes["up"], jnp.float32)
+                     * d ** -0.5).astype(dtype)
+    if mo.n_shared:
+        p["shared"] = [mlp_init(k, cfg, mo.expert_ff, dtype)
+                       for k in jax.random.split(ks[4], mo.n_shared)]
+    if mo.dense_residual_ff:
+        p["dense"] = mlp_init(ks[5], cfg, mo.dense_residual_ff, dtype)
+    return p
+
+
+_MOE_CHUNK = 4096   # tokens per dispatch block (see moe_apply docstring)
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """x (B, T, D) → (B, T, D). Auxiliary-loss-free (bias-based balancing
+    is a training detail; the dry-run cares about dataflow + flops).
+
+    Token-chunked dispatch: the one-hot dispatch tensor is (N, E, C) with
+    C ∝ N/E — i.e. O(N²) bytes in the token count. At train microbatches
+    (N ≈ 4k) that is immaterial, but a 32k-token prefill with B=32 is N≈1M
+    and the dispatch alone would be hundreds of GiB (observed: 422 GiB on
+    deepseek-v2-lite prefill_32k). Scanning over ≤4096-token chunks keeps
+    the live dispatch at chunk·E·C_chunk — capacity semantics become
+    per-chunk, which if anything balances better (shorter reorder window).
+    """
+    mo = cfg.moe
+    b, t, d = x.shape
+    n = b * t
+    xf = x.reshape(n, d)
+    if n > _MOE_CHUNK and n % _MOE_CHUNK == 0:
+        nc = n // _MOE_CHUNK
+        y = jax.lax.map(
+            lambda xc: _moe_tokens(p, xc, cfg), xf.reshape(nc, _MOE_CHUNK, d))
+        y = y.reshape(b, t, d)
+    else:
+        y = _moe_tokens(p, xf, cfg).reshape(b, t, d)
+
+    for sp in p.get("shared", []):
+        y = y + mlp_apply(sp, x, cfg.act)
+    if "dense" in p:
+        y = y + mlp_apply(p["dense"], x, cfg.act)
+    return y
+
+
+def _moe_tokens(p: Params, xf: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Routed-expert compute for a flat (N, D) token block."""
+    mo = cfg.moe
+    n, d = xf.shape
+    e, k = mo.n_experts, mo.top_k
+    cap = max(1, int(k * n * mo.capacity_factor / e))
+    logits = dense(p["router"], xf).astype(jnp.float32)         # (N, E)
+    gates = jax.nn.softmax(logits, -1)
+    topw, tope = jax.lax.top_k(gates, k)                        # (N, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's capacity buffer;
+    # choice-major priority like mesh-TF (all 1st choices before 2nd)
+    sel = jax.nn.one_hot(tope, e, dtype=jnp.float32)            # (N, k, E)
+    sel_flat = sel.transpose(1, 0, 2).reshape(k * n, e)
+    pos_flat = (jnp.cumsum(sel_flat, axis=0) - 1.0)             # (kN, E)
+    pos = (pos_flat * sel_flat).sum(-1).reshape(k, n).T         # (N, k)
+    keep = pos < cap
+    w = topw * keep
+
+    # dispatch (N, E, C) / combine — one-hot expansions, static shapes
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=xf.dtype)
+    disp = jnp.einsum("nke,nkc->nec", sel.astype(xf.dtype) * keep[..., None],
+                      pos_oh)
+    comb = jnp.einsum("nke,nkc->nec",
+                      (sel * w[..., None]).astype(xf.dtype), pos_oh)
+
+    xe = jnp.einsum("nec,nd->ecd", disp, xf)                    # (E, C, D)
+    if "gate" in p:
+        he = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["gate"]))
+              * jnp.einsum("ecd,edf->ecf", xe, p["up"]))
+    else:
+        he = jnp.square(jax.nn.relu(jnp.einsum("ecd,edf->ecf", xe, p["up"])))
+    ye = jnp.einsum("ecf,efd->ecd", he, p["down"])              # (E, C, D)
+    return jnp.einsum("nec,ecd->nd", comb, ye)

@@ -1,0 +1,353 @@
+"""Recurrent blocks: xLSTM (mLSTM chunkwise, sLSTM scan) and Griffin's
+RG-LRU. All three expose (init, apply) where apply handles both full
+sequences (train/prefill) and single-step decode via a state dict.
+
+TPU notes:
+- mLSTM runs in *chunkwise* form: intra-chunk is parallel matmuls (MXU),
+  inter-chunk is a short scan over T/chunk steps carrying (C, n, m) —
+  exact, stabilized in log-space.
+- RG-LRU is a diagonal linear recurrence → jax.lax.associative_scan
+  (log-depth, maps to efficient TPU loops); decode is one fused step.
+- sLSTM has memory mixing (h_{t-1} enters the gates through dense
+  recurrent weights) and is *inherently sequential* (xLSTM paper §2.1) —
+  a lax.scan over time; its cost is the architecture's, not an
+  implementation artifact.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import dense, dense_init, norm_init, apply_norm
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------- causal conv 1d
+def conv1d_init(key, width: int, channels: int, dtype):
+    return {"w": (jax.random.normal(key, (width, channels), jnp.float32)
+                  * width ** -0.5).astype(dtype)}
+
+
+def conv1d_apply(p: Params, x: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x (B,T,C); state (B,W-1,C) for decode.
+    Returns (y, new_state)."""
+    w = p["w"]                                   # (W, C)
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)       # (B, T+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return y, xp[:, -(width - 1):]
+
+
+# --------------------------------------------------------------- RG-LRU
+_RGLRU_C = 8.0
+
+
+def rglru_block_init(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    dr = int(d * cfg.expand)
+    ks = jax.random.split(key, 7)
+    return {
+        "in": dense_init(ks[0], d, dr, dtype),
+        "gate": dense_init(ks[1], d, dr, dtype),
+        "conv": conv1d_init(ks[2], cfg.conv_width, dr, dtype),
+        # elementwise (diagonal) RG-LRU gates
+        "w_a": jnp.zeros((dr,), dtype), "b_a": jnp.zeros((dr,), dtype),
+        "w_x": jnp.zeros((dr,), dtype), "b_x": jnp.zeros((dr,), dtype),
+        # Λ init so a ≈ 0.9..0.999 (Griffin's init range)
+        "lam": (jnp.log(jnp.expm1(
+            -jnp.log(jax.random.uniform(
+                ks[3], (dr,), jnp.float32, 0.9, 0.999)) / _RGLRU_C))
+            ).astype(jnp.float32),
+        "out": dense_init(ks[4], dr, d, dtype),
+    }
+
+
+def rglru_block_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+                      state: Optional[Params] = None):
+    """x (B,T,D) → (B,T,D); state {"h": (B,Dr), "conv": (B,W-1,Dr)}."""
+    u = dense(p["in"], x)                                       # (B,T,Dr)
+    g = jax.nn.gelu(dense(p["gate"], x))
+    u, conv_state = conv1d_apply(
+        p["conv"], u, None if state is None else state["conv"])
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p["w_a"].astype(jnp.float32)
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf * p["w_x"].astype(jnp.float32)
+                       + p["b_x"].astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"]) * r            # (B,T,Dr)
+    a = jnp.exp(log_a)
+    gated_x = i * uf
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+
+    if x.shape[1] > 1:
+        # h_t = a_t h_{t-1} + b_t — associative; fold a carried state into
+        # the first step so prefill can continue from a checkpointed state
+        if state is not None:
+            b = b.at[:, 0].add(a[:, 0] * state["h"].astype(jnp.float32))
+        _, h = jax.lax.associative_scan(_lru_op, (a, b), axis=1)
+        new_state = {"h": h[:, -1].astype(x.dtype), "conv": conv_state}
+    else:
+        h_prev = (jnp.zeros_like(b[:, 0]) if state is None
+                  else state["h"].astype(jnp.float32))[:, None]
+        h = a * h_prev + b          # T == 1 for decode
+        new_state = {"h": h[:, -1].astype(x.dtype), "conv": conv_state}
+    y = dense(p["out"], (h.astype(x.dtype) * g))
+    return y, new_state
+
+
+def _lru_op(left, right):
+    a_l, b_l = left
+    a_r, b_r = right
+    return a_l * a_r, a_r * b_l + b_r
+
+
+# ---------------------------------------------------------------- mLSTM
+def mlstm_block_init(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    di = int(d * cfg.expand)                    # inner width (pf=2)
+    h = cfg.n_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "up": dense_init(ks[0], d, di, dtype),
+        "up_gate": dense_init(ks[1], d, di, dtype),
+        "conv": conv1d_init(ks[2], cfg.conv_width, di, dtype),
+        "q": dense_init(ks[3], di, di, dtype),
+        "k": dense_init(ks[4], di, di, dtype),
+        "v": dense_init(ks[5], di, di, dtype),
+        "igate": dense_init(ks[6], di, h, dtype, scale=0.01),
+        "fgate": dense_init(ks[7], di, h, dtype, scale=0.01),
+        "fgate_bias": jnp.full((h,), 3.0, jnp.float32),  # long-memory init
+        "gn": norm_init(di, "rms", dtype),      # per-head group norm (rms)
+        "down": dense_init(ks[8], di, d, dtype),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_i, log_f, chunk: int, init=None):
+    """Exact chunkwise mLSTM. q,k,v (B,H,T,dh); gates (B,H,T) log-space.
+    Returns (h (B,H,T,dh), final (C, n, m))."""
+    b, h, t, dh = q.shape
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    qc = q.reshape(b, h, nc, chunk, dh)
+    kc = k.reshape(b, h, nc, chunk, dh)
+    vc = v.reshape(b, h, nc, chunk, dh)
+    li = log_i.reshape(b, h, nc, chunk)
+    lf = log_f.reshape(b, h, nc, chunk)
+
+    # cumulative log-forget within chunk (inclusive)
+    lf_cum = jnp.cumsum(lf, axis=-1)                    # (B,H,nc,c)
+    lf_tot = lf_cum[..., -1]                            # (B,H,nc)
+
+    def body(carry, xs):
+        C, n, m = carry          # (B,H,dh,dh), (B,H,dh), (B,H)
+        qt, kt, vt, lit, lfct, lftot = xs
+        # decay of the incoming state to each position: prod f_1..f_j
+        dstate = lfct                                    # (B,H,c)
+        # gate weight of key j surviving to position i (i>=j):
+        # log w_ij = lf_cum[i] - lf_cum[j] + li[j]
+        log_w = (lfct[..., :, None] - lfct[..., None, :] + lit[..., None, :])
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        log_w = jnp.where(causal, log_w, -jnp.inf)
+        # stabilizer per position: running max of (m_prev + dstate, max log_w)
+        m_intra = jnp.max(log_w, axis=-1)                       # (B,H,c)
+        m_new = jnp.maximum(m[..., None] + dstate, m_intra)     # (B,H,c)
+        # intra-chunk contribution
+        w = jnp.exp(log_w - m_new[..., None])                   # (B,H,c,c)
+        scores = jnp.einsum("bhid,bhjd->bhij", qt, kt) * (dh ** -0.5)
+        num_intra = jnp.einsum("bhij,bhjd->bhid", scores * w, vt)
+        den_intra = jnp.einsum("bhij,bhj->bhi", scores * w,
+                               jnp.ones_like(lit))
+        # inter-chunk (state) contribution
+        sw = jnp.exp(m[..., None] + dstate - m_new)             # (B,H,c)
+        num_inter = jnp.einsum("bhid,bhde->bhie", qt, C) * sw[..., None] \
+            * (dh ** -0.5)
+        den_inter = jnp.einsum("bhid,bhd->bhi", qt, n) * sw * (dh ** -0.5)
+        den = jnp.maximum(jnp.abs(den_intra + den_inter),
+                          jnp.exp(-m_new))                      # xLSTM max(|n|,1)
+        h_out = (num_intra + num_inter) / den[..., None]
+        # state update to end of chunk
+        m_next = jnp.maximum(
+            m + lftot, jnp.max(lit + lftot[..., None] - lfct, axis=-1))
+        kw = jnp.exp(lit + lftot[..., None] - lfct
+                     - m_next[..., None])                       # (B,H,c)
+        C_next = (C * jnp.exp(m + lftot - m_next)[..., None, None]
+                  + jnp.einsum("bhjd,bhje,bhj->bhde", kt, vt, kw))
+        n_next = (n * jnp.exp(m + lftot - m_next)[..., None]
+                  + jnp.einsum("bhjd,bhj->bhd", kt, kw))
+        return (C_next, n_next, m_next), h_out
+
+    if init is None:
+        C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = init
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (qc, kc, vc, li, lf_cum, lf_tot))
+    final, hs = jax.lax.scan(body, (C0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 2).reshape(b, h, t, dh), final
+
+
+def mlstm_block_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+                      state: Optional[Params] = None, chunk: int = 64):
+    b, t, d = x.shape
+    di = int(d * cfg.expand)
+    h = cfg.n_heads
+    dh = di // h
+    x1 = dense(p["up"], x)
+    x2 = dense(p["up_gate"], x)
+    xc, conv_state = conv1d_apply(
+        p["conv"], x1, None if state is None else state["conv"])
+    xc = jax.nn.silu(xc)
+    q = dense(p["q"], xc).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    k = dense(p["k"], xc).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = dense(p["v"], x1).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    q, k, v = (a.astype(jnp.float32) for a in (q, k, v))
+    log_i = dense(p["igate"], xc).astype(jnp.float32).transpose(0, 2, 1)
+    log_f = jax.nn.log_sigmoid(
+        dense(p["fgate"], xc).astype(jnp.float32)
+        + p["fgate_bias"]).transpose(0, 2, 1)                   # (B,H,T)
+
+    if t > 1:
+        pad = (-t) % chunk
+        if pad:
+            q, k, v = (jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                       for a in (q, k, v))
+            # pad gates so the tail steps are identity: i=0 (no write),
+            # f=1 (state preserved) — the final carried state stays exact
+            log_i = jnp.pad(log_i, ((0, 0), (0, 0), (0, pad)),
+                            constant_values=-1e30)
+            log_f = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)))
+        init = None if state is None else (state["C"], state["n"], state["m"])
+        hout, (Cf, nf, mf) = _mlstm_chunk_scan(
+            q, k, v, log_i, log_f, chunk, init=init)
+        hout = hout[:, :, :t]
+        new_state = {"C": Cf, "n": nf, "m": mf, "conv": conv_state}
+    else:
+        # single-step decode: C ← f C + i v kᵀ ; h = q·C / max(|q·n|, e^{-m})
+        if state is None:
+            state = mlstm_init_state(cfg, b, x.dtype)
+        C, n, m = state["C"], state["n"], state["m"]
+        lit = log_i[..., 0]
+        lft = log_f[..., 0]
+        m_new = jnp.maximum(lft + m, lit)
+        fw = jnp.exp(lft + m - m_new)[..., None]
+        iw = jnp.exp(lit - m_new)[..., None]
+        kt, vt, qt = k[:, :, 0], v[:, :, 0], q[:, :, 0]
+        C = C * fw[..., None] + iw[..., None] * kt[..., :, None] * vt[..., None, :]
+        n = n * fw + iw * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C) * (dh ** -0.5)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n))
+                          * (dh ** -0.5), jnp.exp(-m_new))
+        hout = (num / den[..., None])[:, :, None]               # (B,H,1,dh)
+        new_state = {"C": C, "n": n, "m": m_new, "conv": conv_state}
+
+    hout = hout.transpose(0, 2, 1, 3).reshape(b, t, di).astype(x.dtype)
+    hout = apply_norm(p["gn"], hout, "rms")
+    y = dense(p["down"], hout * jax.nn.silu(x2))
+    return y, new_state
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int, dtype):
+    d = cfg.d_model
+    di = int(d * cfg.expand)
+    h = cfg.n_heads
+    dh = di // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), dtype),
+    }
+
+
+# ---------------------------------------------------------------- sLSTM
+def slstm_block_init(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 11)
+    p: Params = {"gn": norm_init(d, "rms", dtype)}
+    for gi, g in enumerate(("i", "f", "z", "o")):
+        p[f"w_{g}"] = dense_init(ks[gi], d, d, dtype)
+        # block-diagonal recurrent weights: (H, dh, dh)
+        p[f"r_{g}"] = (jax.random.normal(ks[4 + gi], (h, dh, dh), jnp.float32)
+                       * dh ** -0.5).astype(dtype)
+    p["f_bias"] = jnp.full((d,), 3.0, jnp.float32)
+    dff = int(d * 4 / 3)
+    p["ffn_gate"] = dense_init(ks[8], d, dff, dtype)
+    p["ffn_up"] = dense_init(ks[9], d, dff, dtype)
+    p["ffn_down"] = dense_init(ks[10], dff, d, dtype)
+    return p
+
+
+def slstm_block_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+                      state: Optional[Params] = None):
+    """Sequential scan over time (memory mixing forbids parallel forms)."""
+    b, t, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    wx = {g: dense(p[f"w_{g}"], x).astype(jnp.float32)
+          for g in ("i", "f", "z", "o")}
+    wx["f"] = wx["f"] + p["f_bias"]
+    rw = {g: p[f"r_{g}"].astype(jnp.float32) for g in ("i", "f", "z", "o")}
+
+    if state is None:
+        h0 = jnp.zeros((b, d), jnp.float32)
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.ones((b, d), jnp.float32)
+        m0 = jnp.zeros((b, d), jnp.float32)
+    else:
+        h0, c0, n0, m0 = (state[s].astype(jnp.float32)
+                          for s in ("h", "c", "n", "m"))
+
+    def rmul(w, hv):    # block-diag recurrent matmul: (B,d)×(H,dh,dh)
+        return jnp.einsum("bhd,hde->bhe",
+                          hv.reshape(b, h, dh), w).reshape(b, d)
+
+    def step(carry, xs):
+        hp, cp, np_, mp = carry
+        xi, xf, xz, xo = xs
+        it = xi + rmul(rw["i"], hp)
+        ft = xf + rmul(rw["f"], hp)
+        zt = jnp.tanh(xz + rmul(rw["z"], hp))
+        ot = jax.nn.sigmoid(xo + rmul(rw["o"], hp))
+        mt = jnp.maximum(jax.nn.log_sigmoid(ft) + mp, it)
+        iw = jnp.exp(it - mt)
+        fw = jnp.exp(jax.nn.log_sigmoid(ft) + mp - mt)
+        ct = fw * cp + iw * zt
+        nt = fw * np_ + iw
+        ht = ot * ct / jnp.maximum(nt, 1.0)
+        return (ht, ct, nt, mt), ht
+
+    xs = tuple(jnp.moveaxis(wx[g], 1, 0) for g in ("i", "f", "z", "o"))
+    (hT, cT, nT, mT), hs = jax.lax.scan(step, (h0, c0, n0, m0), xs)
+    hout = jnp.moveaxis(hs, 0, 1).astype(x.dtype)               # (B,T,D)
+    hout = apply_norm(p["gn"], hout, "rms")
+    y = (jax.nn.silu(dense(p["ffn_gate"], hout)) * dense(p["ffn_up"], hout))
+    y = dense(p["ffn_down"], y)
+    new_state = {"h": hT.astype(x.dtype), "c": cT.astype(x.dtype),
+                 "n": nT.astype(x.dtype), "m": mT.astype(x.dtype)}
+    return y, new_state
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int, dtype):
+    d = cfg.d_model
+    return {s: (jnp.ones((batch, d), dtype) if s == "n"
+                else jnp.zeros((batch, d), dtype))
+            for s in ("h", "c", "n", "m")}
+
+
+def rglru_init_state(cfg: ArchConfig, batch: int, dtype):
+    dr = int(cfg.d_model * cfg.expand)
+    return {"h": jnp.zeros((batch, dr), dtype),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, dr), dtype)}

@@ -1,0 +1,5 @@
+from .serve_step import BatchedServer, ServeConfig, make_serve_step, sample
+from .retrieval import Datastore, KnnLMConfig, interpolate, knn_logits
+
+__all__ = ["BatchedServer", "ServeConfig", "make_serve_step", "sample",
+           "Datastore", "KnnLMConfig", "interpolate", "knn_logits"]

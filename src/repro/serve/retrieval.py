@@ -1,0 +1,85 @@
+"""kNN-LM retrieval — the paper's join as a first-class serving feature.
+
+Datastore: (keys (N, D) hidden states, values (N,) next tokens). At each
+decode step the batch of hidden states is the R side (|R| = batch) and the
+datastore is the S side of an `R ⋉ S` kNN join. The PGBJ machinery applies
+unchanged: Voronoi partitioning of S, θ/LB bounds, and (multi-device) the
+group shuffle — |R| ≪ |S| is exactly the regime where shipping S subsets
+instead of all of S pays (paper §3).
+
+p(token) = (1−λ) p_LM + λ softmax(-d_i²/τ) aggregated over retrieved
+neighbors (Khandelwal et al. 2020), with PGBJ supplying the neighbors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import JoinConfig, knn_join, plan_join
+from repro.core.api import JoinPlan
+from repro.kernels import distance_topk
+
+
+@dataclasses.dataclass
+class Datastore:
+    keys: np.ndarray       # (N, D) float32
+    values: np.ndarray     # (N,) int32 token ids
+    plan: Optional[JoinPlan] = None
+    config: Optional[JoinConfig] = None
+
+    @classmethod
+    def build(cls, keys, values, *, k: int = 8, n_pivots: int = 256,
+              n_groups: int = 8, seed: int = 0):
+        keys = np.ascontiguousarray(keys, np.float32)
+        cfg = JoinConfig(k=k, n_pivots=min(n_pivots, keys.shape[0]),
+                         n_groups=n_groups, grouping="geometric", seed=seed)
+        # S-side phase-1 runs once at build; R (queries) arrive per step.
+        return cls(keys=keys, values=np.asarray(values, np.int32),
+                   config=cfg)
+
+    def prepare(self, sample_queries: np.ndarray):
+        """Plan the join once against representative queries (pivots are
+        selected from R per the paper; serving uses a warmup query set)."""
+        self.plan = plan_join(sample_queries.astype(np.float32),
+                              self.keys, self.config)
+
+
+@dataclasses.dataclass(frozen=True)
+class KnnLMConfig:
+    lam: float = 0.25
+    tau: float = 10.0
+    k: int = 8
+
+
+def knn_logits(queries: np.ndarray, store: Datastore, kcfg: KnnLMConfig,
+               vocab: int, *, use_kernel: bool = True) -> np.ndarray:
+    """Retrieval distribution per query, (B, vocab) log-space."""
+    if store.plan is not None:
+        res = knn_join(queries.astype(np.float32), store.keys,
+                       k=kcfg.k, config=store.config)
+        d, idx = res.distances, res.indices
+    elif use_kernel:
+        d, idx = distance_topk(jnp.asarray(queries, jnp.float32),
+                               jnp.asarray(store.keys), kcfg.k)
+        d, idx = np.asarray(d), np.asarray(idx)
+    else:
+        raise ValueError("datastore not prepared")
+    w = jax.nn.softmax(jnp.asarray(-(d ** 2) / kcfg.tau), axis=-1)  # (B,k)
+    toks = store.values[idx]                                        # (B,k)
+    probs = np.zeros((queries.shape[0], vocab), np.float32)
+    np.add.at(probs, (np.arange(queries.shape[0])[:, None], toks),
+              np.asarray(w))
+    return np.log(np.maximum(probs, 1e-9))
+
+
+def interpolate(lm_logits: jnp.ndarray, knn_log: np.ndarray,
+                lam: float) -> jnp.ndarray:
+    """(1-λ)·p_LM + λ·p_kNN, done in probability space, returned as logits."""
+    p_lm = jax.nn.softmax(lm_logits, axis=-1)
+    p_knn = jnp.exp(jnp.asarray(knn_log))
+    p_knn = p_knn / jnp.maximum(p_knn.sum(-1, keepdims=True), 1e-9)
+    return jnp.log(jnp.maximum((1 - lam) * p_lm + lam * p_knn, 1e-9))

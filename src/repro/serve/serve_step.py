@@ -1,0 +1,97 @@
+"""Serving: prefill + decode steps and a batched request loop.
+
+``make_serve_step`` returns the two jitted stages the dry-run lowers:
+  prefill_step(params, tokens, cache, ...) → (logits_last, cache)
+  decode_step(params, token, cache, ...)   → (logits, cache)
+The continuous-batching loop (host-side) slots requests into fixed batch
+lanes — XLA-friendly static shapes; done lanes are refilled in place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import ModelOptions, forward, init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 8
+    cache_len: int = 2048
+    temperature: float = 0.0      # 0 → greedy
+    eos_id: int = -1              # -1 → run to max_new_tokens
+
+
+def make_serve_step(cfg: ArchConfig, scfg: ServeConfig,
+                    opts: ModelOptions = ModelOptions()):
+    def prefill_step(params, tokens, cache, **extra):
+        """tokens (B, T_prompt); fills cache, returns last-pos logits."""
+        logits, cache = forward(params, cfg, tokens, cache=cache,
+                                opts=opts, mode="prefill", **extra)
+        return logits[:, -1], cache
+
+    def decode_step(params, token, cache, **extra):
+        """token (B, 1); one step against the cache."""
+        logits, cache = forward(params, cfg, token, cache=cache,
+                                opts=opts, mode="decode", **extra)
+        return logits[:, -1], cache
+
+    return prefill_step, decode_step
+
+
+def sample(logits: jnp.ndarray, temperature: float, key) -> jnp.ndarray:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+class BatchedServer:
+    """Host-side continuous batching over fixed lanes (static shapes)."""
+
+    def __init__(self, cfg: ArchConfig, scfg: ServeConfig, params,
+                 opts: ModelOptions = ModelOptions(),
+                 logits_hook: Optional[Callable] = None):
+        self.cfg, self.scfg, self.opts = cfg, scfg, opts
+        self.params = params
+        self.prefill_step, self.decode_step = make_serve_step(cfg, scfg, opts)
+        self._jit_decode = jax.jit(self.decode_step)
+        self.logits_hook = logits_hook   # e.g. kNN-LM interpolation
+        self.key = jax.random.PRNGKey(0)
+
+    def generate(self, prompts: List[np.ndarray], max_new_tokens: int
+                 ) -> List[np.ndarray]:
+        """Generate for all prompts, scfg.batch lanes at a time."""
+        out: List[np.ndarray] = [None] * len(prompts)
+        queue = list(enumerate(prompts))
+        while queue:
+            wave = queue[: self.scfg.batch]
+            queue = queue[self.scfg.batch:]
+            ids = [i for i, _ in wave]
+            toks = [np.asarray(p, np.int32) for _, p in wave]
+            tmax = max(len(t) for t in toks)
+            b = len(wave)
+            pad = np.zeros((b, tmax), np.int32)
+            for r, t in enumerate(toks):
+                pad[r, tmax - len(t):] = t   # left-pad → aligned last pos
+            cache = init_cache(self.cfg, b,
+                               tmax + max_new_tokens, self.opts)
+            logits, cache = jax.jit(self.prefill_step)(
+                self.params, jnp.asarray(pad), cache)
+            gen = np.zeros((b, max_new_tokens), np.int32)
+            tok = None
+            for step in range(max_new_tokens):
+                if self.logits_hook is not None:
+                    logits = self.logits_hook(logits, cache)
+                self.key, sub = jax.random.split(self.key)
+                tok = sample(logits, self.scfg.temperature, sub)
+                gen[:, step] = np.asarray(tok)
+                logits, cache = self._jit_decode(
+                    self.params, tok[:, None], cache)
+            for r, i in enumerate(ids):
+                out[i] = gen[r]
+        return out

@@ -1,0 +1,196 @@
+"""Sharded optimizers: AdamW and Adafactor (factored second moment).
+
+States inherit the parameter sharding (ZeRO-3: every state leaf gets the
+same PartitionSpec as its param), so optimizer memory scales 1/N_devices.
+Adafactor exists because a 480B-param AdamW state (12 bytes/param) cannot
+fit a 256-chip v5e pod; factored second moments + no momentum brings the
+per-chip state under HBM (DESIGN.md §4.1, EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999            # adafactor: decay exponent handled below
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(
+        step < cfg.warmup_steps, warm,
+        cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def _clip(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    # cast the scale, not the grads: bf16·f32 would promote every leaf to a
+    # full-size f32 temporary (observed: 3×2.4 GiB on arctic's expert stacks)
+    return jax.tree_util.tree_map(
+        lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _maybe_chunk(upd, leaf_ndim: int, leading: int):
+    """Run a per-leaf update slice-by-slice over the scan-stack axis.
+
+    Stacked super-block params are single huge leaves (e.g. arctic experts:
+    35×128×7168×4864). Elementwise optimizer math on the whole leaf
+    materializes several f32 temporaries of full leaf size; lax.map over
+    the leading axis bounds temporaries to one layer's worth — exact same
+    result (the update has no cross-slice reduction)."""
+    if leaf_ndim >= 3 and leading > 1:
+        return lambda *args: jax.lax.map(lambda a: upd(*a), args)
+    return upd
+
+
+# ------------------------------------------------------------------ AdamW
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        # copy=True: with f32 params astype would alias the param buffer and
+        # double-donation (params + master) would crash at execute time
+        "master": jax.tree_util.tree_map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gnorm = _clip(grads, cfg.grad_clip)
+
+    def upd(g, mu, nu, master):
+        g = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mu_hat = mu / (1 - cfg.b1 ** step.astype(jnp.float32))
+        nu_hat = nu / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        master = master - lr * (delta + cfg.weight_decay * master)
+        return mu, nu, master
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    flat_ma = treedef.flatten_up_to(state["master"])
+    new_mu, new_nu, new_ma, new_p = [], [], [], []
+    for g, mu, nu, ma, p in zip(flat_g, flat_mu, flat_nu, flat_ma, flat_p):
+        fn = _maybe_chunk(upd, p.ndim, p.shape[0] if p.ndim else 1)
+        m, n, a = fn(g, mu, nu, ma)
+        new_mu.append(m)
+        new_nu.append(n)
+        new_ma.append(a)
+        new_p.append(a.astype(p.dtype))
+    unf = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+    return unf(new_p), {"mu": unf(new_mu), "nu": unf(new_nu),
+                        "master": unf(new_ma), "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# -------------------------------------------------------------- Adafactor
+def _factored_dims(shape):
+    """Last two non-trivial dims, or None if the tensor is ≤1D."""
+    if len(shape) < 2:
+        return None
+    return len(shape) - 2, len(shape) - 1
+
+
+def adafactor_init(params):
+    def make(p):
+        dims = _factored_dims(p.shape)
+        if dims is None:
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        r, c = dims
+        vr = jnp.zeros(p.shape[:c] + p.shape[c + 1:], jnp.float32)
+        vc = jnp.zeros(p.shape[:r] + p.shape[r + 1:], jnp.float32)
+        return {"vr": vr, "vc": vc}
+    return {
+        "v": jax.tree_util.tree_map(make, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(grads, state, params, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gnorm = _clip(grads, cfg.grad_clip)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        dims = _factored_dims(g.shape)
+        if dims is None:
+            nv = {"v": decay * v["v"] + (1 - decay) * g2}
+            prec = jax.lax.rsqrt(nv["v"] + 1e-30)
+        else:
+            r, c = dims
+            # vr: per-row stats (mean over the column dim); vc: per-column
+            vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=c)
+            vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=r)
+            nv = {"vr": vr, "vc": vc}
+            # standard factored preconditioner
+            r_ = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            prec = jax.lax.rsqrt(
+                jnp.expand_dims(r_, c) * jnp.expand_dims(vc, r) + 1e-30)
+        u = g * prec
+        # update clipping (Shazeer & Stern): RMS(u) <= 1
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u)
+        newp = (p.astype(jnp.float32)
+                - lr * (u + cfg.weight_decay * p.astype(jnp.float32)))
+        return newp.astype(p.dtype), nv
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_v = treedef.flatten_up_to(state["v"])
+    new_p, new_v = [], []
+    for g, v, p in zip(flat_g, flat_v, flat_p):
+        fn = _maybe_chunk(upd, p.ndim, p.shape[0] if p.ndim else 1)
+        np_, nv_ = fn(g, v, p)
+        new_p.append(np_)
+        new_v.append(nv_)
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            {"v": jax.tree_util.tree_unflatten(treedef, new_v), "step": step},
+            {"grad_norm": gnorm, "lr": lr})
+
+
+def make_optimizer(cfg: OptConfig) -> Tuple[Callable, Callable]:
+    if cfg.name == "adamw":
+        return adamw_init, lambda g, s, p: adamw_update(g, s, p, cfg)
+    if cfg.name == "adafactor":
+        return adafactor_init, lambda g, s, p: adafactor_update(g, s, p, cfg)
+    raise ValueError(cfg.name)

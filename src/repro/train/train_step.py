@@ -1,0 +1,88 @@
+"""Training step: loss, gradient accumulation, remat — pjit-ready.
+
+Memory contract: the per-microbatch activation footprint times one layer
+(remat) is what lives in HBM; ``accum`` scales the global batch without
+scaling memory. The dry-run memory_analysis validates this per arch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import ModelOptions, forward
+from .optimizer import OptConfig, make_optimizer
+
+Batch = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    accum: int = 1               # gradient-accumulation microbatches
+    z_loss: float = 1e-4         # logit normalizer regularizer (PaLM-style)
+    # f32 accumulation is the default; bf16 halves the accumulator HBM for
+    # models whose f32 grads alone blow the per-chip budget (arctic-480b)
+    accum_dtype: Any = jnp.float32
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_loss: float = 0.0):
+    """Mean token CE (+ z-loss). logits (B,T,V) f32, labels (B,T) int32.
+    Labels < 0 are masked."""
+    mask = labels >= 0
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    denom = jnp.maximum(mask.sum(), 1)
+    return (nll * mask).sum() / denom
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Batch, opts: ModelOptions,
+            z_loss: float = 0.0):
+    extra = {k: batch[k] for k in ("enc_frames", "vision_embeds", "positions")
+             if k in batch}
+    logits, _ = forward(params, cfg, batch["tokens"], opts=opts,
+                        mode="train", **extra)
+    return cross_entropy(logits, batch["labels"], z_loss)
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig,
+                    opts: ModelOptions = ModelOptions()):
+    """Returns train_step(params, opt_state, batch) → (params, state, metrics).
+
+    ``batch["tokens"]`` is (accum, mb, T) when tcfg.accum > 1 — the scan
+    accumulates grads in f32 before one optimizer application.
+    """
+    opt_init, opt_update = make_optimizer(tcfg.opt)
+
+    def train_step(params, opt_state, batch: Batch):
+        if tcfg.accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, cfg, batch, opts, tcfg.z_loss)
+        else:
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(
+                    params, cfg, mb, opts, tcfg.z_loss)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(tcfg.accum_dtype), acc, grads)
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, tcfg.accum_dtype), params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), batch)
+            grads = jax.tree_util.tree_map(lambda g: g / tcfg.accum, grads)
+            loss = loss / tcfg.accum
+        new_params, new_state, om = opt_update(grads, opt_state, params)
+        return new_params, new_state, {"loss": loss, **om}
+
+    return opt_init, train_step

@@ -1,0 +1,7 @@
+import os
+
+# Tests run on the real host device topology (1 CPU device) — the 512-way
+# dry-run device forcing is strictly scoped to launch/dryrun.py and the
+# subprocess-based distributed tests. Do NOT set
+# xla_force_host_platform_device_count here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,81 @@
+"""Distributed (shard_map) join — runs in a subprocess with 8 forced host
+devices so the main pytest process keeps the real (1-device) topology."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax
+    from repro.core import JoinConfig, brute_force_knn, plan_join
+    from repro.core.distributed import build_shuffle_spec, distributed_knn_join
+    from repro.distributed.fault import regroup
+
+    rng = np.random.default_rng(7)
+    R = rng.normal(size=(400, 5)).astype(np.float32) * 2
+    S = rng.normal(size=(700, 5)).astype(np.float32) * 2
+    k = 5
+    out = {}
+
+    cfg = JoinConfig(k=k, n_pivots=32, n_groups=8, grouping="geometric")
+    plan = plan_join(R, S, cfg)
+    bd, bi = brute_force_knn(R, S, k)
+
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    res = distributed_knn_join(R, S, plan, mesh, axis="data")
+    out["single_axis_exact"] = bool(np.allclose(res.distances, bd, atol=1e-3))
+    out["replicas"] = int(res.stats.replicas_s)
+
+    mesh2 = jax.make_mesh((4, 2), ("data", "model"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    res2 = distributed_knn_join(R, S, plan, mesh2, axis=("data", "model"))
+    out["two_axis_exact"] = bool(np.allclose(res2.distances, bd, atol=1e-3))
+
+    # elastic: shrink to 4 groups, run on a 4-device submesh
+    plan4 = regroup(plan, 4)
+    mesh4 = jax.make_mesh((4,), ("data",),
+                          axis_types=(jax.sharding.AxisType.Auto,))
+    res4 = distributed_knn_join(R, S, plan4, mesh4, axis="data")
+    out["shrunk_exact"] = bool(np.allclose(res4.distances, bd, atol=1e-3))
+
+    # capacity model must bound actual packing (Thm 7 load-bearing)
+    spec = build_shuffle_spec(plan, 8)
+    out["caps"] = [spec.cap_r_send, spec.cap_s_send]
+
+    # SPMD phase-1 (psum/pmin/pmax-merged summaries) == host phase-1
+    from repro.core import assign_and_summarize, select_pivots
+    from repro.core.distributed import distributed_phase1
+    pivots = select_pivots(S, 16, "random", seed=3)
+    pd_, dd_, td_ = distributed_phase1(S, pivots, mesh, k=4)
+    ph_, dh_, th_ = assign_and_summarize(S, pivots, k=4)
+    fin = np.isfinite(th_.knn_dists)
+    out["phase1_exact"] = bool(
+        (pd_ == ph_).all() and np.allclose(dd_, dh_, atol=1e-5)
+        and (td_.counts == th_.counts).all()
+        and np.allclose(td_.knn_dists[fin], th_.knn_dists[fin], atol=1e-5))
+    print(json.dumps(out))
+""")
+
+
+def test_distributed_join_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["single_axis_exact"]
+    assert out["two_axis_exact"]
+    assert out["shrunk_exact"]
+    assert out["phase1_exact"]
+    assert out["caps"][0] >= 1 and out["caps"][1] >= 1
+    assert out["replicas"] >= 700  # self+replication ≥ |S| shipped once

@@ -1,0 +1,103 @@
+"""Fault tolerance: retries, speculation, elastic regrouping."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import JoinConfig, brute_force_knn, knn_join, plan_join
+from repro.distributed.fault import (
+    GroupExecutor, grow_groups, regroup, shrink_groups)
+
+
+def test_retry_on_transient_failure():
+    fails = {3: 2, 5: 1}   # group -> number of times to fail first
+    lock = threading.Lock()
+
+    def group_fn(g):
+        with lock:
+            if fails.get(g, 0) > 0:
+                fails[g] -= 1
+                raise RuntimeError(f"injected failure in group {g}")
+        return g * 10
+
+    ex = GroupExecutor(max_retries=3, speculate=False, max_workers=2)
+    runs = ex.run(group_fn, list(range(8)))
+    assert all(r.done for r in runs.values())
+    assert runs[3].result == 30 and runs[3].attempts >= 3
+    assert runs[5].attempts >= 2
+
+
+def test_permanent_failure_raises():
+    def group_fn(g):
+        if g == 2:
+            raise RuntimeError("dead node")
+        return g
+
+    ex = GroupExecutor(max_retries=1, speculate=False, max_workers=2)
+    with pytest.raises(RuntimeError):
+        ex.run(group_fn, list(range(4)))
+
+
+def test_speculative_execution_on_straggler():
+    """A straggling group gets a backup attempt; first finisher wins."""
+    slow_started = threading.Event()
+
+    def group_fn(g):
+        if g == 0 and not slow_started.is_set():
+            slow_started.set()
+            time.sleep(3.0)         # straggler's first attempt
+        return g
+
+    ex = GroupExecutor(max_retries=2, speculate=True, speculate_after=0.5,
+                       max_workers=4)
+    t0 = time.monotonic()
+    runs = ex.run(group_fn, list(range(6)))
+    elapsed = time.monotonic() - t0
+    assert all(r.done for r in runs.values())
+    assert runs[0].speculated
+    assert elapsed < 2.9, "backup task should beat the 3s straggler"
+
+
+def test_group_results_idempotent():
+    """Re-executing a group yields identical results (MapReduce contract)."""
+    rng = np.random.default_rng(0)
+    r = rng.normal(size=(200, 4)).astype(np.float32)
+    s = rng.normal(size=(300, 4)).astype(np.float32)
+    cfg = JoinConfig(k=4, n_pivots=16, n_groups=4)
+    a = knn_join(r, s, config=cfg)
+    b = knn_join(r, s, config=cfg)
+    np.testing.assert_array_equal(a.indices, b.indices)
+
+
+@pytest.mark.parametrize("new_n", [2, 3])
+def test_shrink_groups_exact(new_n):
+    rng = np.random.default_rng(1)
+    r = rng.normal(size=(250, 5)).astype(np.float32)
+    s = rng.normal(size=(400, 5)).astype(np.float32)
+    plan = plan_join(r, s, JoinConfig(k=5, n_pivots=20, n_groups=6))
+    plan2 = shrink_groups(plan, new_n)
+    assert plan2.n_groups == new_n
+    res = knn_join(r, s, config=plan2.config, plan=plan2)
+    bd, _ = brute_force_knn(r, s, 5)
+    np.testing.assert_allclose(res.distances, bd, atol=1e-3)
+
+
+@pytest.mark.parametrize("new_n", [8, 12])
+def test_grow_groups_exact(new_n):
+    rng = np.random.default_rng(2)
+    r = rng.normal(size=(250, 5)).astype(np.float32)
+    s = rng.normal(size=(400, 5)).astype(np.float32)
+    plan = plan_join(r, s, JoinConfig(k=5, n_pivots=20, n_groups=4))
+    plan2 = grow_groups(plan, new_n)
+    assert plan2.n_groups >= plan.n_groups
+    res = knn_join(r, s, config=plan2.config, plan=plan2)
+    bd, _ = brute_force_knn(r, s, 5)
+    np.testing.assert_allclose(res.distances, bd, atol=1e-3)
+
+
+def test_regroup_noop():
+    rng = np.random.default_rng(3)
+    r = rng.normal(size=(100, 3)).astype(np.float32)
+    plan = plan_join(r, r, JoinConfig(k=3, n_pivots=8, n_groups=4))
+    assert regroup(plan, 4) is plan

@@ -1,0 +1,57 @@
+"""The roofline accounting must scale loop bodies by trip counts."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze
+
+
+def test_scan_flops_scaled_by_trip_count():
+    n, trips = 128, 7
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=trips)
+        return out
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((n, n), jnp.float32)).compile()
+    totals = analyze(c.as_text())
+    expect = trips * 2 * n * n * n
+    assert abs(totals.flops - expect) / expect < 0.01, totals.flops
+    # raw cost_analysis counts the body once — the bug this module fixes
+    raw = c.cost_analysis()["flops"]
+    assert raw < expect / 2
+
+
+def test_nested_scan():
+    n, inner, outer = 64, 3, 5
+
+    def f(x, w):
+        def obody(c, _):
+            def ibody(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(ibody, c, None, length=inner)
+            return c2, None
+        out, _ = jax.lax.scan(obody, x, None, length=outer)
+        return out
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((n, n), jnp.float32)).compile()
+    totals = analyze(c.as_text())
+    expect = outer * inner * 2 * n ** 3
+    assert abs(totals.flops - expect) / expect < 0.01, totals.flops
+
+
+def test_plain_matmul():
+    m, k, n = 32, 48, 64
+    c = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32)).compile()
+    totals = analyze(c.as_text())
+    assert abs(totals.flops - 2 * m * k * n) / (2 * m * k * n) < 0.01
+    # bytes: at least operands + result once
+    assert totals.bytes >= 4 * (m * k + k * n + m * n)

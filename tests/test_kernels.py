@@ -1,0 +1,94 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in interpret
+mode (the kernel body runs in Python on CPU; on TPU the same body runs
+compiled)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("nr,ns,dim,k", [
+    (64, 128, 8, 4),
+    (100, 257, 10, 7),     # non-tile-aligned
+    (128, 512, 2, 10),     # paper's OSM dimensionality
+    (33, 70, 54, 5),       # forest-width features
+    (16, 2048, 16, 25),    # many tiles, k large
+])
+def test_distance_topk_shapes(nr, ns, dim, k):
+    rng = np.random.default_rng(nr * ns)
+    r = jnp.asarray(rng.normal(size=(nr, dim)).astype(np.float32))
+    s = jnp.asarray(rng.normal(size=(ns, dim)).astype(np.float32))
+    d, i = ops.distance_topk(r, s, k, bm=32, bn=64, impl="interpret")
+    rd, ri = ref.distance_topk_ref(r, s, k)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), atol=1e-4)
+    assert (np.asarray(i) == np.asarray(ri)).mean() > 0.999
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_distance_topk_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    r = jnp.asarray(rng.normal(size=(48, 8))).astype(dtype)
+    s = jnp.asarray(rng.normal(size=(96, 8))).astype(dtype)
+    d, i = ops.distance_topk(r, s, 5, bm=16, bn=32, impl="interpret")
+    rd, ri = ref.distance_topk_ref(r, s, 5)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), atol=tol)
+
+
+def test_distance_topk_visit_mask():
+    """Masked-out tiles must not contribute (bound-pruned schedule)."""
+    from repro.kernels.distance_topk import distance_topk_pallas
+    rng = np.random.default_rng(1)
+    r = jnp.asarray(rng.normal(size=(32, 4)).astype(np.float32))
+    s_near = rng.normal(size=(32, 4)).astype(np.float32)
+    s_far = s_near + 100.0
+    s = jnp.asarray(np.concatenate([s_near, s_far]))
+    mask = jnp.asarray([[1, 0]], jnp.int8)   # skip the far tile
+    d, i = distance_topk_pallas(r, s, 3, visit_mask=mask, bm=32, bn=32,
+                                interpret=True)
+    rd, ri = ref.distance_topk_ref(r, jnp.asarray(s_near), 3)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), atol=1e-4)
+    assert (np.asarray(i) < 32).all()
+
+
+@pytest.mark.parametrize("n,m,dim", [(100, 16, 6), (257, 50, 12),
+                                     (64, 7, 3)])
+def test_assign(n, m, dim):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32))
+    p = jnp.asarray(rng.normal(size=(m, dim)).astype(np.float32))
+    pid, dist = ops.assign(x, p, bm=32, bp=8, impl="interpret")
+    rpid, rdist = ref.assign_ref(x, p)
+    assert (np.asarray(pid) == np.asarray(rpid)).all()
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist), atol=1e-5)
+
+
+@pytest.mark.parametrize("nq,nk,h,kvh,window,causal", [
+    (64, 64, 4, 4, None, True),
+    (64, 64, 4, 1, None, True),      # MQA
+    (32, 96, 8, 2, None, True),      # GQA + decode-style offset
+    (64, 64, 4, 2, 16, True),        # local window
+    (48, 48, 2, 2, None, False),     # bidirectional (encoder)
+])
+def test_flash_attention(nq, nk, h, kvh, window, causal):
+    rng = np.random.default_rng(nq + nk)
+    q = jnp.asarray(rng.normal(size=(2, nq, h, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, nk, kvh, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, nk, kvh, 16)).astype(np.float32))
+    o = ops.flash_attention(q, k, v, causal=causal, window=window,
+                            bq=16, bk=16, impl="interpret")
+    ro = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ro), atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(size=(1, 32, 2, 8))).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 32, 2, 8))).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 32, 2, 8))).astype(jnp.bfloat16)
+    o = ops.flash_attention(q, k, v, bq=16, bk=16, impl="interpret")
+    ro = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ro, np.float32), atol=5e-2)

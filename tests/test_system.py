@@ -1,0 +1,66 @@
+"""End-to-end behaviour tests for the paper's system."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import JoinConfig, brute_force_knn, hbrj_join, knn_join
+from repro.data import expand_dataset, forest_like, osm_like
+
+
+def test_forest_selfjoin_end_to_end():
+    """Paper §6 default setup in miniature: Forest-like self-join, k=10,
+    random pivots + geometric grouping — exact result, lower shuffle and
+    fewer computed pairs than H-BRJ. Paper-like regime: replication α is
+    scale-dependent (α ≈ N at toy sizes — Fig 10's worst case), so the
+    shuffle comparison uses the paper's 36-reducer setting at the largest
+    size that stays fast on CPU."""
+    data = forest_like(8000, 10, seed=0)
+    k = 10
+    cfg = JoinConfig(k=k, n_pivots=256, n_groups=36, grouping="geometric",
+                     pivot_strategy="random")
+    pgbj = knn_join(data, data, config=cfg)
+    sample = np.random.default_rng(0).choice(8000, 400, replace=False)
+    bd, _ = brute_force_knn(data[sample], data, k)
+    np.testing.assert_allclose(pgbj.distances[sample], bd, atol=1e-2)
+
+    hbrj = hbrj_join(data, data, k, n_reducers=36)
+    # Fig 8(c)/11(c): PGBJ shuffles less than H-BRJ
+    assert pgbj.stats.shuffle_tuples < hbrj.stats.shuffle_tuples
+    # Fig 7(a)/11(b): selectivity below brute force and below H-BRJ
+    assert pgbj.stats.selectivity < 1.0
+    assert pgbj.stats.pairs_computed < hbrj.stats.pairs_computed
+
+
+def test_osm_selfjoin_low_dim():
+    """2-d OSM-like data — where Voronoi pruning shines (paper Fig 9)."""
+    data = osm_like(2000, seed=1)
+    cfg = JoinConfig(k=10, n_pivots=128, n_groups=9)
+    res = knn_join(data, data, config=cfg)
+    bd, _ = brute_force_knn(data, data, 10)
+    np.testing.assert_allclose(res.distances, bd, atol=1e-3)
+    # low-dim clustered data: strong pruning expected
+    assert res.stats.selectivity < 0.30
+
+
+def test_scalability_expansion_keeps_exactness():
+    base = forest_like(400, 6, seed=2)
+    for t in (2, 3):
+        data = expand_dataset(base, t, seed=2)
+        res = knn_join(data, data, k=5,
+                       config=JoinConfig(k=5, n_pivots=48, n_groups=6))
+        bd, _ = brute_force_knn(data, data, 5)
+        np.testing.assert_allclose(res.distances, bd, atol=1e-2)
+
+
+def test_knn_join_powers_kmeans_iteration():
+    """The paper motivates kNN join via k-means/outlier detection: one
+    Lloyd iteration expressed as a 1-NN join against the centroids."""
+    rng = np.random.default_rng(3)
+    centers = rng.uniform(-10, 10, (5, 4)).astype(np.float32)
+    pts = (centers[rng.integers(0, 5, 600)]
+           + rng.normal(size=(600, 4)).astype(np.float32) * 0.3)
+    res = knn_join(pts, centers, k=1,
+                   config=JoinConfig(k=1, n_pivots=5, n_groups=2))
+    assign = res.indices[:, 0]
+    d = ((pts[:, None] - centers[None]) ** 2).sum(-1)
+    np.testing.assert_array_equal(assign, d.argmin(1))
