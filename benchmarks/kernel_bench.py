@@ -1,7 +1,14 @@
 """Kernel micro-benchmarks: jnp reference path wall-time on host + the
 roofline-relevant derived quantities. (Pallas runs interpret-mode on CPU,
 so wall-time here benchmarks the *reference*; kernel perf is assessed
-structurally via the dry-run HLO — see EXPERIMENTS.md §Roofline.)"""
+structurally via the dry-run HLO — see EXPERIMENTS.md §Roofline.)
+
+``distance_topk_gather_bench`` measures what the pruned-schedule path is
+for: on clustered data the compacted schedule visits a fraction of the
+dense tile grid (the Figure-9 "pruning power" as executed tiles, not
+counters), and ``pack_send_buffers_bench`` pits the vectorized
+lexsort+scatter shuffle packing against the seed's per-row Python loop.
+"""
 from __future__ import annotations
 
 import time
@@ -64,4 +71,116 @@ def flash_attention_bench() -> List[Row]:
     return rows
 
 
-ALL = [distance_topk_bench, assign_bench, flash_attention_bench]
+def _clustered(n, dim, seed, n_centers=16, centers_seed=42):
+    """Shared cluster centers for R and S — the regime where the paper's
+    bounds bite (kNN radius << dataset diameter)."""
+    centers = np.random.default_rng(centers_seed).uniform(
+        -20, 20, (n_centers, dim)).astype(np.float32)
+    rng = np.random.default_rng(seed)
+    who = rng.integers(0, n_centers, n)
+    return (centers[who] + rng.normal(size=(n, dim))).astype(np.float32)
+
+
+def distance_topk_gather_bench(n: int = 20000) -> List[Row]:
+    """Dense vs pruned-schedule reducer on clustered data (host engines —
+    identical tile arithmetic, so the wall-time ratio isolates the
+    schedule; on TPU the same schedule also skips the DMA)."""
+    from repro.core import JoinConfig, plan_join
+    from repro.core.join import join_group_dense, join_group_gather
+    from repro.core.schedule import build_tile_schedule
+
+    n_r, n_s, dim, k = n, 2 * n, 8, 10
+    bm, bn = 64, 256
+    r = _clustered(n_r, dim, seed=0)
+    s = _clustered(n_s, dim, seed=1)
+    cfg = JoinConfig(k=k, n_pivots=24, n_groups=1, seed=3,
+                     tile_r=bm, tile_s=bn)
+    plan = plan_join(r, s, cfg)
+
+    ord_r = np.argsort(plan.r_part, kind="stable")
+    rr = np.ascontiguousarray(r[ord_r])
+    ord_s = np.lexsort((plan.s_dist, plan.s_part))
+    ss = np.ascontiguousarray(s[ord_s])
+    sids = np.arange(n_s, dtype=np.int64)[ord_s]
+
+    sched = build_tile_schedule(
+        rr, plan.r_part[ord_r], plan.s_part[ord_s], plan.s_dist[ord_s],
+        plan.pivots, plan.pivd, plan.theta, bm=bm, bn=bn,
+        knn_dists=plan.t_s.knn_dists, k=k)
+    tiles_dense = sched.nr_tiles * sched.ns_tiles
+
+    t0 = time.perf_counter()
+    dd, di = join_group_dense(rr, ss, sids, k, tile_r=bm, tile_s=bn)
+    t_dense = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    gd, gi = join_group_gather(rr, ss, sids, k, sched)
+    t_gather = time.perf_counter() - t0
+    if not np.allclose(gd, dd, atol=1e-3):
+        raise AssertionError("gather schedule lost true neighbors")
+
+    return [
+        Row("kernel_distance_topk_dense_vs_gather",
+            f"{n_r}x{n_s}x{dim},k={k},bm={bm},bn={bn}", t_gather,
+            {"dense_s": t_dense, "gather_s": t_gather,
+             "speedup": t_dense / t_gather,
+             "tiles_dense": float(tiles_dense),
+             "tiles_gather": float(sched.n_visits),
+             "visit_frac": sched.density}),
+    ]
+
+
+def _pack_send_buffers_loop(rows, aux, dest, src_of_row, n_src, n_dst, cap):
+    """The seed's per-row packing loop, kept as the microbench baseline."""
+    nbuf = {k: np.zeros((n_src, n_dst, cap) + v.shape[1:], v.dtype)
+            for k, v in aux.items()}
+    buf = np.zeros((n_src, n_dst, cap, rows.shape[1]), rows.dtype)
+    valid = np.zeros((n_src, n_dst, cap), bool)
+    slot = np.zeros((n_src, n_dst), np.int64)
+    for i in range(rows.shape[0]):
+        s, d = src_of_row[i], dest[i]
+        j = slot[s, d]
+        buf[s, d, j] = rows[i]
+        for k, v in aux.items():
+            nbuf[k][s, d, j] = v[i]
+        valid[s, d, j] = True
+        slot[s, d] = j + 1
+    return buf, nbuf, valid
+
+
+def pack_send_buffers_bench(n: int = 100_000) -> List[Row]:
+    """Shuffle-packing throughput: vectorized lexsort+scatter vs the
+    per-row loop, at n shuffled rows (dim=8, 8×8 device edges)."""
+    from repro.core.distributed import _pack_send_buffers
+
+    rng = np.random.default_rng(0)
+    n_dev, dim = 8, 8
+    rows = rng.normal(size=(n, dim)).astype(np.float32)
+    aux = {"id": np.arange(n, dtype=np.int32)}
+    dest = rng.integers(0, n_dev, n)
+    src = (np.arange(n) * n_dev) // n
+    cnt = np.zeros((n_dev, n_dev), np.int64)
+    np.add.at(cnt, (src, dest), 1)
+    cap = int(cnt.max())
+
+    t0 = time.perf_counter()
+    vb, vn, vv = _pack_send_buffers(rows, aux, dest, src, n_dev, n_dev, cap)
+    t_vec = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    lb, ln, lv = _pack_send_buffers_loop(rows, aux, dest, src,
+                                         n_dev, n_dev, cap)
+    t_loop = time.perf_counter() - t0
+    if not ((vb == lb).all() and (vv == lv).all()
+            and (vn["id"] == ln["id"]).all()):
+        raise AssertionError("vectorized packing diverged from the loop")
+
+    return [
+        Row("kernel_pack_send_buffers", f"n={n},edges={n_dev}x{n_dev}",
+            t_vec,
+            {"loop_s": t_loop, "vectorized_s": t_vec,
+             "speedup": t_loop / t_vec,
+             "rows_per_s": n / t_vec}),
+    ]
+
+
+ALL = [distance_topk_bench, distance_topk_gather_bench,
+       pack_send_buffers_bench, assign_bench, flash_attention_bench]

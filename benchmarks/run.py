@@ -1,5 +1,8 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV;
+# ``--json PATH`` additionally records the rows as a JSON list.
 import argparse
+import inspect
+import json
 import sys
 import traceback
 
@@ -10,6 +13,8 @@ def main() -> None:
                     help="substring filter on benchmark function names")
     ap.add_argument("--fast", action="store_true",
                     help="smaller sizes (CI mode)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON records to PATH")
     args = ap.parse_args()
 
     from . import kernel_bench, paper_tables, roofline
@@ -21,11 +26,11 @@ def main() -> None:
 
     print(HEADER)
     failures = 0
+    records = []
     for fn in fns:
         try:
             kwargs = {}
-            if args.fast and fn.__module__.endswith("paper_tables"):
-                import inspect
+            if args.fast:
                 sig = inspect.signature(fn)
                 if "n" in sig.parameters:
                     kwargs["n"] = 3000
@@ -33,10 +38,16 @@ def main() -> None:
                     kwargs["base_n"] = 1500
             for row in fn(**kwargs):
                 print(row.csv(), flush=True)
+                records.append({"bench": row.bench, "params": row.params,
+                                "seconds": row.seconds, **row.derived})
         except Exception:  # noqa: BLE001 — keep the suite going
             failures += 1
             print(f"# FAILED {fn.__name__}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(records, fh, indent=2)
+            fh.write("\n")
     if failures:
         sys.exit(1)
 

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core import JoinConfig, brute_force_knn, plan_join
 from repro.core.distributed import distributed_knn_join
+from repro.core.jax_compat import make_mesh
 from repro.data import forest_like
 from repro.distributed.fault import GroupExecutor, regroup
 
@@ -26,8 +27,7 @@ def main():
     S = forest_like(6000, 8, seed=1)
     cfg = JoinConfig(k=10, n_pivots=64, n_groups=n_dev)
     plan = plan_join(R, S, cfg)
-    mesh = jax.make_mesh((n_dev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n_dev,), ("data",))
     res = distributed_knn_join(R, S, plan, mesh)
     bd, _ = brute_force_knn(R, S, 10)
     assert np.allclose(res.distances, bd, atol=1e-2)
@@ -37,8 +37,7 @@ def main():
     # elastic: re-run on half the devices without re-planning phase 1
     half = n_dev // 2
     plan_h = regroup(plan, half)
-    mesh_h = jax.make_mesh((half,), ("data",),
-                           axis_types=(jax.sharding.AxisType.Auto,))
+    mesh_h = make_mesh((half,), ("data",))
     res_h = distributed_knn_join(R, S, plan_h, mesh_h)
     assert np.allclose(res_h.distances, bd, atol=1e-2)
     print(f"elastic shrink {n_dev}→{half} devices, still exact ✓")

@@ -9,6 +9,7 @@ from .grouping import (
     geometric_grouping, greedy_grouping, group_partitions,
     replication_count_exact, replication_count_partitions)
 from .api import knn_join, plan_join, JoinPlan
+from .schedule import TileSchedule, build_tile_schedule, compact_visit_mask
 from .metrics import pairwise_dist
 from .baselines import brute_force_knn, hbrj_join, pbj_join
 
@@ -20,6 +21,8 @@ __all__ = [
     "hyperplane_distances", "ring_bounds",
     "geometric_grouping", "greedy_grouping", "group_partitions",
     "replication_count_exact", "replication_count_partitions",
-    "knn_join", "plan_join", "JoinPlan", "pairwise_dist",
+    "knn_join", "plan_join", "JoinPlan",
+    "TileSchedule", "build_tile_schedule", "compact_visit_mask",
+    "pairwise_dist",
     "brute_force_knn", "hbrj_join", "pbj_join",
 ]

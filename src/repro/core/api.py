@@ -17,9 +17,10 @@ import numpy as np
 
 from . import bounds as B
 from . import grouping as G
-from .join import join_group_dense, join_group_pruned
+from .join import join_group_dense, join_group_gather, join_group_pruned
 from .partition import assign_and_summarize
 from .pivots import select_pivots
+from .schedule import build_tile_schedule
 from .types import JoinConfig, JoinResult, JoinStats, SummaryTable
 
 __all__ = ["knn_join", "JoinPlan", "plan_join"]
@@ -118,6 +119,7 @@ def knn_join(
     out_i = np.full((r.shape[0], config.k), -1, np.int64)
     s_ids_all = np.arange(s.shape[0], dtype=np.int64)
     group_of_r = plan.group_of_r()
+    reducer = config.resolved_reducer
     for g in range(plan.n_groups):
         r_sel = np.where(group_of_r == g)[0]
         if r_sel.size == 0:
@@ -125,7 +127,10 @@ def knn_join(
         s_mask = plan.s_replica_mask(g)
         stats.replicas_s += int(s_mask.sum())
         s_sel = np.where(s_mask)[0]
-        if config.use_tile_pruning:
+        if reducer == "gather":
+            gd, gi = _join_group_gather(
+                r, s, r_sel, s_sel, s_ids_all, plan, config, stats)
+        elif reducer == "pruned":
             gd, gi = join_group_pruned(
                 r[r_sel], plan.r_part[r_sel],
                 s[s_sel], plan.s_part[s_sel], plan.s_dist[s_sel],
@@ -142,3 +147,50 @@ def knn_join(
         out_d[r_sel] = gd
         out_i[r_sel] = gi
     return JoinResult(indices=out_i, distances=out_d, stats=stats)
+
+
+def _join_group_gather(r, s, r_sel, s_sel, s_ids_all, plan, config, stats):
+    """One group through the pruned-schedule path.
+
+    Queries are sorted by home partition and S replicas by (partition,
+    pivot distance) so tiles are partition-coherent — that layout is what
+    makes the tile-granular ring bounds bite. On TPU the compacted
+    schedule feeds the scalar-prefetch Pallas kernel (pruned tiles never
+    DMA); elsewhere its host twin walks the identical schedule.
+    """
+    order_r = np.argsort(plan.r_part[r_sel], kind="stable")
+    rr = np.ascontiguousarray(r[r_sel][order_r])
+    rp = plan.r_part[r_sel][order_r]
+    order_s = np.lexsort((plan.s_dist[s_sel], plan.s_part[s_sel]))
+    ss = np.ascontiguousarray(s[s_sel][order_s])
+    sp = plan.s_part[s_sel][order_s]
+    sd = plan.s_dist[s_sel][order_s]
+    sids = s_ids_all[s_sel][order_s]
+
+    sched = build_tile_schedule(
+        rr, rp, sp, sd, plan.pivots, plan.pivd, plan.theta,
+        bm=config.tile_r, bn=config.tile_s, metric=config.metric,
+        knn_dists=plan.t_s.knn_dists, k=config.k, stats=stats)
+
+    from repro.kernels import ops
+    if config.metric == "l2" and ops.use_pallas():
+        import jax.numpy as jnp
+        d, i_local = ops.distance_topk(
+            jnp.asarray(rr), jnp.asarray(ss), config.k,
+            schedule=jnp.asarray(sched.schedule),
+            counts=jnp.asarray(sched.counts),
+            bm=config.tile_r, bn=config.tile_s, impl="gather")
+        gd = np.asarray(d)
+        il = np.asarray(i_local)
+        gi = np.where(il >= 0, sids[np.clip(il, 0, len(sids) - 1)], -1)
+        stats.tiles_total += sched.nr_tiles * sched.ns_tiles
+        stats.tiles_visited += sched.n_visits
+        stats.pairs_computed += sched.n_visits * config.tile_r * config.tile_s
+    else:
+        gd, gi = join_group_gather(
+            rr, ss, sids, config.k, sched, stats=stats,
+            metric=config.metric)
+    # undo the query sort
+    inv = np.empty_like(order_r)
+    inv[order_r] = np.arange(order_r.size)
+    return gd[inv], gi[inv]

@@ -6,19 +6,29 @@ Stage layout (DESIGN.md §2):
                      computes partial summary tables; ``psum/pmin/pmax``
                      merge them (the paper's job-1 map + stat merge).
   planning (host)  — θ, LB, grouping, **capacity** from the cost model
-                     (Thm 7): the static shapes of the shuffle buffers.
+                     (Thm 7): the static shapes of the shuffle buffers —
+                     plus the per-device pruned tile **schedules**
+                     (core.schedule) lowered from Cor. 1 / Thm 2.
   phase 2a (SPMD)  — the shuffle: each device packs (group, slot)-addressed
                      send buffers and a single ``all_to_all`` delivers every
                      group's R rows and replicated S rows (paper's job-2
-                     map + shuffle).
-  phase 2b (SPMD)  — per-device reducer: blocked top-k join over the
-                     received buffers (paper's job-2 reduce), optionally via
-                     the Pallas kernel on TPU.
+                     map + shuffle). Packing is a vectorized lexsort +
+                     cumulative-rank scatter; rows are pre-sorted by
+                     (partition, pivot distance) so received tiles stay
+                     partition-coherent and the schedules bite.
+  phase 2b (SPMD)  — per-device reducer: schedule-driven top-k join over
+                     the received buffers (paper's job-2 reduce) keeping
+                     the running top-k as a *sorted run*
+                     (kernels.sorted_merge), as a two-level ``lax.scan``
+                     everywhere and the scalar-prefetch Pallas gather
+                     kernel on TPU — pruned tiles are never touched.
 
 Static-shape contract: MapReduce shuffles ragged lists; XLA cannot. The
 capacities are derived *before* the shuffle from LB/T_S — this is exactly
 the paper's replication cost model (Eq. 10) made load-bearing. Padding
-rows carry ``valid=False`` and are masked in the join.
+rows carry ``valid=False`` and are masked in the join; schedule rows are
+padded by repeating their last entry so dead steps re-touch a resident
+tile instead of streaming a new one.
 """
 from __future__ import annotations
 
@@ -31,7 +41,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..kernels.sorted_merge import merge_sorted_runs, next_pow2, tile_topk
 from .api import JoinPlan
+from .jax_compat import pvary, shard_map
+from .schedule import build_tile_schedule
 from .types import JoinResult, JoinStats
 
 __all__ = ["DistributedJoinSpec", "build_shuffle_spec", "distributed_knn_join"]
@@ -83,67 +96,129 @@ def _pack_send_buffers(rows, aux, dest, src_of_row, n_src, n_dst, cap):
 
     ``dest`` may contain a row multiple times (S replication); callers
     pre-expand. aux is a dict of per-row int/float arrays packed alongside.
+
+    Vectorized: a stable lexsort groups rows by (src, dst), the rank of
+    each row inside its bucket is its slot, and one fancy-indexed scatter
+    lands everything — no per-row Python. Input order within a bucket is
+    preserved (callers pre-sort rows by (partition, pivot distance) so the
+    receiver's tiles are partition-coherent).
     """
+    n = rows.shape[0]
     nbuf = {k: np.zeros((n_src, n_dst, cap) + v.shape[1:], v.dtype)
             for k, v in aux.items()}
     buf = np.zeros((n_src, n_dst, cap, rows.shape[1]), rows.dtype)
     valid = np.zeros((n_src, n_dst, cap), bool)
-    slot = np.zeros((n_src, n_dst), np.int64)
-    for i in range(rows.shape[0]):
-        s, d = src_of_row[i], dest[i]
-        j = slot[s, d]
-        if j >= cap:
-            raise AssertionError("capacity model violated — bug in Thm 7 path")
-        buf[s, d, j] = rows[i]
-        for k, v in aux.items():
-            nbuf[k][s, d, j] = v[i]
-        valid[s, d, j] = True
-        slot[s, d] = j + 1
+    if n == 0:
+        return buf, nbuf, valid
+    key = src_of_row.astype(np.int64) * n_dst + dest
+    order = np.argsort(key, kind="stable")
+    sk = key[order]
+    # rank within each equal-key bucket: position − bucket start
+    starts = np.flatnonzero(np.r_[True, sk[1:] != sk[:-1]])
+    slot = np.arange(n) - np.repeat(starts, np.diff(np.r_[starts, n]))
+    if slot.max(initial=0) >= cap:
+        raise AssertionError("capacity model violated — bug in Thm 7 path")
+    flat = sk * cap + slot                   # bucket-major landing position
+    buf.reshape(-1, rows.shape[1])[flat] = rows[order]
+    for k, v in aux.items():
+        nbuf[k].reshape((-1,) + v.shape[1:])[flat] = v[order]
+    valid.reshape(-1)[flat] = True
     return buf, nbuf, valid
 
 
-def _local_topk(d2: jnp.ndarray, ids: jnp.ndarray, k: int):
-    """(nq, ns) squared distances → ascending (nq, k) (dist², id)."""
-    neg, idx = jax.lax.top_k(-d2, k)
-    return -neg, jnp.take_along_axis(ids[None, :].repeat(d2.shape[0], 0), idx, 1)
+def _device_schedules(plan, r_buf, r_valid, r_part_pk, s_part_pk, s_dist_pk,
+                      s_valid, k, bm, bn, stats):
+    """Per-device pruned schedules on the post-shuffle buffer layout.
+
+    The shuffle is deterministic given the plan, so the host knows every
+    device's received layout before any data moves: device g gets the
+    concatenation over sources of bucket (src, g). Schedules are padded
+    to one static width across devices.
+    """
+    n_dev = r_buf.shape[0]
+    scheds = []
+    for g in range(n_dev):
+        rr = r_buf[:, g].reshape(-1, r_buf.shape[-1])
+        rp = np.where(r_valid[:, g].reshape(-1),
+                      r_part_pk[:, g].reshape(-1), -1)
+        sp = np.where(s_valid[:, g].reshape(-1),
+                      s_part_pk[:, g].reshape(-1), -1)
+        sd = s_dist_pk[:, g].reshape(-1)
+        scheds.append(build_tile_schedule(
+            rr, rp, sp, sd, plan.pivots, plan.pivd, plan.theta,
+            bm=bm, bn=bn, metric=plan.config.metric,
+            knn_dists=plan.t_s.knn_dists, k=k, stats=stats))
+    width = max(s.schedule.shape[1] for s in scheds)
+    scheds = [s.padded_to(width) for s in scheds]
+    schedule = np.stack([s.schedule for s in scheds])   # (n_dev, nr_t, V)
+    counts = np.stack([s.counts for s in scheds])       # (n_dev, nr_t)
+    return schedule, counts, scheds
 
 
 def _reducer_join(r_buf, r_valid, s_buf, s_valid, s_ids, k, tile_s,
-                  axis_names=()):
-    """Per-device blocked join: exact top-k of valid R rows over valid S."""
+                  axis_names=(), schedule=None, counts=None, tile_r=128):
+    """Per-device join: exact top-k of valid R rows over valid S.
+
+    The running top-k is a sorted run merged with each tile's sorted
+    candidates (kernels.sorted_merge) — the same primitive the Pallas
+    kernels use. With ``schedule``/``counts`` (per R tile of ``tile_r``
+    rows) only the scheduled S tiles are sliced and scanned; steps past a
+    row's count re-touch its last tile and are masked to +inf.
+    """
     nq = r_buf.shape[0]
     ns = s_buf.shape[0]
-    r2 = jnp.sum(r_buf * r_buf, axis=-1)
-    best_d = jnp.full((nq, k), jnp.inf, jnp.float32)
-    best_i = jnp.full((nq, k), -1, jnp.int32)
+    kp = next_pow2(k)
+
+    n_tiles = -(-ns // tile_s)
+    s_pad = jnp.pad(s_buf, ((0, n_tiles * tile_s - ns), (0, 0)))
+    sv_pad = jnp.pad(s_valid, (0, n_tiles * tile_s - ns))
+    si_pad = jnp.pad(s_ids, (0, n_tiles * tile_s - ns), constant_values=-1)
+
+    nr_tiles = -(-nq // tile_r)
+    r_pad = jnp.pad(r_buf, ((0, nr_tiles * tile_r - nq), (0, 0)))
+
+    if schedule is None:
+        schedule = jnp.broadcast_to(jnp.arange(n_tiles, dtype=jnp.int32),
+                                    (nr_tiles, n_tiles))
+        counts = jnp.full((nr_tiles,), n_tiles, jnp.int32)
+    max_v = schedule.shape[1]
+
+    init_d = jnp.full((tile_r, kp), jnp.inf, jnp.float32)
+    init_i = jnp.full((tile_r, kp), -1, jnp.int32)
     if axis_names:
         # inside shard_map the scan carry must match the tiles' varying
         # manual axes; fresh constants start unvarying
-        best_d = jax.lax.pvary(best_d, axis_names)
-        best_i = jax.lax.pvary(best_i, axis_names)
+        init_d = pvary(init_d, axis_names)
+        init_i = pvary(init_i, axis_names)
 
-    n_tiles = -(-ns // tile_s)
-    pad = n_tiles * tile_s - ns
-    s_pad = jnp.pad(s_buf, ((0, pad), (0, 0)))
-    sv_pad = jnp.pad(s_valid, (0, pad))
-    si_pad = jnp.pad(s_ids, (0, pad), constant_values=-1)
+    def one_r_tile(_, xs):
+        rt, sched_row, cnt = xs
+        r2 = jnp.sum(rt * rt, axis=-1)
 
-    def body(carry, tile):
-        bd, bi = carry
-        st, sv, si = tile
-        d2 = (r2[:, None] + jnp.sum(st * st, axis=-1)[None, :]
-              - 2.0 * (r_buf @ st.T))
-        d2 = jnp.where(sv[None, :], jnp.maximum(d2, 0.0), jnp.inf)
-        td, ti = _local_topk(d2, si, min(k, tile_s))
-        cd = jnp.concatenate([bd, td], axis=1)
-        ci = jnp.concatenate([bi, ti], axis=1)
-        nd, sel = jax.lax.top_k(-cd, k)
-        return (-nd, jnp.take_along_axis(ci, sel, axis=1)), None
+        def visit(carry, step_tile):
+            bd, bi = carry
+            step, t_idx = step_tile
+            st = jax.lax.dynamic_slice_in_dim(s_pad, t_idx * tile_s, tile_s)
+            sv = jax.lax.dynamic_slice_in_dim(sv_pad, t_idx * tile_s, tile_s)
+            si = jax.lax.dynamic_slice_in_dim(si_pad, t_idx * tile_s, tile_s)
+            d2 = (r2[:, None] + jnp.sum(st * st, axis=-1)[None, :]
+                  - 2.0 * (rt @ st.T))
+            live = sv[None, :] & (step < cnt)
+            d2 = jnp.where(live, jnp.maximum(d2, 0.0), jnp.inf)
+            td, ti = tile_topk(d2, jnp.broadcast_to(si[None, :], d2.shape),
+                               kp)
+            return merge_sorted_runs(bd, bi, td, ti), None
 
-    tiles = (s_pad.reshape(n_tiles, tile_s, -1),
-             sv_pad.reshape(n_tiles, tile_s),
-             si_pad.reshape(n_tiles, tile_s))
-    (best_d, best_i), _ = jax.lax.scan(body, (best_d, best_i), tiles)
+        (bd, bi), _ = jax.lax.scan(
+            visit, (init_d, init_i),
+            (jnp.arange(max_v, dtype=jnp.int32), sched_row))
+        return None, (bd, bi)
+
+    xs = (r_pad.reshape(nr_tiles, tile_r, -1),
+          schedule.astype(jnp.int32), counts.astype(jnp.int32))
+    _, (best_d, best_i) = jax.lax.scan(one_r_tile, None, xs)
+    best_d = best_d.reshape(nr_tiles * tile_r, kp)[:nq, :k]
+    best_i = best_i.reshape(nr_tiles * tile_r, kp)[:nq, :k]
     best_d = jnp.where(r_valid[:, None], jnp.sqrt(best_d), jnp.inf)
     best_i = jnp.where(r_valid[:, None], best_i, -1)
     return best_d, best_i
@@ -157,12 +232,15 @@ def distributed_knn_join(
     *,
     axis: str | Tuple[str, ...] = "data",
     tile_s: int = 512,
+    tile_r: int = 128,
+    use_schedule: bool = True,
 ) -> JoinResult:
     """Execute job 2 as SPMD over ``mesh`` (one group per device along
     ``axis``); phase-1/planning come in via ``plan``.
 
     The shuffle is a genuine ``jax.lax.all_to_all`` on (n_dev, n_dev, cap)
-    send buffers; the reducers never see rows the bounds did not ship.
+    send buffers; the reducers never see rows the bounds did not ship, and
+    with ``use_schedule`` they never even slice tiles the bounds pruned.
     """
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
     n_dev = int(np.prod([mesh.shape[a] for a in axes]))
@@ -173,39 +251,63 @@ def distributed_knn_join(
     k = plan.config.k
 
     # ---- host-side packing (the mapper emit; becomes device-side sort/
-    # scatter on a real pod — see DESIGN.md §2.1 ragged-shuffle note)
+    # scatter on a real pod — see DESIGN.md §2.1 ragged-shuffle note).
+    # Rows are pre-sorted by (partition, pivot distance): bucket packing
+    # is order-preserving, so every received run is partition-coherent
+    # and the tile schedules stay tight.
     n_r, n_s = r.shape[0], s.shape[0]
-    src_r = (np.arange(n_r) * n_dev) // max(n_r, 1)
     g_r = plan.group_of_r()
+    src_r = (np.arange(n_r) * n_dev) // max(n_r, 1)
     # int32 on device: x64 is disabled by default and |R|,|S| < 2^31 here
     r_ids = np.arange(n_r, dtype=np.int32)
+    ord_r = np.lexsort((plan.r_dist, plan.r_part))
     r_buf, r_aux, r_valid = _pack_send_buffers(
-        np.asarray(r, np.float32), {"id": r_ids},
-        g_r, src_r, n_dev, n_dev, spec.cap_r_send)
+        np.asarray(r, np.float32)[ord_r],
+        {"id": r_ids[ord_r], "part": plan.r_part[ord_r].astype(np.int32)},
+        g_r[ord_r], src_r[ord_r], n_dev, n_dev, spec.cap_r_send)
 
     ship = plan.s_dist[:, None] >= plan.lb_group[plan.s_part]   # (n_s, G)
     s_row, s_dst = np.nonzero(ship)
     src_s = (s_row * n_dev) // max(n_s, 1)
     s_ids = np.arange(n_s, dtype=np.int32)
+    ord_s = np.lexsort((plan.s_dist[s_row], plan.s_part[s_row]))
+    s_row, s_dst = s_row[ord_s], s_dst[ord_s]
+    src_s = src_s[ord_s]
     s_buf, s_aux, s_valid = _pack_send_buffers(
         np.asarray(s, np.float32)[s_row],
-        {"id": s_ids[s_row]},
+        {"id": s_ids[s_row], "part": plan.s_part[s_row].astype(np.int32),
+         "pdist": plan.s_dist[s_row].astype(np.float32)},
         s_dst, src_s, n_dev, n_dev, spec.cap_s_send)
 
     stats = JoinStats(n_r=n_r, n_s=n_s)
     stats.replicas_s = int(ship.sum())
     stats.pivot_pairs_computed = (n_r + n_s) * plan.pivots.shape[0]
-    stats.pairs_computed = int(
-        (r_valid.sum(axis=(0, 2))[None, :]
-         * s_valid.sum(axis=(0, 2))[:, None]).trace())
-    stats.tiles_total = stats.tiles_visited = (
-        n_dev * (-(-(n_dev * spec.cap_s_send) // tile_s)))
+
+    nq_dev = n_dev * spec.cap_r_send
+    ns_dev = n_dev * spec.cap_s_send
+    nr_tiles = -(-nq_dev // tile_r)
+    ns_tiles = -(-ns_dev // tile_s)
+    if use_schedule:
+        schedule, counts, scheds = _device_schedules(
+            plan, r_buf, r_valid, r_aux["part"], s_aux["part"],
+            s_aux["pdist"], s_valid, k, tile_r, tile_s, stats)
+        stats.tiles_total = n_dev * nr_tiles * ns_tiles
+        stats.tiles_visited = int(sum(sc.n_visits for sc in scheds))
+        stats.pairs_computed = stats.tiles_visited * tile_r * tile_s
+    else:
+        schedule = counts = None
+        stats.tiles_total = stats.tiles_visited = (
+            n_dev * nr_tiles * ns_tiles)
+        stats.pairs_computed = int(
+            (r_valid.sum(axis=(0, 2))[None, :]
+             * s_valid.sum(axis=(0, 2))[:, None]).trace())
 
     pspec = P(axes if len(axes) > 1 else axes[0])
 
-    @partial(jax.shard_map, mesh=mesh,
-             in_specs=(pspec,) * 6, out_specs=(pspec, pspec, pspec, pspec))
-    def job2(r_buf, r_valid, r_id, s_buf, s_valid, s_id):
+    @partial(shard_map, mesh=mesh,
+             in_specs=(pspec,) * (6 + (2 if use_schedule else 0)),
+             out_specs=(pspec, pspec, pspec, pspec))
+    def job2(r_buf, r_valid, r_id, s_buf, s_valid, s_id, *sched_args):
         # collapse the leading sharded axis (size 1 per device)
         r_buf, r_valid, r_id = r_buf[0], r_valid[0], r_id[0]
         s_buf, s_valid, s_id = s_buf[0], s_valid[0], s_id[0]
@@ -214,21 +316,27 @@ def distributed_knn_join(
                       else axes[0], split_axis=0, concat_axis=0, tiled=True)
         r_buf, r_valid, r_id = a2a(r_buf), a2a(r_valid), a2a(r_id)
         s_buf, s_valid, s_id = a2a(s_buf), a2a(s_valid), a2a(s_id)
-        # ---- the reducer: flatten received buffers, blocked top-k join
+        # ---- the reducer: flatten received buffers, scheduled top-k join
         rb = r_buf.reshape(-1, r_buf.shape[-1])
         rv = r_valid.reshape(-1)
         ri = r_id.reshape(-1)
         sb = s_buf.reshape(-1, s_buf.shape[-1])
         sv = s_valid.reshape(-1)
         si = s_id.reshape(-1)
+        sched = cnts = None
+        if sched_args:
+            sched, cnts = sched_args[0][0], sched_args[1][0]
         bd, bi = _reducer_join(rb, rv, sb, sv, si, k, tile_s,
-                               axis_names=axes)
+                               axis_names=axes, schedule=sched, counts=cnts,
+                               tile_r=tile_r)
         return (bd[None], bi[None], ri[None], rv[None])
 
     with mesh:
         sh = NamedSharding(mesh, pspec)
-        args = [jax.device_put(x, sh) for x in
-                (r_buf, r_valid, r_aux["id"], s_buf, s_valid, s_aux["id"])]
+        args = [r_buf, r_valid, r_aux["id"], s_buf, s_valid, s_aux["id"]]
+        if use_schedule:
+            args += [schedule, counts]
+        args = [jax.device_put(x, sh) for x in args]
         bd, bi, ri, rv = jax.jit(job2)(*args)
 
     bd, bi, ri, rv = map(np.asarray, (bd, bi, ri, rv))
@@ -257,7 +365,6 @@ def distributed_phase1(
     Returns (part_ids (n,), dists (n,), SummaryTable) — bit-identical to
     the host `assign_and_summarize` (the merge operators are exact).
     """
-    from .partition import build_summary
     from .types import SummaryTable
 
     n = data.shape[0]
@@ -267,7 +374,7 @@ def distributed_phase1(
     padded = np.pad(np.asarray(data, np.float32), ((0, pad), (0, 0)))
     kk = 0 if k is None else k
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(P(axis), P()),
              out_specs=(P(axis), P(axis), P(), P(), P(), P()),
              check_vma=False)  # all_gather+sort output is replicated in

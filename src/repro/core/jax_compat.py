@@ -1,0 +1,71 @@
+"""Version portability for the distributed path.
+
+The sharding surface moved between JAX releases: ``shard_map`` graduated
+from ``jax.experimental`` to ``jax.shard_map``; its replication check was
+renamed ``check_rep`` → ``check_vma``; ``jax.lax.pvary`` and
+``jax.sharding.AxisType`` only exist with the newer varying-manual-axes
+type system; ``jax.make_mesh`` gained ``axis_types``. Every caller in
+this repo goes through the aliases below so both API generations run the
+same code (CI pins whatever the image ships).
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Sequence
+
+import jax
+
+__all__ = ["shard_map", "pvary", "make_mesh"]
+
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KEYS = ("check_vma", "check_rep")
+else:  # pre-graduation JAX
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KEYS = ("check_rep", "check_vma")
+
+_CHECK_KEY = next(
+    (key for key in _CHECK_KEYS
+     if key in inspect.signature(_shard_map).parameters), None)
+
+
+def shard_map(f=None, /, **kwargs):
+    """``jax.shard_map`` with ``check_vma``/``check_rep`` normalized.
+
+    Pass ``check_vma=False`` regardless of JAX version; it is renamed (or
+    dropped, if neither spelling exists) to fit the installed API.
+    """
+    for alias in ("check_vma", "check_rep"):
+        if alias in kwargs and alias != _CHECK_KEY:
+            val = kwargs.pop(alias)
+            if _CHECK_KEY is not None:
+                kwargs.setdefault(_CHECK_KEY, val)
+    if f is None:
+        return lambda g: _shard_map(g, **kwargs)
+    return _shard_map(f, **kwargs)
+
+
+def pvary(x, axis_names):
+    """``jax.lax.pvary`` or identity where the VMA type system is absent.
+
+    Older shard_map has no varying/unvarying distinction, so scan carries
+    need no adjustment there — identity is exactly right, not a stub.
+    """
+    fn = getattr(jax.lax, "pvary", None)
+    if fn is None or not axis_names:
+        return x
+    return fn(x, axis_names)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types where the API has them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                tuple(axis_shapes), tuple(axis_names),
+                axis_types=(axis_type.Auto,) * len(tuple(axis_names)))
+        except TypeError:  # make_mesh without axis_types kwarg
+            pass
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))

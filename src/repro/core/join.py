@@ -1,10 +1,10 @@
 """The reducer-side kNN join (paper Algorithm 3) — tile-adapted.
 
-Two engines, both exact:
+Three engines, all exact:
 
 * ``join_group_dense`` — blocked brute force between R_g and the shipped
   S_g. Correct because Cor. 2 guarantees S_g ⊇ KNN(r, S) for r ∈ R_g.
-  This is what the Pallas kernel implements on TPU (repro.kernels).
+  This is what the dense Pallas kernel implements on TPU (repro.kernels).
 
 * ``join_group_pruned`` — the paper's Algorithm 3 adapted from per-object
   branching to per-tile masking: per R-partition, S-partitions are visited
@@ -13,8 +13,15 @@ Two engines, both exact:
   tile, and θ tightens *between tiles* from the running top-k (the block
   analogue of lines 18-24). Selectivity instrumentation mirrors Eq. 13.
 
-Host numpy orchestrates the tile schedule (value-dependent skipping has no
-static-shape analogue); the arithmetic inside a tile is the same
+* ``join_group_gather`` — the static-schedule engine: walks exactly the
+  compacted visit list `core.schedule.build_tile_schedule` lowered from
+  the same bounds. This is the host twin of the scalar-prefetch Pallas
+  kernel (``distance_topk_gather``): same schedule, same visited tiles,
+  same result — so `JoinStats.tiles_visited` is comparable across CPU
+  and TPU runs.
+
+Host numpy orchestrates the tile schedules (value-dependent skipping has
+no static-shape analogue); the arithmetic inside a tile is the same
 ``‖r‖² − 2rsᵀ + ‖s‖²`` contraction the TPU kernel uses.
 """
 from __future__ import annotations
@@ -23,19 +30,13 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from .metrics import cmp_dist, from_cmp, to_cmp
+from .metrics import cmp_dist, from_cmp
 from .types import JoinStats
 
-__all__ = ["join_group_dense", "join_group_pruned", "topk_merge"]
+__all__ = ["join_group_dense", "join_group_pruned", "join_group_gather",
+           "topk_merge"]
 
 _INF = np.float32(np.inf)
-
-
-def _tile_sqdist(q: np.ndarray, s: np.ndarray) -> np.ndarray:
-    q = q.astype(np.float32)
-    s = s.astype(np.float32)
-    d2 = (q * q).sum(-1)[:, None] + (s * s).sum(-1)[None, :] - 2.0 * (q @ s.T)
-    return np.maximum(d2, 0.0, out=d2)
 
 
 def topk_merge(
@@ -81,6 +82,44 @@ def join_group_dense(
         out_d[qlo:qhi] = bd
         out_i[qlo:qhi] = bi
     return from_cmp(out_d, metric), out_i
+
+
+def join_group_gather(
+    r: np.ndarray, s: np.ndarray, s_ids: np.ndarray, k: int,
+    sched,
+    *, stats: Optional[JoinStats] = None, metric: str = "l2",
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Walk a precompiled `core.schedule.TileSchedule` — exact top-k over
+    exactly the scheduled (R tile, S tile) pairs, nothing else touched.
+
+    ``s``/``s_ids`` must be in the layout the schedule was built for
+    (sorted by (partition, pivot distance) for tight tiles).
+    """
+    nq, ns = r.shape[0], s.shape[0]
+    bm, bn = sched.bm, sched.bn
+    out_d = np.full((nq, k), _INF, np.float32)
+    out_i = np.full((nq, k), -1, np.int64)
+    for t in range(sched.nr_tiles):
+        qlo, qhi = t * bm, min((t + 1) * bm, nq)
+        if qlo >= qhi:
+            continue
+        bd = np.full((qhi - qlo, k), _INF, np.float32)
+        bi = np.full((qhi - qlo, k), -1, np.int64)
+        for j in sched.schedule[t, :sched.counts[t]]:
+            slo, shi = int(j) * bn, min((int(j) + 1) * bn, ns)
+            if slo >= shi:
+                continue
+            d2 = cmp_dist(r[qlo:qhi], s[slo:shi], metric)
+            bd, bi = topk_merge(
+                bd, bi, d2, np.broadcast_to(s_ids[slo:shi], d2.shape), k)
+            if stats is not None:
+                stats.pairs_computed += d2.size
+        out_d[qlo:qhi] = from_cmp(bd, metric)
+        out_i[qlo:qhi] = bi
+    if stats is not None:
+        stats.tiles_total += sched.nr_tiles * sched.ns_tiles
+        stats.tiles_visited += sched.n_visits
+    return out_d, out_i
 
 
 def join_group_pruned(

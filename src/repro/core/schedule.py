@@ -1,0 +1,223 @@
+"""Static pruned tile schedules — the plan's bounds lowered to DMA level.
+
+The paper's pruning rules (Cor. 1 hyperplane, Thm 2 ring) cut both
+*computational* and *shuffling* cost. On a TPU the second half only
+materializes if a pruned tile never crosses HBM→VMEM: a visit *mask*
+elides compute but the pipelined copy still streams. This module lowers
+the plan's bounds, evaluated at R-tile × S-tile granularity, into a
+**compacted visit list** — a dense ``(nr_tiles, max_visits)`` int32
+schedule plus per-row counts — that the scalar-prefetch kernel
+(`kernels.distance_topk.distance_topk_gather_pallas`) and the
+schedule-driven ``lax.scan`` reducer (`core.distributed`) consume
+directly. Skipped tiles cost zero bytes and zero FLOPs.
+
+Tile-granular bound evaluation (exactness argument):
+
+* Cor. 1 — an S-partition j is skipped for an R tile only when *every*
+  query q in the tile has ``d(q, HP(p_home(q), p_j)) > θ_home(q)``
+  (Euclidean metric only, as in Algorithm 3).
+* Thm 2 — per (R tile, partition) the ring ``[min_q |q,p_j| − θ,
+  max_q |q,p_j| + θ]`` over the tile's un-pruned queries is intersected
+  with each S tile's actual ``|p_j, s|`` range. A tile is visited iff any
+  partition present in it overlaps.
+
+Both reductions take the loosest bound over the tile's queries, so the
+scheduled candidate set is a superset of the per-query Algorithm-3 set —
+the join stays exact, θ is just not adaptively tightened (the schedule is
+static; it must be, to be prefetchable).
+
+Rows with ``part < 0`` (shuffle-padding slots in the distributed path)
+contribute no constraints on the R side and are never candidates on the
+S side. Schedule rows are padded by repeating their last entry: an
+unchanged block index lets the Pallas pipeline reuse the resident block
+instead of issuing a fresh DMA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .metrics import cmp_dist, from_cmp
+from .types import JoinStats
+
+__all__ = ["TileSchedule", "build_tile_schedule", "compact_visit_mask"]
+
+
+@dataclasses.dataclass
+class TileSchedule:
+    """Compacted per-R-tile visit list over S tiles."""
+
+    schedule: np.ndarray    # (nr_tiles, max_visits) int32, pad = last entry
+    counts: np.ndarray      # (nr_tiles,) int32, >= 1
+    visit_mask: np.ndarray  # (nr_tiles, ns_tiles) bool — the dense view
+    bm: int
+    bn: int
+
+    @property
+    def nr_tiles(self) -> int:
+        return int(self.visit_mask.shape[0])
+
+    @property
+    def ns_tiles(self) -> int:
+        return int(self.visit_mask.shape[1])
+
+    @property
+    def n_visits(self) -> int:
+        """Total scheduled (R tile, S tile) steps — the schedule length."""
+        return int(self.counts.sum())
+
+    @property
+    def density(self) -> float:
+        """Visited fraction of the dense grid (1.0 = no pruning)."""
+        total = self.nr_tiles * self.ns_tiles
+        return self.n_visits / total if total else 0.0
+
+    def padded_to(self, max_visits: int) -> "TileSchedule":
+        """Widen the schedule to ``max_visits`` slots (repeat-last pad) —
+        used to equalize static shapes across devices."""
+        cur = self.schedule.shape[1]
+        if max_visits < cur:
+            raise ValueError(f"cannot shrink schedule {cur} -> {max_visits}")
+        if max_visits == cur:
+            return self
+        pad = np.repeat(self.schedule[:, -1:], max_visits - cur, axis=1)
+        return dataclasses.replace(
+            self, schedule=np.concatenate([self.schedule, pad], axis=1))
+
+
+def compact_visit_mask(
+    visit: np.ndarray, *, max_visits: Optional[int] = None
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(nr_tiles, ns_tiles) bool → (schedule, counts), ascending per row.
+
+    Every row must have at least one visited tile (callers guarantee a
+    fallback); padding slots repeat the row's last valid entry so the
+    prefetched index never changes on dead steps.
+    """
+    nr_tiles, ns_tiles = visit.shape
+    counts = visit.sum(axis=1).astype(np.int32)
+    if (counts == 0).any():
+        raise ValueError("visit mask has empty rows; add a fallback tile")
+    width = int(counts.max()) if max_visits is None else int(max_visits)
+    if width < int(counts.max()):
+        raise ValueError(f"max_visits={width} < widest row {counts.max()}")
+    # stable argsort of ~visit puts visited tile indices first, ascending;
+    # slots past a row's count re-select its last entry (repeat-pad), so
+    # slot values never reach ns_tiles and no explicit padding is needed
+    order = np.argsort(~visit, axis=1, kind="stable").astype(np.int32)
+    slot = np.minimum(np.arange(width, dtype=np.int32)[None, :],
+                      counts[:, None] - 1)
+    schedule = np.take_along_axis(order, slot, axis=1)
+    return np.ascontiguousarray(schedule), counts
+
+
+def build_tile_schedule(
+    r: np.ndarray,
+    r_part: np.ndarray,
+    s_part: np.ndarray,
+    s_dist: np.ndarray,
+    pivots: np.ndarray,
+    pivd: np.ndarray,
+    theta: np.ndarray,
+    *,
+    bm: int,
+    bn: int,
+    metric: str = "l2",
+    knn_dists: Optional[np.ndarray] = None,
+    k: Optional[int] = None,
+    stats: Optional[JoinStats] = None,
+    theta_block: int = 8192,
+) -> TileSchedule:
+    """Lower Cor. 1 + Thm 2 to an (R tile × S tile) visit schedule.
+
+    ``r``/``r_part`` are the reducer's queries in their kernel layout;
+    ``s_part``/``s_dist`` describe the S rows in *their* kernel layout
+    (sort S by (partition, pivot distance) first for tight tiles — the
+    builder is correct for any layout, only the pruning rate changes).
+    ``part < 0`` marks padding rows on either side.
+
+    When T_S's pivot-kNN lists (``knn_dists`` (M, >=k) + ``k``) are given,
+    θ is tightened *per query* to the k-th smallest ``|q,p_j| + p_j.d_i``
+    over all partitions — Thm 3 / Algorithm 1 evaluated at the query
+    instead of its partition, dropping the U(P^R) slack. Still a sound
+    kNN-radius upper bound, still computable before any join, so the
+    schedule stays static and prefetchable.
+    """
+    n_r, n_s = r_part.shape[0], s_part.shape[0]
+    m = pivots.shape[0]
+    nr_tiles = max(1, -(-n_r // bm))
+    ns_tiles = max(1, -(-n_s // bn))
+
+    valid_q = r_part >= 0
+    home = np.clip(r_part, 0, m - 1)
+    th_q = np.where(valid_q, theta[home], -np.inf).astype(np.float32)
+
+    # |q, p_j| for every pivot — the job-2 mapper's pivot distances
+    qp = from_cmp(cmp_dist(np.asarray(r, np.float32), pivots, metric),
+                  metric)                                    # (n_r, M)
+    if stats is not None:
+        stats.pivot_pairs_computed += int(valid_q.sum()) * m
+
+    kk = 0 if knn_dists is None or k is None else min(k, knn_dists.shape[1])
+    if kk and m * kk >= k:
+        knn = np.where(np.isfinite(knn_dists[:, :kk]),
+                       knn_dists[:, :kk], np.inf)            # (M, kk)
+        for lo in range(0, n_r, theta_block):
+            hi = min(lo + theta_block, n_r)
+            ub = (qp[lo:hi, :, None] + knn[None, :, :]).reshape(hi - lo, -1)
+            kth = np.partition(ub, k - 1, axis=1)[:, k - 1]
+            th_q[lo:hi] = np.where(valid_q[lo:hi],
+                                   np.minimum(th_q[lo:hi], kth), -np.inf)
+
+    # Cor. 1 per (query, partition); home column never pruned
+    if metric == "l2":
+        q2 = qp.astype(np.float64) ** 2
+        home_sq = np.take_along_axis(q2, home[:, None], axis=1)
+        denom = np.maximum(2.0 * pivd[home], 1e-30)          # (n_r, M)
+        d_hp = (q2 - home_sq) / denom
+        alive = d_hp <= th_q[:, None]
+    else:
+        alive = np.ones((n_r, m), bool)
+    alive[np.arange(n_r), home] = True
+    alive &= valid_q[:, None]
+
+    # reduce to R-tile granularity: any-alive, loosest ring per partition
+    tile_of_r = (np.arange(n_r) // bm).astype(np.int64)
+    alive_t = np.zeros((nr_tiles, m), bool)
+    np.logical_or.at(alive_t, tile_of_r, alive)
+    lo_q = np.where(alive, qp - th_q[:, None], np.inf)
+    hi_q = np.where(alive, qp + th_q[:, None], -np.inf)
+    lo_t = np.full((nr_tiles, m), np.inf, np.float32)
+    hi_t = np.full((nr_tiles, m), -np.inf, np.float32)
+    np.minimum.at(lo_t, tile_of_r, lo_q.astype(np.float32))
+    np.maximum.at(hi_t, tile_of_r, hi_q.astype(np.float32))
+
+    # S-tile × partition |p_j, s| ranges (Thm 2's L/U at tile resolution)
+    valid_s = s_part >= 0
+    tile_of_s = (np.arange(n_s) // bn).astype(np.int64)
+    sd_min = np.full((ns_tiles, m), np.inf, np.float32)
+    sd_max = np.full((ns_tiles, m), -np.inf, np.float32)
+    idx = (tile_of_s[valid_s], s_part[valid_s])
+    np.minimum.at(sd_min, idx, s_dist[valid_s].astype(np.float32))
+    np.maximum.at(sd_max, idx, s_dist[valid_s].astype(np.float32))
+    present = sd_max > -np.inf                               # (ns_tiles, M)
+
+    # visit[t, u] = ∃ partition j present in u with ring overlap
+    overlap = (alive_t[:, None, :] & present[None, :, :]
+               & (sd_max[None, :, :] >= lo_t[:, None, :])
+               & (sd_min[None, :, :] <= hi_t[:, None, :]))
+    visit = overlap.any(axis=2)                              # (nr, ns) tiles
+
+    # fallback: an R tile with live queries must visit >= 1 tile so its
+    # output flush runs; empty rows (all-padding tiles) get one free visit
+    # of the first non-empty S tile (cheap, keeps the kernel uniform)
+    any_s = present.any(axis=1)
+    fallback = int(np.argmax(any_s)) if any_s.any() else 0
+    empty = ~visit.any(axis=1)
+    visit[empty, fallback] = True
+
+    schedule, counts = compact_visit_mask(visit)
+    return TileSchedule(schedule=schedule, counts=counts, visit_mask=visit,
+                        bm=bm, bn=bn)

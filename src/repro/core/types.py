@@ -35,6 +35,10 @@ class JoinConfig:
     tile_r: int = 128               # R rows per distance tile
     tile_s: int = 512               # S rows per distance tile
     use_tile_pruning: bool = True   # Cor. 1 / Thm 2 adapted to tile masking
+    # auto → "pruned"/"dense" per use_tile_pruning; "gather" runs the
+    # static compacted schedule (core.schedule) — the pruned-DMA path
+    # (Pallas scalar-prefetch kernel on TPU, its host twin elsewhere)
+    reducer: str = "auto"           # auto | dense | pruned | gather
     seed: int = 0
 
     def __post_init__(self):
@@ -42,10 +46,19 @@ class JoinConfig:
             raise ValueError(f"unknown pivot strategy {self.pivot_strategy!r}")
         if self.grouping not in ("geometric", "greedy", "none"):
             raise ValueError(f"unknown grouping {self.grouping!r}")
+        if self.reducer not in ("auto", "dense", "pruned", "gather"):
+            raise ValueError(f"unknown reducer {self.reducer!r}")
         if self.k < 1:
             raise ValueError("k must be >= 1")
         if self.metric not in ("l2", "l1", "linf"):
             raise ValueError(f"unknown metric {self.metric!r}")
+
+    @property
+    def resolved_reducer(self) -> str:
+        """The engine "auto" selects (back-compat with use_tile_pruning)."""
+        if self.reducer != "auto":
+            return self.reducer
+        return "pruned" if self.use_tile_pruning else "dense"
 
 
 @dataclasses.dataclass

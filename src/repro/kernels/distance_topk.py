@@ -1,18 +1,26 @@
-"""Pallas TPU kernel: tiled pairwise L2 + streaming top-k.
+"""Pallas TPU kernels: tiled pairwise L2 + streaming top-k.
 
-This is the PGBJ reducer hot loop (Algorithm 3, lines 16-25) as one fused
-kernel: the `-2 R Sᵀ` contraction runs on the MXU; a per-row running
-top-k lives in VMEM scratch across the S-chunk grid dimension; the
-paper's pruning rules enter as an optional per-tile visit mask (Cor. 1 /
-Thm 2 evaluated at partition/tile granularity — DESIGN.md §2.1).
+This is the PGBJ reducer hot loop (Algorithm 3, lines 16-25) as fused
+kernels: the `-2 R Sᵀ` contraction runs on the MXU; a per-row running
+top-k lives in VMEM scratch across the S grid dimension as a *sorted
+run* (see kernels.sorted_merge); the paper's pruning rules (Cor. 1 /
+Thm 2 evaluated at tile granularity — DESIGN.md §2.1) enter two ways:
 
-Grid: ``(nr_tiles, ns_tiles)`` — S is the minor (inner, sequential on TPU)
-dimension, so the scratch accumulator is valid for a fixed R tile and is
-flushed to HBM on the last S step.
+* ``distance_topk_pallas`` — dense ``(nr_tiles, ns_tiles)`` grid with an
+  optional per-tile visit mask. ``pl.when`` elides a pruned tile's
+  *compute* but its HBM→VMEM stream still runs.
+
+* ``distance_topk_gather_pallas`` — pruned-schedule execution. The grid
+  is ``(nr_tiles, max_visits)`` and the S-tile index of each step is read
+  from a scalar-prefetched compacted schedule (core.schedule), so pruned
+  tiles are **never DMA'd**: skipped tiles cost zero bytes and zero
+  FLOPs. Schedule rows are padded by repeating their last entry — an
+  unchanged block index means the pipeline re-uses the resident VMEM
+  block instead of issuing a new copy.
 
 VMEM budget per step (bm=128, bn=512, d≤128, k≤64, f32):
   R tile 64 KiB + S tile 256 KiB + dist tile 256 KiB + scratch 2·32 KiB
-  + merge temp ≈ 0.9 MiB  — comfortably inside the ~16 MiB/core VMEM.
+  + sort temporaries ≈ 1 MiB  — comfortably inside the ~16 MiB/core VMEM.
 """
 from __future__ import annotations
 
@@ -22,44 +30,39 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["distance_topk_kernel", "distance_topk_pallas"]
+from .sorted_merge import merge_sorted_runs, next_pow2, tile_topk
+
+__all__ = [
+    "distance_topk_kernel", "distance_topk_pallas",
+    "distance_topk_gather_kernel", "distance_topk_gather_pallas",
+]
 
 
+def _sq_dists(r_ref, s_ref):
+    """(bm, bn) squared L2 distances between the resident tiles."""
+    r = r_ref[...].astype(jnp.float32)                    # (bm, d)
+    s = s_ref[...].astype(jnp.float32)                    # (bn, d)
+    d2 = (jnp.sum(r * r, axis=1, keepdims=True)
+          + jnp.sum(s * s, axis=1)[None, :]
+          - 2.0 * jax.lax.dot_general(
+              r, s, (((1,), (1,)), ((), ())),
+              preferred_element_type=jnp.float32))
+    return jnp.maximum(d2, 0.0)
 
-def _merge_topk(run_d, run_i, new_d, new_i, k: int):
-    """Merge running (bm, k) with candidate (bm, t) by iterative extract-min.
 
-    k is small (≤64); extract-min k times is branch-free and vectorizes on
-    the VPU — the TPU replacement for the paper's priority queue.
-    """
-    cand_d = jnp.concatenate([run_d, new_d], axis=1)      # (bm, k+t)
-    cand_i = jnp.concatenate([run_i, new_i], axis=1)
-    cols = jax.lax.broadcasted_iota(jnp.int32, cand_d.shape, 1)
-
-    def step(t, carry):
-        cand_d, cand_i, out_d, out_i = carry
-        cur = jnp.min(cand_d, axis=1)                     # (bm,)
-        pos = jnp.argmin(cand_d, axis=1).astype(jnp.int32)
-        sel = cols == pos[:, None]
-        cur_i = jnp.max(jnp.where(sel, cand_i, -1), axis=1)
-        out_d = jax.lax.dynamic_update_index_in_dim(out_d, cur, t, 1)
-        out_i = jax.lax.dynamic_update_index_in_dim(out_i, cur_i, t, 1)
-        cand_d = jnp.where(sel, jnp.inf, cand_d)          # retire the min
-        return cand_d, cand_i, out_d, out_i
-
-    out_d = jnp.zeros_like(run_d)
-    out_i = jnp.zeros_like(run_i)
-    _, _, out_d, out_i = jax.lax.fori_loop(
-        0, k, step, (cand_d, cand_i, out_d, out_i))
-    return out_d, out_i
+def _merge_tile(scratch_d, scratch_i, d2, ids, kp: int):
+    """Fold one tile of candidates into the running sorted kp-run."""
+    td, ti = tile_topk(d2, ids, kp)
+    scratch_d[...], scratch_i[...] = merge_sorted_runs(
+        scratch_d[...], scratch_i[...], td, ti)
 
 
 def distance_topk_kernel(
     # refs:
     r_ref, s_ref, mask_ref, out_d_ref, out_i_ref, scratch_d, scratch_i,
-    *, k: int, n_s: int, bn: int, ns_tiles: int,
+    *, k: int, kp: int, n_s: int, bn: int, ns_tiles: int,
 ):
-    """One (R tile, S tile) grid step."""
+    """One (R tile, S tile) grid step of the dense (masked) kernel."""
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -71,25 +74,17 @@ def distance_topk_kernel(
 
     @pl.when(visit)
     def _compute():
-        r = r_ref[...].astype(jnp.float32)                # (bm, d)
-        s = s_ref[...].astype(jnp.float32)                # (bn, d)
-        d2 = (jnp.sum(r * r, axis=1, keepdims=True)
-              + jnp.sum(s * s, axis=1)[None, :]
-              - 2.0 * jax.lax.dot_general(
-                  r, s, (((1,), (1,)), ((), ())),
-                  preferred_element_type=jnp.float32))
-        d2 = jnp.maximum(d2, 0.0)
+        d2 = _sq_dists(r_ref, s_ref)
         # mask S padding rows (global id >= n_s)
         gid = j * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
         d2 = jnp.where(gid < n_s, d2, jnp.inf)
-        ids = jnp.broadcast_to(gid, d2.shape)
-        scratch_d[...], scratch_i[...] = _merge_topk(
-            scratch_d[...], scratch_i[...], d2, ids, k)
+        _merge_tile(scratch_d, scratch_i, d2,
+                    jnp.broadcast_to(gid, d2.shape), kp)
 
     @pl.when(j == ns_tiles - 1)
     def _flush():
-        out_d_ref[...] = jnp.sqrt(scratch_d[...])
-        out_i_ref[...] = scratch_i[...]
+        out_d_ref[...] = jnp.sqrt(scratch_d[...][:, :k])
+        out_i_ref[...] = scratch_i[...][:, :k]
 
 
 def distance_topk_pallas(
@@ -106,19 +101,20 @@ def distance_topk_pallas(
 
     visit_mask: optional (nr_tiles, ns_tiles) int8 — tiles proved
     irrelevant by the PGBJ bounds are never computed (their DMA still
-    streams; skipping the *load* needs scalar prefetch, see ops.py note).
+    streams; use ``distance_topk_gather_pallas`` to skip the load too).
     """
     n_r, d = r.shape
     n_s, _ = s.shape
     nr_tiles = -(-n_r // bm)
     ns_tiles = -(-n_s // bn)
+    kp = next_pow2(k)
     r_pad = jnp.pad(r, ((0, nr_tiles * bm - n_r), (0, 0)))
     s_pad = jnp.pad(s, ((0, ns_tiles * bn - n_s), (0, 0)))
     if visit_mask is None:
         visit_mask = jnp.ones((nr_tiles, ns_tiles), jnp.int8)
 
     kernel = functools.partial(
-        distance_topk_kernel, k=k, n_s=n_s, bn=bn, ns_tiles=ns_tiles)
+        distance_topk_kernel, k=k, kp=kp, n_s=n_s, bn=bn, ns_tiles=ns_tiles)
     out_d, out_i = pl.pallas_call(
         kernel,
         grid=(nr_tiles, ns_tiles),
@@ -136,11 +132,112 @@ def distance_topk_pallas(
             jax.ShapeDtypeStruct((nr_tiles * bm, k), jnp.int32),
         ],
         scratch_shapes=[
-            pl_scratch((bm, k), jnp.float32),
-            pl_scratch((bm, k), jnp.int32),
+            pl_scratch((bm, kp), jnp.float32),
+            pl_scratch((bm, kp), jnp.int32),
         ],
         interpret=interpret,
     )(r_pad, s_pad, visit_mask)
+    return out_d[:n_r], out_i[:n_r]
+
+
+def distance_topk_gather_kernel(
+    # scalar-prefetch refs, then tensor refs:
+    sched_ref, cnt_ref, r_ref, s_ref, out_d_ref, out_i_ref,
+    scratch_d, scratch_i,
+    *, k: int, kp: int, n_s: int, bn: int, max_visits: int,
+):
+    """One (R tile, visit slot) step of the pruned-schedule kernel.
+
+    ``s_ref`` already holds the tile the schedule names for this slot —
+    the BlockSpec index map reads ``sched_ref`` before the body runs, so
+    only scheduled tiles ever cross HBM→VMEM.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        scratch_d[...] = jnp.full_like(scratch_d, jnp.inf)
+        scratch_i[...] = jnp.full_like(scratch_i, -1)
+
+    @pl.when(j < cnt_ref[i])
+    def _compute():
+        tile = sched_ref[i, j]
+        d2 = _sq_dists(r_ref, s_ref)
+        gid = tile * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+        d2 = jnp.where(gid < n_s, d2, jnp.inf)
+        _merge_tile(scratch_d, scratch_i, d2,
+                    jnp.broadcast_to(gid, d2.shape), kp)
+
+    @pl.when(j == max_visits - 1)
+    def _flush():
+        out_d_ref[...] = jnp.sqrt(scratch_d[...][:, :k])
+        out_i_ref[...] = scratch_i[...][:, :k]
+
+
+def distance_topk_gather_pallas(
+    r: jnp.ndarray,
+    s: jnp.ndarray,
+    k: int,
+    schedule: jnp.ndarray,
+    counts: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 512,
+    interpret: bool = False,
+):
+    """Pruned-schedule top-k: each R tile visits only its scheduled S tiles.
+
+    schedule: (nr_tiles, max_visits) int32 S-tile indices, rows padded by
+              repeating the last valid entry (core.schedule.TileSchedule).
+    counts:   (nr_tiles,) int32 — number of real entries per row.
+
+    Ids are row indices into ``s`` as laid out here; callers that sorted S
+    for tile coherence translate back through their permutation.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    n_r, d = r.shape
+    n_s, _ = s.shape
+    nr_tiles = -(-n_r // bm)
+    ns_tiles = -(-n_s // bn)
+    if schedule.shape[0] != nr_tiles:
+        raise ValueError(
+            f"schedule has {schedule.shape[0]} rows for {nr_tiles} R tiles "
+            f"(bm={bm})")
+    max_visits = schedule.shape[1]
+    kp = next_pow2(k)
+    r_pad = jnp.pad(r, ((0, nr_tiles * bm - n_r), (0, 0)))
+    s_pad = jnp.pad(s, ((0, ns_tiles * bn - n_s), (0, 0)))
+
+    kernel = functools.partial(
+        distance_topk_gather_kernel,
+        k=k, kp=kp, n_s=n_s, bn=bn, max_visits=max_visits)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nr_tiles, max_visits),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j, sched, cnt: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j, sched, cnt: (sched[i, j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i, j, sched, cnt: (i, 0)),
+            pl.BlockSpec((bm, k), lambda i, j, sched, cnt: (i, 0)),
+        ],
+        scratch_shapes=[
+            pl_scratch((bm, kp), jnp.float32),
+            pl_scratch((bm, kp), jnp.int32),
+        ],
+    )
+    out_d, out_i = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nr_tiles * bm, k), jnp.float32),
+            jax.ShapeDtypeStruct((nr_tiles * bm, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(schedule.astype(jnp.int32), counts.astype(jnp.int32), r_pad, s_pad)
     return out_d[:n_r], out_i[:n_r]
 
 

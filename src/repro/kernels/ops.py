@@ -6,12 +6,16 @@ math, so tests interchange them freely. ``interpret=True`` forces the
 Pallas kernel body through the interpreter for correctness validation on
 CPU (this is how tests/test_kernels.py sweeps shapes/dtypes).
 
-Pruned-DMA note: `distance_topk` takes the PGBJ visit mask per tile.
-`pl.when` elides the tile's *compute*; eliding its HBM→VMEM stream too
-requires a scalar-prefetch grid (PrefetchScalarGridSpec) that reorders the
-S tiles per R tile — implemented as `distance_topk_gather` via host-side
-schedule compaction instead (the schedule is static given the plan, so we
-compact the S tile list before launch and keep the kernel dense).
+Pruned-DMA note: `distance_topk` has two pruning levels. ``impl="pallas"``
+takes the PGBJ visit mask per tile and `pl.when` elides the tile's
+*compute* — its HBM→VMEM stream still runs. ``impl="gather"`` runs the
+real `distance_topk_gather` kernel: a scalar-prefetch grid
+(PrefetchScalarGridSpec) reads each step's S-tile index from the
+compacted schedule that `core.schedule.build_tile_schedule` lowers from
+the plan's bounds, so pruned tiles are never DMA'd at all — zero bytes,
+zero FLOPs. ``impl="gather_interpret"`` pushes the same kernel body
+through the interpreter (CPU validation), and
+`ref.distance_topk_gather_ref` is the jnp oracle for both.
 """
 from __future__ import annotations
 
@@ -23,7 +27,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .assign import assign_pallas
-from .distance_topk import distance_topk_pallas
+from .distance_topk import distance_topk_gather_pallas, distance_topk_pallas
 from .flash_attention import flash_attention_pallas
 
 __all__ = ["distance_topk", "assign", "flash_attention", "use_pallas"]
@@ -37,12 +41,28 @@ def use_pallas() -> bool:
 def distance_topk(
     r: jnp.ndarray, s: jnp.ndarray, k: int,
     *, visit_mask: Optional[jnp.ndarray] = None,
+    schedule: Optional[jnp.ndarray] = None,
+    counts: Optional[jnp.ndarray] = None,
     bm: int = 128, bn: int = 512, impl: str = "auto",
 ):
-    """k nearest rows of s per row of r → (dists ascending, ids int32)."""
+    """k nearest rows of s per row of r → (dists ascending, ids int32).
+
+    impl="gather" / "gather_interpret" run the pruned-schedule kernel and
+    require ``schedule`` (nr_tiles, max_visits) + ``counts`` (nr_tiles,);
+    impl="gather_ref" is its jnp oracle. Other impls ignore them.
+    """
     impl = ("pallas" if use_pallas() else "ref") if impl == "auto" else impl
     if impl == "ref":
         return ref.distance_topk_ref(r, s, k)
+    if impl in ("gather", "gather_interpret", "gather_ref"):
+        if schedule is None or counts is None:
+            raise ValueError(f"impl={impl!r} requires schedule and counts")
+        if impl == "gather_ref":
+            return ref.distance_topk_gather_ref(
+                r, s, k, schedule, counts, bm=bm, bn=bn)
+        return distance_topk_gather_pallas(
+            r, s, k, schedule, counts, bm=bm, bn=bn,
+            interpret=impl == "gather_interpret")
     return distance_topk_pallas(
         r, s, k, visit_mask=visit_mask, bm=bm, bn=bn,
         interpret=impl == "interpret")

@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["distance_topk_ref", "assign_ref", "flash_attention_ref"]
+__all__ = ["distance_topk_ref", "distance_topk_gather_ref", "assign_ref",
+           "flash_attention_ref"]
 
 
 def distance_topk_ref(r: jnp.ndarray, s: jnp.ndarray, k: int):
@@ -17,6 +18,35 @@ def distance_topk_ref(r: jnp.ndarray, s: jnp.ndarray, k: int):
     d2 = (jnp.sum(r * r, 1)[:, None] + jnp.sum(s * s, 1)[None, :]
           - 2.0 * (r @ s.T))
     d2 = jnp.maximum(d2, 0.0)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return jnp.sqrt(-neg), idx.astype(jnp.int32)
+
+
+def distance_topk_gather_ref(
+    r: jnp.ndarray, s: jnp.ndarray, k: int,
+    schedule: jnp.ndarray, counts: jnp.ndarray, *, bm: int, bn: int,
+):
+    """Oracle for the pruned-schedule kernel: mask unscheduled tiles.
+
+    Computes the dense distance matrix, then restricts each R tile's
+    candidate columns to the S tiles its schedule row names — the same
+    candidate set ``distance_topk_gather_pallas`` ever sees.
+    """
+    r = r.astype(jnp.float32)
+    s = s.astype(jnp.float32)
+    n_r, n_s = r.shape[0], s.shape[0]
+    nr_tiles = -(-n_r // bm)
+    ns_tiles = -(-n_s // bn)
+    # (nr_tiles, ns_tiles) allowed mask from the compacted schedule
+    slot = jnp.arange(schedule.shape[1])[None, :, None]          # (1, V, 1)
+    hit = (schedule[:, :, None] == jnp.arange(ns_tiles)[None, None, :])
+    allowed = jnp.any(hit & (slot < counts[:, None, None]), axis=1)
+    row_tile = jnp.arange(n_r) // bm
+    col_tile = jnp.arange(n_s) // bn
+    mask = allowed[row_tile][:, col_tile]                        # (n_r, n_s)
+    d2 = (jnp.sum(r * r, 1)[:, None] + jnp.sum(s * s, 1)[None, :]
+          - 2.0 * (r @ s.T))
+    d2 = jnp.where(mask, jnp.maximum(d2, 0.0), jnp.inf)
     neg, idx = jax.lax.top_k(-d2, k)
     return jnp.sqrt(-neg), idx.astype(jnp.int32)
 

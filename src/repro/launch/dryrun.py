@@ -124,7 +124,7 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
         - rec["memory"]["alias_bytes"]))
     rec["memory"]["fits_hbm_16g"] = \
         rec["memory"]["peak_bytes_tpu_adj"] <= 16 * 2**30
-    ca = compiled.cost_analysis() or {}
+    ca = hlo_analysis.cost_analysis_dict(compiled)
     rec["cost_analysis_raw"] = {"flops": float(ca.get("flops", 0.0)),
                                 "bytes": float(ca.get("bytes accessed", 0.0))}
     # trip-count-scaled accounting (cost_analysis counts loop bodies once)

@@ -72,6 +72,19 @@ class CompTotals:
     coll: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` across JAX versions.
+
+    Newer JAX returns the properties dict directly; older JAX returned a
+    one-element list of per-computation dicts. Normalize to a dict (empty
+    when the backend reports nothing).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def cpu_bf16_convert_staging_bytes(hlo: str, min_bytes: int = 1 << 28) -> int:
     """Bytes of bulk bf16→f32 staging buffers XLA-CPU inserts because its
     dot kernels take f32 operands. A TPU feeds bf16 to the MXU directly, so

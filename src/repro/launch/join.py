@@ -46,13 +46,13 @@ def main(argv=None):
         if args.distributed:
             import jax
             from repro.core.distributed import distributed_knn_join
+            from repro.core.jax_compat import make_mesh
             n_dev = len(jax.devices())
             cfg = JoinConfig(k=args.k, n_pivots=args.pivots, n_groups=n_dev,
                              pivot_strategy=args.pivot_strategy,
                              grouping=args.grouping)
             plan = plan_join(data, data, cfg)
-            mesh = jax.make_mesh((n_dev,), ("data",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = make_mesh((n_dev,), ("data",))
             res = distributed_knn_join(data, data, plan, mesh)
         else:
             res = knn_join(data, data, config=cfg)

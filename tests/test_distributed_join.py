@@ -1,5 +1,10 @@
 """Distributed (shard_map) join — runs in a subprocess with 8 forced host
-devices so the main pytest process keeps the real (1-device) topology."""
+devices so the main pytest process keeps the real (1-device) topology.
+
+Mesh construction goes through ``repro.core.jax_compat.make_mesh``: the
+seed failure here was ``jax.sharding.AxisType`` not existing on the
+installed JAX (it appeared after 0.4.x), not device-count flakiness.
+"""
 import json
 import os
 import subprocess
@@ -16,6 +21,7 @@ _SCRIPT = textwrap.dedent("""
     import jax
     from repro.core import JoinConfig, brute_force_knn, plan_join
     from repro.core.distributed import build_shuffle_spec, distributed_knn_join
+    from repro.core.jax_compat import make_mesh
     from repro.distributed.fault import regroup
 
     rng = np.random.default_rng(7)
@@ -28,21 +34,26 @@ _SCRIPT = textwrap.dedent("""
     plan = plan_join(R, S, cfg)
     bd, bi = brute_force_knn(R, S, k)
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     res = distributed_knn_join(R, S, plan, mesh, axis="data")
     out["single_axis_exact"] = bool(np.allclose(res.distances, bd, atol=1e-3))
     out["replicas"] = int(res.stats.replicas_s)
+    # pruned-schedule accounting: the reducers execute exactly the
+    # compacted schedules, never the pruned remainder
+    out["tiles"] = [int(res.stats.tiles_visited), int(res.stats.tiles_total)]
 
-    mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # dense (unscheduled) reducer must agree bit-for-bit on distances
+    res_d = distributed_knn_join(R, S, plan, mesh, axis="data",
+                                 use_schedule=False)
+    out["dense_exact"] = bool(np.allclose(res_d.distances, bd, atol=1e-3))
+
+    mesh2 = make_mesh((4, 2), ("data", "model"))
     res2 = distributed_knn_join(R, S, plan, mesh2, axis=("data", "model"))
     out["two_axis_exact"] = bool(np.allclose(res2.distances, bd, atol=1e-3))
 
     # elastic: shrink to 4 groups, run on a 4-device submesh
     plan4 = regroup(plan, 4)
-    mesh4 = jax.make_mesh((4,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    mesh4 = make_mesh((4,), ("data",))
     res4 = distributed_knn_join(R, S, plan4, mesh4, axis="data")
     out["shrunk_exact"] = bool(np.allclose(res4.distances, bd, atol=1e-3))
 
@@ -74,8 +85,10 @@ def test_distributed_join_subprocess():
     assert proc.returncode == 0, proc.stderr[-3000:]
     out = json.loads(proc.stdout.strip().splitlines()[-1])
     assert out["single_axis_exact"]
+    assert out["dense_exact"]
     assert out["two_axis_exact"]
     assert out["shrunk_exact"]
     assert out["phase1_exact"]
     assert out["caps"][0] >= 1 and out["caps"][1] >= 1
     assert out["replicas"] >= 700  # self+replication ≥ |S| shipped once
+    assert 0 < out["tiles"][0] <= out["tiles"][1]

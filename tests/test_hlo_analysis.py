@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.launch.hlo_analysis import analyze
+from repro.launch.hlo_analysis import analyze, cost_analysis_dict
 
 
 def test_scan_flops_scaled_by_trip_count():
@@ -21,8 +21,10 @@ def test_scan_flops_scaled_by_trip_count():
     totals = analyze(c.as_text())
     expect = trips * 2 * n * n * n
     assert abs(totals.flops - expect) / expect < 0.01, totals.flops
-    # raw cost_analysis counts the body once — the bug this module fixes
-    raw = c.cost_analysis()["flops"]
+    # raw cost_analysis counts the body once — the bug this module fixes.
+    # (dict on newer JAX, 1-element list on older — normalized by the
+    # same helper dryrun uses)
+    raw = cost_analysis_dict(c)["flops"]
     assert raw < expect / 2
 
 

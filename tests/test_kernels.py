@@ -53,6 +53,73 @@ def test_distance_topk_visit_mask():
     assert (np.asarray(i) < 32).all()
 
 
+@pytest.mark.parametrize("nr,ns,dim,k", [
+    (64, 128, 8, 4),
+    (100, 257, 10, 7),     # non-tile-aligned
+    (33, 70, 54, 5),       # forest-width features
+    (16, 1024, 16, 25),    # many tiles, k large
+])
+def test_distance_topk_gather_full_schedule(nr, ns, dim, k):
+    """With an everything-visits schedule the gather kernel must equal the
+    dense reference exactly — scalar-prefetch plumbing changes nothing."""
+    rng = np.random.default_rng(nr + ns)
+    r = jnp.asarray(rng.normal(size=(nr, dim)).astype(np.float32))
+    s = jnp.asarray(rng.normal(size=(ns, dim)).astype(np.float32))
+    bm, bn = 32, 64
+    nr_t, ns_t = -(-nr // bm), -(-ns // bn)
+    sched = jnp.asarray(np.tile(np.arange(ns_t, dtype=np.int32), (nr_t, 1)))
+    cnt = jnp.full((nr_t,), ns_t, jnp.int32)
+    d, i = ops.distance_topk(r, s, k, schedule=sched, counts=cnt,
+                             bm=bm, bn=bn, impl="gather_interpret")
+    rd, ri = ops.distance_topk(r, s, k, impl="ref")
+    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), atol=1e-4)
+    assert (np.asarray(i) == np.asarray(ri)).mean() > 0.999
+
+
+@pytest.mark.parametrize("nr,ns,dim,k,seed", [
+    (96, 300, 6, 5, 0),
+    (50, 500, 3, 9, 1),
+    (128, 640, 12, 16, 2),
+])
+def test_distance_topk_gather_pruned_schedule(nr, ns, dim, k, seed):
+    """Random pruned schedules: kernel (interpret) == jnp oracle, and the
+    repeat-last padding never leaks extra candidates."""
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.normal(size=(nr, dim)).astype(np.float32))
+    s = jnp.asarray(rng.normal(size=(ns, dim)).astype(np.float32))
+    bm, bn = 32, 64
+    nr_t, ns_t = -(-nr // bm), -(-ns // bn)
+    # random ragged visit lists, >= 1 tile each, ascending, repeat-pad
+    counts = rng.integers(1, ns_t + 1, nr_t)
+    width = int(counts.max())
+    sched = np.zeros((nr_t, width), np.int32)
+    for t in range(nr_t):
+        picks = np.sort(rng.choice(ns_t, counts[t], replace=False))
+        sched[t, :counts[t]] = picks
+        sched[t, counts[t]:] = picks[-1]
+    sched_j = jnp.asarray(sched)
+    cnt_j = jnp.asarray(counts.astype(np.int32))
+    d, i = ops.distance_topk(r, s, k, schedule=sched_j, counts=cnt_j,
+                             bm=bm, bn=bn, impl="gather_interpret")
+    rd, ri = ops.distance_topk(r, s, k, schedule=sched_j, counts=cnt_j,
+                               bm=bm, bn=bn, impl="gather_ref")
+    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), atol=1e-4)
+    fin = np.isfinite(np.asarray(rd))
+    assert (np.asarray(i) == np.asarray(ri))[fin].mean() > 0.999
+
+
+def test_distance_topk_gather_dtypes():
+    rng = np.random.default_rng(3)
+    r = jnp.asarray(rng.normal(size=(48, 8))).astype(jnp.bfloat16)
+    s = jnp.asarray(rng.normal(size=(96, 8))).astype(jnp.bfloat16)
+    sched = jnp.asarray(np.arange(3, dtype=np.int32)[None].repeat(3, 0))
+    cnt = jnp.full((3,), 3, jnp.int32)
+    d, i = ops.distance_topk(r, s, 5, schedule=sched, counts=cnt,
+                             bm=16, bn=32, impl="gather_interpret")
+    rd, ri = ref.distance_topk_ref(r, s, 5)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), atol=5e-2)
+
+
 @pytest.mark.parametrize("n,m,dim", [(100, 16, 6), (257, 50, 12),
                                      (64, 7, 3)])
 def test_assign(n, m, dim):

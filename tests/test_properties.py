@@ -1,6 +1,11 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; tier-1 must "
+    "still collect on clean environments without it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     JoinConfig, brute_force_knn, knn_join, plan_join)
