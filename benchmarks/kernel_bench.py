@@ -71,14 +71,7 @@ def flash_attention_bench() -> List[Row]:
     return rows
 
 
-def _clustered(n, dim, seed, n_centers=16, centers_seed=42):
-    """Shared cluster centers for R and S — the regime where the paper's
-    bounds bite (kNN radius << dataset diameter)."""
-    centers = np.random.default_rng(centers_seed).uniform(
-        -20, 20, (n_centers, dim)).astype(np.float32)
-    rng = np.random.default_rng(seed)
-    who = rng.integers(0, n_centers, n)
-    return (centers[who] + rng.normal(size=(n, dim))).astype(np.float32)
+from repro.data import clustered_like as _clustered  # noqa: E402
 
 
 def distance_topk_gather_bench(n: int = 20000) -> List[Row]:
@@ -126,6 +119,88 @@ def distance_topk_gather_bench(n: int = 20000) -> List[Row]:
              "tiles_dense": float(tiles_dense),
              "tiles_gather": float(sched.n_visits),
              "visit_frac": sched.density}),
+    ]
+
+
+def index_build_vs_batch_plan_bench(n: int = 20000,
+                                    batches: int = 8) -> List[Row]:
+    """The build-once amortization claim, measured: one ``SIndex`` build
+    (S-side phase 1 + pivot-sorted packing) vs per-micro-batch query
+    planning (jitted assignment + θ/LB + grouping) vs the per-batch join
+    itself. Build cost is paid once; each R micro-batch pays only
+    plan+join — ``build_over_plan`` says how many batch-plans one build
+    is worth."""
+    from repro.core import JoinConfig, build_index, execute_join, plan_queries
+
+    n_s, dim, k = n, 8, 10
+    batch = max(64, n // 40)
+    s = _clustered(n_s, dim, seed=0)
+    cfg = JoinConfig(k=k, n_pivots=64, n_groups=8, seed=3)
+
+    t0 = time.perf_counter()
+    index = build_index(s, cfg)
+    t_build = time.perf_counter() - t0
+
+    # warm the jitted planner (tracing is a one-time cost, not the
+    # steady-state per-batch price this row is about)
+    warm = _clustered(batch, dim, seed=9)
+    execute_join(warm, index, plan_queries(warm, index, cfg))
+
+    t_plan = t_join = 0.0
+    for i in range(batches):
+        r = _clustered(batch, dim, seed=10 + i)
+        t0 = time.perf_counter()
+        qplan = plan_queries(r, index, cfg)
+        t_plan += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        execute_join(r, index, qplan)
+        t_join += time.perf_counter() - t0
+    plan_s = t_plan / batches
+    join_s = t_join / batches
+    return [
+        Row("kernel_index_build_amortization",
+            f"ns={n_s}x{dim},k={k},batch={batch},batches={batches}",
+            t_build,
+            {"index_build_s": t_build, "plan_batch_s": plan_s,
+             "join_batch_s": join_s,
+             "build_over_plan": t_build / plan_s,
+             "plan_frac_of_batch": plan_s / (plan_s + join_s)}),
+    ]
+
+
+def streaming_vs_oneshot_bench(n: int = 20000,
+                               batches: int = 8) -> List[Row]:
+    """knn_join_batched (micro-batched, bounded working set) vs one-shot
+    knn_join against the same prebuilt index — the streaming overhead is
+    the per-batch planning, already amortized by the resident index."""
+    from repro.core import JoinConfig, build_index, knn_join, knn_join_batched
+
+    n_s, dim, k = n, 8, 10
+    n_r = max(256, n // 10)
+    s = _clustered(n_s, dim, seed=0)
+    r = _clustered(n_r, dim, seed=1)
+    cfg = JoinConfig(k=k, n_pivots=64, n_groups=8, seed=3)
+    index = build_index(s, cfg)
+    bs = -(-n_r // batches)
+    # warm every jitted stage at the shapes the timed runs will hit
+    # (assignment, θ/LB, and the sorted-run merge at both batch shapes)
+    knn_join_batched(r[:bs], index=index, config=cfg, batch_size=bs)
+    knn_join_batched(r[:64], index=index, config=cfg, batch_size=64)
+    knn_join(r[:64], config=cfg, index=index)
+
+    t0 = time.perf_counter()
+    one = knn_join(r, config=cfg, index=index)
+    t_one = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = knn_join_batched(r, index=index, config=cfg, batch_size=bs)
+    t_stream = time.perf_counter() - t0
+    if not np.array_equal(res.distances, one.distances):
+        raise AssertionError("streaming result diverged from one-shot")
+    return [
+        Row("kernel_streaming_vs_oneshot",
+            f"nr={n_r},ns={n_s}x{dim},k={k},batches={batches}", t_stream,
+            {"oneshot_s": t_one, "streaming_s": t_stream,
+             "overhead_frac": (t_stream - t_one) / t_one}),
     ]
 
 
@@ -183,4 +258,5 @@ def pack_send_buffers_bench(n: int = 100_000) -> List[Row]:
 
 
 ALL = [distance_topk_bench, distance_topk_gather_bench,
+       index_build_vs_batch_plan_bench, streaming_vs_oneshot_bench,
        pack_send_buffers_bench, assign_bench, flash_attention_bench]

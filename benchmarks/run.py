@@ -36,10 +36,16 @@ def main() -> None:
                     kwargs["n"] = 3000
                 if "base_n" in sig.parameters:
                     kwargs["base_n"] = 1500
+                # index-build / streaming benches: fewer micro-batches
+                if "batches" in sig.parameters:
+                    kwargs["batches"] = 3
             for row in fn(**kwargs):
                 print(row.csv(), flush=True)
+                # numpy scalars (int64/float32) are not JSON serializable
                 records.append({"bench": row.bench, "params": row.params,
-                                "seconds": row.seconds, **row.derived})
+                                "seconds": float(row.seconds),
+                                **{k: float(v)
+                                   for k, v in row.derived.items()}})
         except Exception:  # noqa: BLE001 — keep the suite going
             failures += 1
             print(f"# FAILED {fn.__name__}", flush=True)

@@ -33,8 +33,9 @@ def main():
     # contexts ≈ the model's own representations via the lm head weights
     keys = np.asarray(hs[:, :-1].reshape(-1, cfg.vocab))[:, :64]  # (N, 64)
     vals = corpus[:, 1:].reshape(-1)
+    # S-side phase 1 runs once here; each decode step's hidden-state batch
+    # is planned fresh against the resident index (no warmup queries)
     store = Datastore.build(keys, vals, k=8, n_pivots=64, n_groups=4)
-    store.prepare(keys[:256])
     kcfg = KnnLMConfig(lam=0.3, tau=100.0, k=8)
 
     def hook(logits, cache):

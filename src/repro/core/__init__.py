@@ -3,12 +3,15 @@ from .types import JoinConfig, JoinResult, JoinStats, SummaryTable
 from .pivots import select_pivots
 from .partition import assign_to_pivots, build_summary, assign_and_summarize
 from .bounds import (
-    pivot_distance_matrix, compute_theta, replication_lower_bounds,
-    group_lower_bounds, hyperplane_distances, ring_bounds)
+    pivot_distance_matrix, compute_theta, theta_and_lb,
+    replication_lower_bounds, group_lower_bounds, hyperplane_distances,
+    ring_bounds)
 from .grouping import (
     geometric_grouping, greedy_grouping, group_partitions,
     replication_count_exact, replication_count_partitions)
-from .api import knn_join, plan_join, JoinPlan
+from .index import SIndex, QueryPlan, build_index, plan_queries
+from .api import knn_join, plan_join, execute_join, JoinPlan
+from .stream import StreamJoinEngine, StreamJoinState, knn_join_batched
 from .schedule import TileSchedule, build_tile_schedule, compact_visit_mask
 from .metrics import pairwise_dist
 from .baselines import brute_force_knn, hbrj_join, pbj_join
@@ -17,11 +20,13 @@ __all__ = [
     "JoinConfig", "JoinResult", "JoinStats", "SummaryTable",
     "select_pivots", "assign_to_pivots", "build_summary",
     "assign_and_summarize", "pivot_distance_matrix", "compute_theta",
-    "replication_lower_bounds", "group_lower_bounds",
+    "theta_and_lb", "replication_lower_bounds", "group_lower_bounds",
     "hyperplane_distances", "ring_bounds",
     "geometric_grouping", "greedy_grouping", "group_partitions",
     "replication_count_exact", "replication_count_partitions",
-    "knn_join", "plan_join", "JoinPlan",
+    "SIndex", "QueryPlan", "build_index", "plan_queries",
+    "knn_join", "plan_join", "execute_join", "JoinPlan",
+    "StreamJoinEngine", "StreamJoinState", "knn_join_batched",
     "TileSchedule", "build_tile_schedule", "compact_visit_mask",
     "pairwise_dist",
     "brute_force_knn", "hbrj_join", "pbj_join",

@@ -1,12 +1,21 @@
 """Public entry points for the PGBJ kNN join (single-host engine).
 
-``knn_join`` runs the full paper pipeline:
-   preprocessing (pivots) → job 1 (partition + summaries) →
-   host grouping/bounds → job 2 (replicate + per-group join).
+The planner is split into two artifacts (see ``core.index``):
 
-The distributed (shard_map) execution lives in ``core.distributed``; it
-shares every stage of this module except the final per-group loop, which
-it runs as SPMD over the mesh.
+* ``SIndex``    — build-once S side: pivots, ``pivd``, S assignment,
+                  T_S, and the S rows packed into pivot-sorted tiles.
+* ``QueryPlan`` — per-R-batch: assignment, θ, LB matrices, grouping
+                  (jitted jnp assignment/bounds math).
+
+``knn_join`` composes them: preprocessing (pivots) → S-side phase 1
+(once, or reused via ``index=``) → per-batch query planning → job 2
+(replicate + per-group join). ``JoinPlan`` survives as a thin facade
+over ``(SIndex, QueryPlan)`` for callers of the pre-split API.
+
+The streaming micro-batch engine lives in ``core.stream``
+(``knn_join_batched``); the distributed (shard_map) execution in
+``core.distributed`` — both share the index, the planner and the
+per-group executor below.
 """
 from __future__ import annotations
 
@@ -15,182 +24,198 @@ from typing import Optional
 
 import numpy as np
 
-from . import bounds as B
-from . import grouping as G
-from .join import join_group_dense, join_group_gather, join_group_pruned
-from .partition import assign_and_summarize
-from .pivots import select_pivots
-from .schedule import build_tile_schedule
+from .index import SIndex, QueryPlan, build_index, plan_queries
+from .join import join_group
+from .metrics import canonical_topk
 from .types import JoinConfig, JoinResult, JoinStats, SummaryTable
 
-__all__ = ["knn_join", "JoinPlan", "plan_join"]
+__all__ = ["knn_join", "JoinPlan", "plan_join", "execute_join"]
 
 
 @dataclasses.dataclass
 class JoinPlan:
-    """Everything job 2 needs, computed before any shuffle (paper §4.3/§5).
+    """Facade over the split planner: one build-once ``SIndex`` + one
+    per-batch ``QueryPlan`` presented with the monolithic plan's field
+    layout (paper §4.3/§5 — the "compLBOfReplica" product).
 
-    This is the "compLBOfReplica" product: pivots, summary tables, θ, the
-    LB matrices and the grouping. It is cheap (O(M²)) and host-resident —
-    the distributed runtime broadcasts it to every worker like the paper
-    loads pivots into every mapper.
+    Kept so pre-split callers (baseline benchmarks, the fault-tolerance
+    regrouping, existing tests) keep working; new code should hold the
+    two parts directly and reuse ``index`` across batches.
     """
 
-    config: JoinConfig
-    pivots: np.ndarray           # (M, dim)
-    pivd: np.ndarray             # (M, M)
-    r_part: np.ndarray           # (|R|,)
-    r_dist: np.ndarray           # (|R|,)
-    s_part: np.ndarray           # (|S|,)
-    s_dist: np.ndarray           # (|S|,)
-    t_r: SummaryTable
-    t_s: SummaryTable
-    theta: np.ndarray            # (M,)
-    lb: np.ndarray               # (M_s, M_r)   Cor. 2
-    groups: np.ndarray           # (M,) group id per R-partition
-    lb_group: np.ndarray         # (M_s, N)     Thm 6
+    index: SIndex
+    query: QueryPlan
+
+    # ---- forwarded S-side (build-once) fields
+    @property
+    def config(self) -> JoinConfig:
+        return self.query.config
+
+    @property
+    def pivots(self) -> np.ndarray:
+        return self.index.pivots
+
+    @property
+    def pivd(self) -> np.ndarray:
+        return self.index.pivd
+
+    @property
+    def s_part(self) -> np.ndarray:
+        return self.index.s_part
+
+    @property
+    def s_dist(self) -> np.ndarray:
+        return self.index.s_dist
+
+    @property
+    def t_s(self) -> SummaryTable:
+        return self.index.t_s
+
+    # ---- forwarded R-side (per-batch) fields
+    @property
+    def r_part(self) -> np.ndarray:
+        return self.query.r_part
+
+    @property
+    def r_dist(self) -> np.ndarray:
+        return self.query.r_dist
+
+    @property
+    def t_r(self) -> SummaryTable:
+        return self.query.t_r
+
+    @property
+    def theta(self) -> np.ndarray:
+        return self.query.theta
+
+    @property
+    def lb(self) -> np.ndarray:
+        return self.query.lb
+
+    @property
+    def groups(self) -> np.ndarray:
+        return self.query.groups
+
+    @property
+    def lb_group(self) -> np.ndarray:
+        return self.query.lb_group
 
     @property
     def n_groups(self) -> int:
-        return int(self.lb_group.shape[1])
+        return self.query.n_groups
 
     def group_of_r(self) -> np.ndarray:
-        return self.groups[self.r_part]
+        return self.query.group_of_r()
 
     def s_replica_mask(self, g: int) -> np.ndarray:
-        """Theorem 6 membership test: which S rows ship to group g."""
-        return self.s_dist >= self.lb_group[self.s_part, g]
+        """Theorem 6 membership test: which S rows (original order) ship
+        to group g."""
+        return self.index.s_dist >= self.query.lb_group[self.index.s_part, g]
 
 
 def plan_join(r: np.ndarray, s: np.ndarray, config: JoinConfig) -> JoinPlan:
-    """Run preprocessing + job 1 + host-side bound/grouping computation."""
+    """Run preprocessing + job 1 + bound/grouping computation.
+
+    Pivots are selected from R (the paper's prescription); the S side
+    then builds once and the R side plans against it — callers that
+    reuse S across many query sets should call ``build_index`` +
+    ``plan_queries`` directly instead.
+    """
     r = np.ascontiguousarray(r, np.float32)
-    s = np.ascontiguousarray(s, np.float32)
-    m = min(config.n_pivots, r.shape[0])
-    pivots = select_pivots(
-        r, m, config.pivot_strategy,
-        sample=config.pivot_sample,
-        n_sets=config.pivot_candidate_sets,
-        seed=config.seed)
-    r_part, r_dist, t_r = assign_and_summarize(r, pivots,
-                                               metric=config.metric)
-    s_part, s_dist, t_s = assign_and_summarize(s, pivots, k=config.k,
-                                               metric=config.metric)
-    pivd = B.pivot_distance_matrix(pivots, config.metric)
-    theta = B.compute_theta(pivd, t_r, t_s, config.k)
-    lb = B.replication_lower_bounds(pivd, t_r, theta)
-    n_groups = min(config.n_groups, m)
-    groups = G.group_partitions(
-        config.grouping, pivd, t_r, n_groups, lb=lb, t_s=t_s)
-    lb_group = B.group_lower_bounds(lb, groups, n_groups)
-    return JoinPlan(
-        config=config, pivots=pivots, pivd=pivd,
-        r_part=r_part, r_dist=r_dist, s_part=s_part, s_dist=s_dist,
-        t_r=t_r, t_s=t_s, theta=theta, lb=lb,
-        groups=groups, lb_group=lb_group)
+    index = build_index(s, config, pivot_data=r)
+    return JoinPlan(index=index, query=plan_queries(r, index, config))
+
+
+def execute_join(
+    r: np.ndarray,
+    index: SIndex,
+    qplan: QueryPlan,
+    *,
+    stats: Optional[JoinStats] = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Job 2 over one query batch: per-group replicate + join against the
+    resident index. Returns (dists (|R|, k), ids (|R|, k)) — ids are
+    global S row indices, distances true (non-squared), ascending."""
+    cfg = qplan.config
+    r = np.ascontiguousarray(r, np.float32)
+    out_i = np.full((r.shape[0], cfg.k), -1, np.int64)
+    group_of_r = qplan.group_of_r()
+    for g in range(qplan.n_groups):
+        r_sel = np.where(group_of_r == g)[0]
+        if r_sel.size == 0:
+            continue
+        _, gi = join_group(g, r, r_sel, index, qplan, stats=stats)
+        out_i[r_sel] = gi
+    # report distances in the shape-canonical form (metrics.canonical_topk)
+    # so a query's output is bitwise-independent of its batch's makeup —
+    # the contract the streaming engine's any-split equality rests on
+    return canonical_topk(r, out_i, index.rows_for_ids(out_i), cfg.metric)
 
 
 def knn_join(
     r: np.ndarray,
-    s: np.ndarray,
+    s: Optional[np.ndarray] = None,
     k: int | None = None,
     config: Optional[JoinConfig] = None,
     *,
     plan: Optional[JoinPlan] = None,
+    index: Optional[SIndex] = None,
 ) -> JoinResult:
     """PGBJ kNN join: for every row of ``r``, the k nearest rows of ``s``.
 
     Returns global S row indices and true distances, ascending per query.
+
+    ``index=`` joins against a prebuilt ``SIndex`` (S-side phase 1 is
+    *not* re-run; ``s`` may be omitted); ``plan=`` additionally reuses a
+    query plan. Otherwise the index is built from ``s`` with pivots
+    selected from ``r`` — the paper's one-shot pipeline.
     """
+    if plan is not None:
+        index = plan.index
+    if index is not None:
+        config = config or index.config
     config = config or JoinConfig(k=k or 10)
     if k is not None and k != config.k:
         config = dataclasses.replace(config, k=k)
-    if config.k > s.shape[0]:
-        raise ValueError(f"k={config.k} > |S|={s.shape[0]}")
     r = np.ascontiguousarray(r, np.float32)
-    s = np.ascontiguousarray(s, np.float32)
-    if plan is None:
-        plan = plan_join(r, s, config)
-    stats = JoinStats(n_r=r.shape[0], n_s=s.shape[0])
-    # job-1 mapper pivot distances count toward Eq. 13 (paper §6 note)
-    stats.pivot_pairs_computed += (r.shape[0] + s.shape[0]) * plan.pivots.shape[0]
-
-    out_d = np.full((r.shape[0], config.k), np.inf, np.float32)
-    out_i = np.full((r.shape[0], config.k), -1, np.int64)
-    s_ids_all = np.arange(s.shape[0], dtype=np.int64)
-    group_of_r = plan.group_of_r()
-    reducer = config.resolved_reducer
-    for g in range(plan.n_groups):
-        r_sel = np.where(group_of_r == g)[0]
-        if r_sel.size == 0:
-            continue
-        s_mask = plan.s_replica_mask(g)
-        stats.replicas_s += int(s_mask.sum())
-        s_sel = np.where(s_mask)[0]
-        if reducer == "gather":
-            gd, gi = _join_group_gather(
-                r, s, r_sel, s_sel, s_ids_all, plan, config, stats)
-        elif reducer == "pruned":
-            gd, gi = join_group_pruned(
-                r[r_sel], plan.r_part[r_sel],
-                s[s_sel], plan.s_part[s_sel], plan.s_dist[s_sel],
-                s_ids_all[s_sel],
-                plan.pivots, plan.pivd, plan.theta,
-                plan.t_s.lower, plan.t_s.upper, config.k,
-                tile_r=config.tile_r, tile_s=config.tile_s, stats=stats,
-                metric=config.metric)
-        else:
-            gd, gi = join_group_dense(
-                r[r_sel], s[s_sel], s_ids_all[s_sel], config.k,
-                tile_r=config.tile_r, tile_s=config.tile_s, stats=stats,
-                metric=config.metric)
-        out_d[r_sel] = gd
-        out_i[r_sel] = gi
-    return JoinResult(indices=out_i, distances=out_d, stats=stats)
-
-
-def _join_group_gather(r, s, r_sel, s_sel, s_ids_all, plan, config, stats):
-    """One group through the pruned-schedule path.
-
-    Queries are sorted by home partition and S replicas by (partition,
-    pivot distance) so tiles are partition-coherent — that layout is what
-    makes the tile-granular ring bounds bite. On TPU the compacted
-    schedule feeds the scalar-prefetch Pallas kernel (pruned tiles never
-    DMA); elsewhere its host twin walks the identical schedule.
-    """
-    order_r = np.argsort(plan.r_part[r_sel], kind="stable")
-    rr = np.ascontiguousarray(r[r_sel][order_r])
-    rp = plan.r_part[r_sel][order_r]
-    order_s = np.lexsort((plan.s_dist[s_sel], plan.s_part[s_sel]))
-    ss = np.ascontiguousarray(s[s_sel][order_s])
-    sp = plan.s_part[s_sel][order_s]
-    sd = plan.s_dist[s_sel][order_s]
-    sids = s_ids_all[s_sel][order_s]
-
-    sched = build_tile_schedule(
-        rr, rp, sp, sd, plan.pivots, plan.pivd, plan.theta,
-        bm=config.tile_r, bn=config.tile_s, metric=config.metric,
-        knn_dists=plan.t_s.knn_dists, k=config.k, stats=stats)
-
-    from repro.kernels import ops
-    if config.metric == "l2" and ops.use_pallas():
-        import jax.numpy as jnp
-        d, i_local = ops.distance_topk(
-            jnp.asarray(rr), jnp.asarray(ss), config.k,
-            schedule=jnp.asarray(sched.schedule),
-            counts=jnp.asarray(sched.counts),
-            bm=config.tile_r, bn=config.tile_s, impl="gather")
-        gd = np.asarray(d)
-        il = np.asarray(i_local)
-        gi = np.where(il >= 0, sids[np.clip(il, 0, len(sids) - 1)], -1)
-        stats.tiles_total += sched.nr_tiles * sched.ns_tiles
-        stats.tiles_visited += sched.n_visits
-        stats.pairs_computed += sched.n_visits * config.tile_r * config.tile_s
+    built_here = index is None
+    if index is None:
+        if s is None:
+            raise ValueError("knn_join needs s= or a prebuilt plan/index")
+        s = np.ascontiguousarray(s, np.float32)
+        if config.k > s.shape[0]:
+            raise ValueError(f"k={config.k} > |S|={s.shape[0]}")
+        index = build_index(s, config, pivot_data=r)
     else:
-        gd, gi = join_group_gather(
-            rr, ss, sids, config.k, sched, stats=stats,
-            metric=config.metric)
-    # undo the query sort
-    inv = np.empty_like(order_r)
-    inv[order_r] = np.arange(order_r.size)
-    return gd[inv], gi[inv]
+        if s is not None and s.shape[0] != index.n_s:
+            raise ValueError(
+                f"s has {s.shape[0]} rows but the prebuilt index holds "
+                f"{index.n_s}; results would index the wrong dataset")
+        if config.k > index.n_s:
+            raise ValueError(f"k={config.k} > |S|={index.n_s}")
+    if plan is not None:
+        qplan = plan.query
+        if config is not qplan.config:
+            # honor the caller's k/reducer/tile knobs against the reused
+            # bounds; θ/LB computed for plan.k stay sound only for k at
+            # most plan.k (smaller k needs fewer candidates shipped) and
+            # only in the metric they were derived for
+            if config.k > qplan.config.k:
+                raise ValueError(
+                    f"k={config.k} > plan was built for k={qplan.config.k}; "
+                    f"re-plan with plan_queries")
+            if config.metric != qplan.config.metric:
+                raise ValueError(
+                    f"metric={config.metric!r} but the plan was built with "
+                    f"{qplan.config.metric!r}")
+            qplan = dataclasses.replace(qplan, config=config)
+    else:
+        qplan = plan_queries(r, index, config)
+    stats = JoinStats(n_r=r.shape[0], n_s=index.n_s)
+    # job-1 mapper pivot distances count toward Eq. 13 (paper §6 note);
+    # a reused index's S-side phase 1 was paid at build, not here
+    stats.pivot_pairs_computed += r.shape[0] * index.n_pivots
+    if built_here:
+        stats.pivot_pairs_computed += index.n_s * index.n_pivots
+    out_d, out_i = execute_join(r, index, qplan, stats=stats)
+    return JoinResult(indices=out_i, distances=out_d, stats=stats)

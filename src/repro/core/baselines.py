@@ -15,6 +15,7 @@ from typing import Tuple
 import numpy as np
 
 from .join import join_group_dense, topk_merge
+from .metrics import canonical_topk
 from .partition import assign_and_summarize
 from .pivots import select_pivots
 from .types import JoinConfig, JoinResult, JoinStats
@@ -27,13 +28,36 @@ def brute_force_knn(
     r: np.ndarray, s: np.ndarray, k: int, *, tile_r: int = 256,
     tile_s: int = 2048, metric: str = "l2",
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Exact oracle: (dists, ids), ascending. O(|R||S|)."""
-    stats = JoinStats()
-    d, i = join_group_dense(
-        np.asarray(r, np.float32), np.asarray(s, np.float32),
-        np.arange(s.shape[0], dtype=np.int64), k,
-        tile_r=tile_r, tile_s=tile_s, stats=stats, metric=metric)
-    return d, i
+    """Exact oracle: (dists, ids), ascending. O(|R||S|).
+
+    Selection runs in float64 (an oracle must out-resolve the engines'
+    float32 noise — on data far from the origin real kNN gaps can sit
+    below f32 cancellation error); reported distances then go through
+    the same shape-canonical float32 form (`metrics.canonical_topk`) the
+    engines emit, so oracle and engine outputs are directly comparable.
+    """
+    r = np.asarray(r, np.float32)
+    s = np.asarray(s, np.float32)
+    r64 = r.astype(np.float64)
+    s64 = s.astype(np.float64)
+    out_i = np.empty((r.shape[0], k), np.int64)
+    if metric == "l2":
+        s2 = (s64 * s64).sum(-1)
+    for lo in range(0, r.shape[0], tile_r):
+        hi = min(lo + tile_r, r.shape[0])
+        if metric == "l2":
+            q = r64[lo:hi]
+            d = (q * q).sum(-1)[:, None] + s2[None, :] - 2.0 * (q @ s64.T)
+        else:
+            diff = np.abs(r64[lo:hi, None, :] - s64[None, :, :])
+            d = diff.sum(-1) if metric == "l1" else diff.max(-1)
+        part = np.argpartition(d, k - 1, axis=1)[:, :k]
+        dk = np.take_along_axis(d, part, axis=1)
+        order = np.argsort(dk, axis=1, kind="stable")
+        out_i[lo:hi] = np.take_along_axis(part, order, axis=1)
+    out_d, out_i = canonical_topk(
+        r, out_i, s[np.clip(out_i, 0, s.shape[0] - 1)], metric)
+    return out_d, out_i
 
 
 def hbrj_join(
@@ -68,6 +92,8 @@ def hbrj_join(
             bd, bi = topk_merge(bd, bi, gd.astype(np.float32) ** 2, gi, k)
         out_d[r_sel] = np.sqrt(bd)
         out_i[r_sel] = bi
+    out_d, out_i = canonical_topk(
+        r, out_i, s[np.clip(out_i, 0, s.shape[0] - 1)])
     return JoinResult(indices=out_i, distances=out_d, stats=stats)
 
 
@@ -127,6 +153,8 @@ def pbj_join(
             bd, bi = topk_merge(bd, bi, gd.astype(np.float32) ** 2, gi, k)
         out_d[r_sel] = np.sqrt(bd)
         out_i[r_sel] = bi
+    out_d, out_i = canonical_topk(
+        r, out_i, s[np.clip(out_i, 0, s.shape[0] - 1)])
     return JoinResult(indices=out_i, distances=out_d, stats=stats)
 
 

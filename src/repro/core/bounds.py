@@ -13,8 +13,11 @@ TPU analogue (and no effect on the result).
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .types import SummaryTable
@@ -22,6 +25,7 @@ from .types import SummaryTable
 __all__ = [
     "pivot_distance_matrix",
     "compute_theta",
+    "theta_and_lb",
     "replication_lower_bounds",
     "group_lower_bounds",
     "hyperplane_distances",
@@ -85,6 +89,39 @@ def compute_theta(
         kth = np.partition(flat, k - 1, axis=1)[:, k - 1]
         theta[rows] = np.where(occupied[rows], kth + u_r[rows], -np.inf)
     return theta.astype(np.float32)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _theta_and_lb_jit(pivd, knn, u_r, occupied, *, k: int):
+    """Jitted fused θ (Eq. 6 / Alg. 1) + LB matrix (Cor. 2).
+
+    Selection (k-th smallest) and the additions mirror the host
+    `compute_theta`/`replication_lower_bounds` bit-for-bit: identical
+    float32 operands combined in the same order, with `top_k` replacing
+    `np.partition` (both exact selections of existing values).
+    """
+    ub = pivd[:, :, None] + knn[None, :, :]           # (M_r, M_s, <=k)
+    flat = ub.reshape(pivd.shape[0], -1)
+    kth = -jax.lax.top_k(-flat, k)[0][:, -1]          # k-th smallest
+    theta = jnp.where(occupied, kth + u_r, -jnp.inf)
+    lb = pivd.T - u_r[None, :] - theta[None, :]
+    lb = jnp.where(jnp.isfinite(theta)[None, :], lb, jnp.inf)
+    return theta, jnp.maximum(lb, 0.0)
+
+
+def theta_and_lb(
+    pivd: np.ndarray, t_r: SummaryTable, t_s: SummaryTable, k: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-batch bound math on the jitted jnp path: returns (θ (M_r,),
+    LB (M_s, M_r)) — `compute_theta` + `replication_lower_bounds` fused
+    into one device computation (the per-batch planner's hot loop).
+    Callers must ensure T_S holds >= k finite candidates in total."""
+    assert t_s.knn_dists is not None, "T_S must carry pivot-kNN distances"
+    knn = t_s.knn_dists.astype(np.float32)
+    theta, lb = _theta_and_lb_jit(
+        jnp.asarray(pivd), jnp.asarray(knn[:, :k]),
+        jnp.asarray(t_r.upper), jnp.asarray(t_r.counts > 0), k=k)
+    return (np.asarray(theta, np.float32), np.asarray(lb, np.float32))
 
 
 def replication_lower_bounds(

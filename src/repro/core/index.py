@@ -1,0 +1,219 @@
+"""Build-once S-index + per-batch query planner — the planning split.
+
+The paper's pipeline is asymmetric: everything on the S side (Voronoi
+partitioning against the pivots, the T_S summary table, the
+pivot-sorted row layout the tile engines want) is a function of S
+alone, while everything on the R side (assignment, θ, the LB matrices,
+grouping, tile schedules) depends on the query set. This module splits
+the former monolithic ``JoinPlan`` along exactly that line:
+
+* ``SIndex`` — built **once** per dataset S by :func:`build_index`:
+  pivots, the pivot-distance matrix, S's partition assignment and
+  summary table, and the S rows pre-packed into pivot-sorted
+  (partition, pivot-distance) order so every downstream engine gets
+  partition-coherent tiles without re-sorting. The packed rows can be
+  pinned on device (:meth:`SIndex.device_rows`) and reused across any
+  number of query batches.
+
+* ``QueryPlan`` — built **per R batch** by :func:`plan_queries`: the
+  batch's pivot assignment, T_R, θ (Alg. 1 / Thm 3), the replication
+  lower-bound matrix (Cor. 2) and the reducer grouping (§5). The
+  assignment and θ/LB math run as jitted jnp (`partition._assign_blocked`
+  + `bounds.theta_and_lb_jit`), so per-batch planning cost is a couple of
+  fused device launches, not a host O(M²·k) numpy pass.
+
+One index, many scenarios: the one-shot join (``core.api.knn_join``),
+the streaming micro-batch engine (``core.stream``), the shard_map
+runtime (``core.distributed.DistributedJoinEngine``) and the kNN-LM
+serve path (``serve.retrieval.Datastore``) all consume the same
+``(SIndex, QueryPlan)`` pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from . import bounds as B
+from . import grouping as G
+from .partition import assign_and_summarize, assign_to_pivots, build_summary
+from .pivots import select_pivots
+from .types import JoinConfig, SummaryTable
+
+__all__ = ["SIndex", "QueryPlan", "build_index", "plan_queries"]
+
+
+@dataclasses.dataclass
+class SIndex:
+    """Everything derivable from S alone — computed once, reused forever.
+
+    The S rows are stored in pivot-sorted order (stable lexsort by
+    (partition, pivot distance)): the subset of a sorted array is sorted,
+    so per-group replica selection never re-sorts, and tiles cut from
+    the packed rows are partition-coherent — the layout the pruned tile
+    schedules (core.schedule) and the Pallas gather kernel rely on.
+    """
+
+    config: JoinConfig           # build-time knobs (k, metric, pivots, …)
+    pivots: np.ndarray           # (M, dim)
+    pivd: np.ndarray             # (M, M) true pivot-pivot distances
+    s_part: np.ndarray           # (|S|,) partition id, original row order
+    s_dist: np.ndarray           # (|S|,) |s, p(s)|, original row order
+    t_s: SummaryTable            # counts / L / U / pivot-kNN lists (§4.2)
+    s_order: np.ndarray          # (|S|,) sorted position -> original row
+    s_sorted: np.ndarray         # (|S|, dim) rows in (part, dist) order
+    s_part_sorted: np.ndarray    # (|S|,) int32
+    s_dist_sorted: np.ndarray    # (|S|,) float32
+    s_ids_sorted: np.ndarray     # (|S|,) int64 == s_order
+    s_inv: np.ndarray            # (|S|,) original row -> sorted position
+    _device_rows: object = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def n_s(self) -> int:
+        return int(self.s_part.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.pivots.shape[1])
+
+    @property
+    def n_pivots(self) -> int:
+        return int(self.pivots.shape[0])
+
+    def device_rows(self):
+        """The packed pivot-sorted S rows as a device-resident jnp array
+        (uploaded lazily, cached for the index's lifetime)."""
+        if self._device_rows is None:
+            import jax.numpy as jnp
+            self._device_rows = jnp.asarray(self.s_sorted)
+        return self._device_rows
+
+    def replica_mask_sorted(self, lb_group: np.ndarray, g: int) -> np.ndarray:
+        """Theorem 6 membership over the *sorted* row layout: which packed
+        S rows ship to group ``g`` under a query plan's ``lb_group``."""
+        return self.s_dist_sorted >= lb_group[self.s_part_sorted, g]
+
+    def rows_for_ids(self, ids: np.ndarray) -> np.ndarray:
+        """Gather S rows by original (global) row id from the packed
+        layout; negative ids yield arbitrary rows (callers mask them)."""
+        pos = self.s_inv[np.clip(ids, 0, self.n_s - 1)]
+        return self.s_sorted[pos]
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    """Everything job 2 needs that depends on the query batch (paper
+    §4.3/§5): assignment, θ, the LB matrices and the grouping. O(M²)
+    host-resident — broadcast to every worker like the paper loads
+    pivots into every mapper."""
+
+    config: JoinConfig
+    r_part: np.ndarray           # (|R|,)
+    r_dist: np.ndarray           # (|R|,)
+    t_r: SummaryTable
+    theta: np.ndarray            # (M,)       Eq. 6 / Algorithm 1
+    lb: np.ndarray               # (M_s, M_r) Cor. 2
+    groups: np.ndarray           # (M,) group id per R-partition
+    lb_group: np.ndarray         # (M_s, N)   Thm 6
+
+    @property
+    def n_r(self) -> int:
+        return int(self.r_part.shape[0])
+
+    @property
+    def n_groups(self) -> int:
+        return int(self.lb_group.shape[1])
+
+    def group_of_r(self) -> np.ndarray:
+        return self.groups[self.r_part]
+
+
+def build_index(
+    s: np.ndarray,
+    config: Optional[JoinConfig] = None,
+    *,
+    pivot_data: Optional[np.ndarray] = None,
+    pivots: Optional[np.ndarray] = None,
+) -> SIndex:
+    """S-side phase 1, once: pivot selection, Voronoi assignment, T_S,
+    and the pivot-sorted row packing.
+
+    ``pivot_data`` chooses where pivots are sampled from: the paper
+    selects them from R, which a build-once index cannot see — the
+    default samples from S instead (any pivot set is correct; only the
+    pruning rate changes). The one-shot ``knn_join`` passes its R to
+    reproduce the paper's preprocessing exactly. ``pivots`` overrides
+    selection entirely (e.g. pivots recovered from a checkpoint).
+    """
+    config = config or JoinConfig()
+    s = np.ascontiguousarray(s, np.float32)
+    if pivots is None:
+        src = s if pivot_data is None else np.asarray(pivot_data)
+        m = min(config.n_pivots, src.shape[0])
+        pivots = select_pivots(
+            src, m, config.pivot_strategy,
+            sample=config.pivot_sample,
+            n_sets=config.pivot_candidate_sets,
+            seed=config.seed)
+    else:
+        pivots = np.ascontiguousarray(pivots, np.float32)
+    s_part, s_dist, t_s = assign_and_summarize(
+        s, pivots, k=config.k, metric=config.metric)
+    pivd = B.pivot_distance_matrix(pivots, config.metric)
+    # pack once: stable (partition, pivot distance) order — every engine
+    # slices partition-coherent tiles out of this layout from now on
+    order = np.lexsort((s_dist, s_part))
+    inv = np.empty_like(order)
+    inv[order] = np.arange(order.shape[0])
+    return SIndex(
+        config=config, pivots=pivots, pivd=pivd,
+        s_part=s_part, s_dist=s_dist, t_s=t_s,
+        s_order=order,
+        s_sorted=np.ascontiguousarray(s[order]),
+        s_part_sorted=np.ascontiguousarray(s_part[order].astype(np.int32)),
+        s_dist_sorted=np.ascontiguousarray(s_dist[order].astype(np.float32)),
+        s_ids_sorted=order.astype(np.int64),
+        s_inv=inv)
+
+
+def plan_queries(
+    r: np.ndarray,
+    index: SIndex,
+    config: Optional[JoinConfig] = None,
+) -> QueryPlan:
+    """R-side planning for one query batch against a resident index.
+
+    Assignment runs on the jitted jnp path (`partition.assign_to_pivots`),
+    θ and the LB matrix on `bounds.theta_and_lb_jit` — one fused device
+    computation per batch instead of the former blocked host loop.
+    Grouping stays host-side: O(M²) scalar work with data-dependent
+    control flow, negligible next to assignment.
+    """
+    config = config or index.config
+    if config.metric != index.config.metric:
+        raise ValueError(
+            f"metric={config.metric!r} but the index was built with "
+            f"{index.config.metric!r}; pivd/T_S bounds do not transfer "
+            f"between metrics — rebuild the index")
+    r = np.ascontiguousarray(r, np.float32)
+    m = index.n_pivots
+    if index.t_s.knn_dists is None:
+        raise ValueError("index was built without T_S pivot-kNN lists")
+    finite = int(np.isfinite(
+        index.t_s.knn_dists[:, :config.k]).sum())
+    if finite < config.k:
+        raise ValueError(
+            f"T_S holds {finite} finite candidates; need >= k={config.k} "
+            f"(is |S| >= k?)")
+    r_part, r_dist = assign_to_pivots(r, index.pivots, metric=config.metric)
+    t_r = build_summary(r_part, r_dist, m)
+    theta, lb = B.theta_and_lb(index.pivd, t_r, index.t_s, config.k)
+    n_groups = min(config.n_groups, m)
+    groups = G.group_partitions(
+        config.grouping, index.pivd, t_r, n_groups, lb=lb, t_s=index.t_s)
+    lb_group = B.group_lower_bounds(lb, groups, n_groups)
+    return QueryPlan(
+        config=config, r_part=r_part, r_dist=r_dist, t_r=t_r,
+        theta=theta, lb=lb, groups=groups, lb_group=lb_group)

@@ -59,13 +59,22 @@ def pvary(x, axis_names):
 
 
 def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
-    """``jax.make_mesh`` with Auto axis types where the API has them."""
-    axis_type = getattr(jax.sharding, "AxisType", None)
-    if axis_type is not None:
-        try:
-            return jax.make_mesh(
-                tuple(axis_shapes), tuple(axis_names),
-                axis_types=(axis_type.Auto,) * len(tuple(axis_names)))
-        except TypeError:  # make_mesh without axis_types kwarg
-            pass
-    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    """``jax.make_mesh`` with Auto axis types where the API has them;
+    falls back to a hand-built ``jax.sharding.Mesh`` on JAX versions
+    that predate ``jax.make_mesh`` entirely."""
+    axis_shapes = tuple(axis_shapes)
+    axis_names = tuple(axis_names)
+    if hasattr(jax, "make_mesh"):
+        axis_type = getattr(jax.sharding, "AxisType", None)
+        if axis_type is not None:
+            try:
+                return jax.make_mesh(
+                    axis_shapes, axis_names,
+                    axis_types=(axis_type.Auto,) * len(axis_names))
+            except TypeError:  # make_mesh without axis_types kwarg
+                pass
+        return jax.make_mesh(axis_shapes, axis_names)
+    import numpy as np
+    n = int(np.prod(axis_shapes))
+    devices = np.asarray(jax.devices()[:n]).reshape(axis_shapes)
+    return jax.sharding.Mesh(devices, axis_names)

@@ -1,6 +1,9 @@
 """The reducer-side kNN join (paper Algorithm 3) — tile-adapted.
 
-Three engines, all exact:
+``join_group`` is the group executor: it consumes the split planner's
+``(SIndex, QueryPlan)`` pair — replica selection slices the index's
+pivot-sorted packing, so no per-group sort runs — and dispatches to one
+of three engines, all exact:
 
 * ``join_group_dense`` — blocked brute force between R_g and the shipped
   S_g. Correct because Cor. 2 guarantees S_g ⊇ KNN(r, S) for r ∈ R_g.
@@ -33,8 +36,8 @@ import numpy as np
 from .metrics import cmp_dist, from_cmp
 from .types import JoinStats
 
-__all__ = ["join_group_dense", "join_group_pruned", "join_group_gather",
-           "topk_merge"]
+__all__ = ["join_group", "join_group_dense", "join_group_pruned",
+           "join_group_gather", "topk_merge"]
 
 _INF = np.float32(np.inf)
 
@@ -120,6 +123,94 @@ def join_group_gather(
         stats.tiles_total += sched.nr_tiles * sched.ns_tiles
         stats.tiles_visited += sched.n_visits
     return out_d, out_i
+
+
+def join_group(
+    g: int,
+    r: np.ndarray,
+    r_sel: np.ndarray,
+    index,
+    qplan,
+    *,
+    stats: Optional[JoinStats] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """One reducer group through the configured engine, consuming the
+    build-once ``SIndex`` + per-batch ``QueryPlan`` pair.
+
+    The group's S replicas are sliced from the index's pivot-sorted
+    packing (a masked subset of a sorted array is sorted), so no
+    per-group lexsort runs — the schedule/gather engines get their
+    partition-coherent layout for free. Returns (dists, ids) rows
+    aligned with ``r_sel``.
+    """
+    cfg = qplan.config
+    k = cfg.k
+    mask = index.replica_mask_sorted(qplan.lb_group, g)
+    if stats is not None:
+        stats.replicas_s += int(mask.sum())
+    ss = index.s_sorted[mask]
+    sp = index.s_part_sorted[mask]
+    sd = index.s_dist_sorted[mask]
+    sids = index.s_ids_sorted[mask]
+    reducer = cfg.resolved_reducer
+    if reducer == "gather":
+        return _join_group_gather_scheduled(
+            r, r_sel, ss, sp, sd, sids, index, qplan, cfg, stats)
+    if reducer == "pruned":
+        return join_group_pruned(
+            r[r_sel], qplan.r_part[r_sel], ss, sp, sd, sids,
+            index.pivots, index.pivd, qplan.theta,
+            index.t_s.lower, index.t_s.upper, k,
+            tile_r=cfg.tile_r, tile_s=cfg.tile_s, stats=stats,
+            metric=cfg.metric)
+    return join_group_dense(
+        r[r_sel], ss, sids, k,
+        tile_r=cfg.tile_r, tile_s=cfg.tile_s, stats=stats,
+        metric=cfg.metric)
+
+
+def _join_group_gather_scheduled(r, r_sel, ss, sp, sd, sids, index, qplan,
+                                 cfg, stats):
+    """One group through the pruned-schedule path.
+
+    Queries are sorted by home partition (the S side arrives already
+    pivot-sorted from the index packing) so tiles are partition-coherent
+    — that layout is what makes the tile-granular ring bounds bite. On
+    TPU the compacted schedule feeds the scalar-prefetch Pallas kernel
+    (pruned tiles never DMA); elsewhere its host twin walks the
+    identical schedule.
+    """
+    from .schedule import schedule_for_group
+
+    k = cfg.k
+    order_r = np.argsort(qplan.r_part[r_sel], kind="stable")
+    rr = np.ascontiguousarray(r[r_sel][order_r])
+    rp = qplan.r_part[r_sel][order_r]
+
+    sched = schedule_for_group(index, qplan, rr, rp, sp, sd, stats=stats)
+
+    from repro.kernels import ops
+    if cfg.metric == "l2" and ops.use_pallas():
+        import jax.numpy as jnp
+        d, i_local = ops.distance_topk(
+            jnp.asarray(rr), jnp.asarray(ss), k,
+            schedule=jnp.asarray(sched.schedule),
+            counts=jnp.asarray(sched.counts),
+            bm=cfg.tile_r, bn=cfg.tile_s, impl="gather")
+        gd = np.asarray(d)
+        il = np.asarray(i_local)
+        gi = np.where(il >= 0, sids[np.clip(il, 0, len(sids) - 1)], -1)
+        if stats is not None:
+            stats.tiles_total += sched.nr_tiles * sched.ns_tiles
+            stats.tiles_visited += sched.n_visits
+            stats.pairs_computed += sched.n_visits * cfg.tile_r * cfg.tile_s
+    else:
+        gd, gi = join_group_gather(
+            rr, ss, sids, k, sched, stats=stats, metric=cfg.metric)
+    # undo the query sort
+    inv = np.empty_like(order_r)
+    inv[order_r] = np.arange(order_r.size)
+    return gd[inv], gi[inv]
 
 
 def join_group_pruned(

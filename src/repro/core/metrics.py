@@ -34,14 +34,67 @@ def pairwise_dist(a: np.ndarray, b: np.ndarray, metric: str = "l2",
 def cmp_dist(a: np.ndarray, b: np.ndarray, metric: str = "l2",
              *, block: int = 2048) -> np.ndarray:
     """Distances in *comparable* space (monotone in true distance):
-    squared for L2 (cheaper; no sqrt), true distance otherwise."""
+    squared for L2 (cheaper; no sqrt), true distance otherwise.
+
+    The L2 path recenters both sets by b's mean first: distances are
+    translation-invariant, but the ‖a‖²+‖b‖²−2ab cancellation noise is
+    O(‖x‖²·eps) — on data far from the origin (e.g. map coordinates)
+    that noise dwarfs real kNN gaps and corrupts top-k *selection*.
+    Centering shrinks it to O(spread²·eps) for two O(n·dim) passes.
+    """
     if metric == "l2":
         a = np.asarray(a, np.float32)
         b = np.asarray(b, np.float32)
+        c = np.mean(b, axis=0, dtype=np.float64).astype(np.float32) \
+            if b.shape[0] else np.zeros((b.shape[1],), np.float32)
+        a = a - c
+        b = b - c
         d2 = ((a * a).sum(-1)[:, None] + (b * b).sum(-1)[None, :]
               - 2.0 * (a @ b.T))
         return np.maximum(d2, 0.0, out=d2)
     return pairwise_dist(a, b, metric, block=block)
+
+
+def gathered_dist(q: np.ndarray, neigh: np.ndarray, metric: str = "l2",
+                  *, block: int = 8192) -> np.ndarray:
+    """True distances of each query to its gathered neighbor rows.
+
+    ``q`` (n, dim) vs ``neigh`` (n, k, dim) → (n, k). Shape-canonical:
+    every pair reduces over ``dim`` with the same fixed-order einsum/sum
+    loop no matter how many rows surround it, so the value of a (q, s)
+    pair is independent of batch composition — unlike BLAS matmul, whose
+    kernel dispatch (gemm vs gemv, blocking) varies with operand shape.
+    This is what lets the streaming engine promise bitwise-identical
+    results for any micro-batch split.
+    """
+    q = np.asarray(q, np.float32)
+    neigh = np.asarray(neigh, np.float32)
+    out = np.empty(neigh.shape[:2], np.float32)
+    for lo in range(0, q.shape[0], block):
+        hi = min(lo + block, q.shape[0])
+        qb, nb = q[lo:hi], neigh[lo:hi]
+        if metric == "l2":
+            diff = qb[:, None, :] - nb
+            out[lo:hi] = np.sqrt(np.einsum("nkd,nkd->nk", diff, diff))
+        else:
+            diff = np.abs(qb[:, None, :] - nb)
+            out[lo:hi] = diff.sum(-1) if metric == "l1" else diff.max(-1)
+    return out
+
+
+def canonical_topk(q: np.ndarray, ids: np.ndarray, neigh: np.ndarray,
+                   metric: str = "l2") -> tuple[np.ndarray, np.ndarray]:
+    """Finalize a top-k result: recompute the k selected distances in the
+    shape-canonical form and re-sort each row ascending by them (stable,
+    so engine tie order survives). ``ids < 0`` slots stay at +inf/-1.
+    The *selection* of the k set remains the engine's (exact over a
+    superset); only the reported values and their order are re-derived.
+    """
+    d = gathered_dist(q, neigh, metric)
+    d = np.where(ids >= 0, d, np.float32(np.inf)).astype(np.float32)
+    order = np.argsort(d, axis=1, kind="stable")
+    return (np.take_along_axis(d, order, axis=1),
+            np.take_along_axis(ids, order, axis=1))
 
 
 def from_cmp(d: np.ndarray, metric: str) -> np.ndarray:

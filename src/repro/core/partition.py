@@ -5,6 +5,11 @@ its nearest pivot; per-partition statistics (count, L, U and — for S — the
 k smallest object→pivot distances) are aggregated into the summary tables
 T_R / T_S.
 
+Under the split planner (core.index) the two halves run on different
+cadences: the S half exactly once inside ``build_index`` (the SIndex),
+the R half per query batch inside ``plan_queries`` — the jitted
+``_assign_blocked`` below is that per-batch hot path.
+
 The assignment hot-loop is also available as a Pallas TPU kernel
 (`repro.kernels.assign`); this module is the jnp reference path used by the
 single-host engine and by the distributed runtime on CPU.

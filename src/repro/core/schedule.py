@@ -42,7 +42,26 @@ import numpy as np
 from .metrics import cmp_dist, from_cmp
 from .types import JoinStats
 
-__all__ = ["TileSchedule", "build_tile_schedule", "compact_visit_mask"]
+__all__ = ["TileSchedule", "build_tile_schedule", "compact_visit_mask",
+           "schedule_for_group"]
+
+
+def schedule_for_group(
+    index, qplan, rr: np.ndarray, rp: np.ndarray,
+    sp: np.ndarray, sd: np.ndarray, *,
+    stats: Optional["JoinStats"] = None,
+) -> "TileSchedule":
+    """`build_tile_schedule` driven by the split planner: the build-once
+    ``SIndex`` supplies the geometry (pivots, ``pivd``, T_S pivot-kNN
+    lists), the per-batch ``QueryPlan`` supplies θ and the tile sizes.
+    ``rr``/``rp`` are the group's queries in kernel layout; ``sp``/``sd``
+    the group's S replicas (already pivot-sorted via the index packing).
+    """
+    cfg = qplan.config
+    return build_tile_schedule(
+        rr, rp, sp, sd, index.pivots, index.pivd, qplan.theta,
+        bm=cfg.tile_r, bn=cfg.tile_s, metric=cfg.metric,
+        knn_dists=index.t_s.knn_dists, k=cfg.k, stats=stats)
 
 
 @dataclasses.dataclass

@@ -39,6 +39,9 @@ class JoinConfig:
     # static compacted schedule (core.schedule) — the pruned-DMA path
     # (Pallas scalar-prefetch kernel on TPU, its host twin elsewhere)
     reducer: str = "auto"           # auto | dense | pruned | gather
+    # streaming engine (core.stream): R micro-batch rows per plan+join
+    # round; 0 = one-shot (whole query set in a single batch)
+    batch_size: int = 0
     seed: int = 0
 
     def __post_init__(self):
@@ -50,6 +53,8 @@ class JoinConfig:
             raise ValueError(f"unknown reducer {self.reducer!r}")
         if self.k < 1:
             raise ValueError("k must be >= 1")
+        if self.batch_size < 0:
+            raise ValueError("batch_size must be >= 0")
         if self.metric not in ("l2", "l1", "linf"):
             raise ValueError(f"unknown metric {self.metric!r}")
 
@@ -100,6 +105,8 @@ class JoinStats:
     # tile bookkeeping for the TPU-adapted engine
     tiles_total: int = 0
     tiles_visited: int = 0
+    # streaming engine: planned+joined R micro-batches (0 = one-shot path)
+    n_batches: int = 0
 
     @property
     def selectivity(self) -> float:

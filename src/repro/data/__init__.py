@@ -1,6 +1,7 @@
 from .pipeline import (
-    DataConfig, batch_iterator, expand_dataset, forest_like, osm_like,
-    synthetic_lm_batch)
+    DataConfig, batch_iterator, clustered_like, expand_dataset, forest_like,
+    osm_like, synthetic_lm_batch)
 
-__all__ = ["DataConfig", "batch_iterator", "expand_dataset", "forest_like",
-           "osm_like", "synthetic_lm_batch"]
+__all__ = ["DataConfig", "batch_iterator", "clustered_like",
+           "expand_dataset", "forest_like", "osm_like",
+           "synthetic_lm_batch"]

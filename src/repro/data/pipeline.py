@@ -74,6 +74,23 @@ def forest_like(n: int, dim: int = 10, seed: int = 0,
     return np.round(pts).astype(np.float32)
 
 
+def clustered_like(n: int, dim: int, seed: int, *, n_centers: int = 16,
+                   centers_seed: int = 42) -> np.ndarray:
+    """Gaussian blobs around shared uniform centers in [-20, 20]^dim.
+
+    ``centers_seed`` fixes the centers independently of ``seed`` so R and
+    S drawn with different seeds share cluster structure — the regime
+    where the paper's bounds bite (kNN radius ≪ dataset diameter). The
+    one generator behind both the schedule tests and the kernel benches,
+    so test and benchmark regimes cannot drift apart.
+    """
+    centers = np.random.default_rng(centers_seed).uniform(
+        -20, 20, (n_centers, dim)).astype(np.float32)
+    rng = np.random.default_rng(seed)
+    who = rng.integers(0, n_centers, n)
+    return (centers[who] + rng.normal(size=(n, dim))).astype(np.float32)
+
+
 def osm_like(n: int, seed: int = 0) -> np.ndarray:
     """2-d lon/lat-like point cloud: dense cities + sparse countryside."""
     rng = np.random.default_rng(seed)

@@ -129,6 +129,17 @@ class GroupExecutor:
 
 
 # ----------------------------------------------------------- elasticity
+def _with_grouping(plan, groups: np.ndarray, lb_group: np.ndarray):
+    """Replace the grouping on a composite ``JoinPlan`` (regroup its
+    per-batch ``QueryPlan``; the S index is untouched — elasticity never
+    re-runs S-side phase 1) or on a bare ``QueryPlan``."""
+    if isinstance(plan, JoinPlan):
+        return dataclasses.replace(
+            plan, query=dataclasses.replace(
+                plan.query, groups=groups, lb_group=lb_group))
+    return dataclasses.replace(plan, groups=groups, lb_group=lb_group)
+
+
 def shrink_groups(plan: JoinPlan, new_n: int) -> JoinPlan:
     """Merge groups for a smaller device count (θ, LB stay valid)."""
     old_n = plan.n_groups
@@ -136,8 +147,7 @@ def shrink_groups(plan: JoinPlan, new_n: int) -> JoinPlan:
     mapping = np.arange(old_n) % new_n
     groups = mapping[plan.groups]
     lb_group = group_lower_bounds(plan.lb, groups, new_n)
-    return dataclasses.replace(plan, groups=groups.astype(np.int32),
-                               lb_group=lb_group)
+    return _with_grouping(plan, groups.astype(np.int32), lb_group)
 
 
 def grow_groups(plan: JoinPlan, new_n: int) -> JoinPlan:
@@ -159,8 +169,7 @@ def grow_groups(plan: JoinPlan, new_n: int) -> JoinPlan:
         groups[movers] = next_id
         next_id += 1
     lb_group = group_lower_bounds(plan.lb, groups.astype(np.int32), next_id)
-    return dataclasses.replace(plan, groups=groups.astype(np.int32),
-                               lb_group=lb_group)
+    return _with_grouping(plan, groups.astype(np.int32), lb_group)
 
 
 def regroup(plan: JoinPlan, new_n: int) -> JoinPlan:

@@ -16,6 +16,11 @@ the plan's bounds, so pruned tiles are never DMA'd at all — zero bytes,
 zero FLOPs. ``impl="gather_interpret"`` pushes the same kernel body
 through the interpreter (CPU validation), and
 `ref.distance_topk_gather_ref` is the jnp oracle for both.
+
+Serving note: the brute-force ``distance_topk`` path is what
+`serve.retrieval.knn_logits(use_kernel=True)` runs over the SIndex's
+device-resident pivot-sorted rows (`SIndex.device_rows`) — local row
+ids map back to global ones via ``s_ids_sorted``.
 """
 from __future__ import annotations
 

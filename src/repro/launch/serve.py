@@ -42,7 +42,6 @@ def main(argv=None):
         keys = rng.normal(size=(2048, 32)).astype(np.float32)
         vals = rng.integers(0, cfg.vocab, 2048).astype(np.int32)
         store = Datastore.build(keys, vals, k=8, n_pivots=128, n_groups=8)
-        store.prepare(keys[:256])
         kcfg = KnnLMConfig(lam=0.2, tau=50.0, k=8)
 
         def hook(logits, cache):

@@ -1,14 +1,26 @@
 """kNN-LM retrieval — the paper's join as a first-class serving feature.
 
 Datastore: (keys (N, D) hidden states, values (N,) next tokens). At each
-decode step the batch of hidden states is the R side (|R| = batch) and the
-datastore is the S side of an `R ⋉ S` kNN join. The PGBJ machinery applies
-unchanged: Voronoi partitioning of S, θ/LB bounds, and (multi-device) the
-group shuffle — |R| ≪ |S| is exactly the regime where shipping S subsets
-instead of all of S pays (paper §3).
+decode step the batch of hidden states is the R side (|R| = batch) and
+the datastore is the S side of an `R ⋉ S` kNN join — |R| ≪ |S| is
+exactly the regime where shipping S subsets instead of all of S pays
+(paper §3).
 
-p(token) = (1−λ) p_LM + λ softmax(-d_i²/τ) aggregated over retrieved
+The build-once/query-many split (core.index) is what makes this a
+serving primitive: ``Datastore.build`` runs S-side phase 1 once —
+pivots, Voronoi assignment, T_S, the pivot-sorted packed rows — and
+every decode step's batch is planned fresh by the streaming engine
+(``core.stream.StreamJoinEngine``): jitted R assignment + θ/LB, then
+the per-group join against the resident index. No warmup-query
+planning, no stale θ from a representative sample — the bounds each
+step prunes with are derived from that step's actual hidden states.
+
+p(token) = (1−λ) p_LM + λ softmax(−d²/τ) aggregated over retrieved
 neighbors (Khandelwal et al. 2020), with PGBJ supplying the neighbors.
+Both neighbor paths (the PGBJ join and the raw `distance_topk` kernel)
+return **true** distances; `knn_logits` converts them to one comparable
+space via `core.metrics.to_cmp` before the softmax, so the two paths
+produce identical retrieval distributions (pinned by a regression test).
 """
 from __future__ import annotations
 
@@ -19,8 +31,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import JoinConfig, knn_join, plan_join
-from repro.core.api import JoinPlan
+from repro.core import JoinConfig, StreamJoinEngine, build_index
+from repro.core.index import SIndex
+from repro.core.metrics import to_cmp
 from repro.kernels import distance_topk
 
 
@@ -28,24 +41,26 @@ from repro.kernels import distance_topk
 class Datastore:
     keys: np.ndarray       # (N, D) float32
     values: np.ndarray     # (N,) int32 token ids
-    plan: Optional[JoinPlan] = None
-    config: Optional[JoinConfig] = None
+    index: SIndex          # build-once S side (pivots, T_S, packed rows)
+    config: JoinConfig
 
     @classmethod
     def build(cls, keys, values, *, k: int = 8, n_pivots: int = 256,
               n_groups: int = 8, seed: int = 0):
+        """S-side phase 1, once: after this, serving never touches the
+        keys again except through the index's packed layout."""
         keys = np.ascontiguousarray(keys, np.float32)
         cfg = JoinConfig(k=k, n_pivots=min(n_pivots, keys.shape[0]),
                          n_groups=n_groups, grouping="geometric", seed=seed)
-        # S-side phase-1 runs once at build; R (queries) arrive per step.
         return cls(keys=keys, values=np.asarray(values, np.int32),
-                   config=cfg)
+                   index=build_index(keys, cfg), config=cfg)
 
-    def prepare(self, sample_queries: np.ndarray):
-        """Plan the join once against representative queries (pivots are
-        selected from R per the paper; serving uses a warmup query set)."""
-        self.plan = plan_join(sample_queries.astype(np.float32),
-                              self.keys, self.config)
+    def engine(self, k: Optional[int] = None) -> StreamJoinEngine:
+        """A streaming engine over the resident index (optionally with a
+        per-caller k — the index's T_S supports any k ≤ build k)."""
+        cfg = self.config if k is None or k == self.config.k \
+            else dataclasses.replace(self.config, k=k)
+        return StreamJoinEngine(self.index, cfg)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,19 +71,25 @@ class KnnLMConfig:
 
 
 def knn_logits(queries: np.ndarray, store: Datastore, kcfg: KnnLMConfig,
-               vocab: int, *, use_kernel: bool = True) -> np.ndarray:
-    """Retrieval distribution per query, (B, vocab) log-space."""
-    if store.plan is not None:
-        res = knn_join(queries.astype(np.float32), store.keys,
-                       k=kcfg.k, config=store.config)
-        d, idx = res.distances, res.indices
-    elif use_kernel:
-        d, idx = distance_topk(jnp.asarray(queries, jnp.float32),
-                               jnp.asarray(store.keys), kcfg.k)
-        d, idx = np.asarray(d), np.asarray(idx)
+               vocab: int, *, use_kernel: bool = False) -> np.ndarray:
+    """Retrieval distribution per query, (B, vocab) log-space.
+
+    ``use_kernel=False`` (default) plans + joins the batch against the
+    datastore index (the PGBJ serve path); ``use_kernel=True`` runs the
+    brute-force `distance_topk` kernel over the index's device-resident
+    packed rows. Both return true distances, normalized to comparable
+    space (`to_cmp`: squared for L2) before ``softmax(−d_cmp/τ)``.
+    """
+    queries = np.ascontiguousarray(queries, np.float32)
+    if use_kernel:
+        d, local = distance_topk(jnp.asarray(queries),
+                                 store.index.device_rows(), kcfg.k)
+        d = np.asarray(d)
+        idx = store.index.s_ids_sorted[np.asarray(local)]
     else:
-        raise ValueError("datastore not prepared")
-    w = jax.nn.softmax(jnp.asarray(-(d ** 2) / kcfg.tau), axis=-1)  # (B,k)
+        d, idx = store.engine(kcfg.k).join_batch(queries)
+    w = jax.nn.softmax(
+        jnp.asarray(-to_cmp(d, store.config.metric) / kcfg.tau), axis=-1)
     toks = store.values[idx]                                        # (B,k)
     probs = np.zeros((queries.shape[0], vocab), np.float32)
     np.add.at(probs, (np.arange(queries.shape[0])[:, None], toks),

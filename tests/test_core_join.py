@@ -167,7 +167,8 @@ def test_errors():
 @pytest.mark.parametrize("metric", ["l1", "linf"])
 def test_metric_generality(metric):
     """Paper §2.1: the bounds transfer to any triangle-inequality metric.
-    Verified against an independent numpy oracle (not our own engine)."""
+    JoinConfig.metric threads end-to-end: verified against an independent
+    numpy oracle (not our own engine) and the brute-force baseline."""
     rng = np.random.default_rng(21)
     r = rng.normal(size=(250, 5)).astype(np.float32) * 3
     s = rng.normal(size=(400, 5)).astype(np.float32) * 3
@@ -177,4 +178,22 @@ def test_metric_generality(metric):
     d = diff.sum(-1) if metric == "l1" else diff.max(-1)
     ref = np.sort(d, axis=1)[:, :6]
     np.testing.assert_allclose(res.distances, ref, atol=1e-3)
+    bd, bi = brute_force_knn(r, s, 6, metric=metric)
+    np.testing.assert_allclose(res.distances, bd, atol=1e-3)
+    assert (res.indices == bi).mean() > 0.999
     assert res.stats.selectivity < 1.0
+
+
+@pytest.mark.parametrize("metric", ["l1", "linf"])
+@pytest.mark.parametrize("reducer", ["dense", "pruned", "gather"])
+def test_metric_generality_all_reducers(metric, reducer):
+    """Every reducer engine honors JoinConfig.metric (L1/L∞ vs the
+    brute-force baseline)."""
+    rng = np.random.default_rng(22)
+    r = rng.normal(size=(150, 4)).astype(np.float32) * 3
+    s = rng.normal(size=(260, 4)).astype(np.float32) * 3
+    cfg = JoinConfig(k=5, metric=metric, n_pivots=16, n_groups=3,
+                     reducer=reducer)
+    res = knn_join(r, s, config=cfg)
+    bd, _ = brute_force_knn(r, s, 5, metric=metric)
+    np.testing.assert_allclose(res.distances, bd, atol=1e-3)

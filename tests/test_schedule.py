@@ -8,12 +8,11 @@ from repro.core.join import join_group_dense, join_group_gather
 from repro.core.schedule import build_tile_schedule, compact_visit_mask
 
 
-def _clustered(n, dim, seed, n_centers=8, centers_seed=42):
-    centers = np.random.default_rng(centers_seed).uniform(
-        -20, 20, (n_centers, dim)).astype(np.float32)
-    rng = np.random.default_rng(seed)
-    who = rng.integers(0, n_centers, n)
-    return (centers[who] + rng.normal(size=(n, dim))).astype(np.float32)
+from repro.data import clustered_like
+
+
+def _clustered(n, dim, seed, n_centers=8):
+    return clustered_like(n, dim, seed, n_centers=n_centers)
 
 
 def test_compact_visit_mask_invariants():

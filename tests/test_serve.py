@@ -44,7 +44,6 @@ def test_knn_logits_match_bruteforce_neighbors():
     vals = rng.integers(0, 64, 500).astype(np.int32)
     store = Datastore.build(keys, vals, k=4, n_pivots=32, n_groups=4)
     q = rng.normal(size=(6, 16)).astype(np.float32)
-    store.prepare(q)
     kcfg = KnnLMConfig(k=4)
     lg = knn_logits(q, store, kcfg, vocab=64)
     assert lg.shape == (6, 64)
@@ -54,6 +53,48 @@ def test_knn_logits_match_bruteforce_neighbors():
         top_tokens = set(vals[bi[i]].tolist())
         got = set(np.argsort(lg[i])[::-1][:len(top_tokens)].tolist())
         assert got & top_tokens
+
+
+def test_knn_logits_join_and_kernel_paths_agree():
+    """Distance-space regression: the PGBJ join path and the raw
+    distance_topk kernel path must produce the same retrieval
+    distribution — both feed true distances through `metrics.to_cmp`
+    before softmax(−d_cmp/τ)."""
+    rng = np.random.default_rng(2)
+    keys = rng.normal(size=(400, 12)).astype(np.float32)
+    vals = rng.integers(0, 48, 400).astype(np.int32)
+    store = Datastore.build(keys, vals, k=6, n_pivots=32, n_groups=4)
+    q = rng.normal(size=(5, 12)).astype(np.float32)
+    kcfg = KnnLMConfig(k=6, tau=10.0)
+    lg_join = knn_logits(q, store, kcfg, vocab=48, use_kernel=False)
+    lg_kern = knn_logits(q, store, kcfg, vocab=48, use_kernel=True)
+    np.testing.assert_allclose(lg_join, lg_kern, rtol=2e-4, atol=2e-4)
+
+
+def test_datastore_index_reused_across_decode_steps():
+    """The serve path never re-runs S-side phase 1: two decode batches
+    against the same store plan fresh but reuse the resident index."""
+    import repro.core.index as index_mod
+
+    rng = np.random.default_rng(3)
+    keys = rng.normal(size=(300, 8)).astype(np.float32)
+    vals = rng.integers(0, 32, 300).astype(np.int32)
+    store = Datastore.build(keys, vals, k=4, n_pivots=16, n_groups=2)
+    kcfg = KnnLMConfig(k=4)
+    orig = index_mod.assign_and_summarize
+
+    def guard(*a, **kw):
+        raise AssertionError("S-side phase 1 re-ran during serving")
+
+    index_mod.assign_and_summarize = guard
+    try:
+        for seed in (4, 5):
+            q = np.random.default_rng(seed).normal(size=(3, 8)).astype(
+                np.float32)
+            lg = knn_logits(q, store, kcfg, vocab=32)
+            assert lg.shape == (3, 32)
+    finally:
+        index_mod.assign_and_summarize = orig
 
 
 def test_interpolation_limits():

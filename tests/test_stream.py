@@ -1,0 +1,174 @@
+"""Streaming engine + index/planner split: build-once reuse, any-split
+equality with the one-shot join, and the sorted-run merge state."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    JoinConfig, StreamJoinState, brute_force_knn, build_index, knn_join,
+    knn_join_batched, plan_queries)
+
+
+def _data(n, dim, seed, scale=3.0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, dim)).astype(np.float32) * scale
+
+
+def test_batched_equals_oneshot_bitwise():
+    """Acceptance: knn_join_batched over any split of R is exactly the
+    one-shot knn_join against the same index — distances and indices."""
+    r = _data(313, 6, 0)
+    s = _data(521, 6, 1)
+    cfg = JoinConfig(k=7, n_pivots=24, n_groups=5, seed=3)
+    index = build_index(s, cfg)
+    one = knn_join(r, config=cfg, index=index)
+    bd, _ = brute_force_knn(r, s, 7)
+    np.testing.assert_allclose(one.distances, bd, atol=1e-4)
+    for bs in (400, 128, 57, 9):
+        res = knn_join_batched(r, index=index, config=cfg, batch_size=bs)
+        np.testing.assert_array_equal(res.distances, one.distances)
+        np.testing.assert_array_equal(res.indices, one.indices)
+        assert res.stats.n_batches == -(-313 // bs)
+
+
+@pytest.mark.parametrize("reducer", ["dense", "pruned", "gather"])
+def test_batched_equals_oneshot_all_reducers(reducer):
+    r = _data(200, 5, 2)
+    s = _data(340, 5, 3)
+    cfg = JoinConfig(k=5, n_pivots=16, n_groups=4, seed=1, reducer=reducer)
+    index = build_index(s, cfg)
+    one = knn_join(r, config=cfg, index=index)
+    res = knn_join_batched(r, index=index, config=cfg, batch_size=61)
+    np.testing.assert_array_equal(res.distances, one.distances)
+    np.testing.assert_array_equal(res.indices, one.indices)
+
+
+def test_batched_accepts_iterable_of_batches():
+    r = _data(150, 4, 4)
+    s = _data(260, 4, 5)
+    cfg = JoinConfig(k=4, n_pivots=12, n_groups=3, seed=2)
+    index = build_index(s, cfg)
+    one = knn_join(r, config=cfg, index=index)
+    res = knn_join_batched(
+        iter([r[:40], r[40:41], r[41:130], r[130:]]), index=index,
+        config=cfg)
+    np.testing.assert_array_equal(res.distances, one.distances)
+    np.testing.assert_array_equal(res.indices, one.indices)
+
+
+def test_index_built_once_reused_across_batches():
+    """Acceptance: one SIndex serves ≥2 distinct R batches with no re-run
+    of S-side phase 1 (assignment + summaries)."""
+    import repro.core.index as index_mod
+
+    s = _data(400, 5, 6)
+    cfg = JoinConfig(k=5, n_pivots=20, n_groups=4, seed=0)
+    index = build_index(s, cfg)
+    calls = {"n": 0}
+    orig = index_mod.assign_and_summarize
+
+    def guard(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    index_mod.assign_and_summarize = guard
+    try:
+        batches = [_data(90, 5, seed) for seed in (7, 8, 9)]
+        for b in batches:
+            res = knn_join(b, config=cfg, index=index)
+            bd, _ = brute_force_knn(b, s, 5)
+            np.testing.assert_allclose(res.distances, bd, atol=1e-4)
+        res = knn_join_batched(np.concatenate(batches), index=index,
+                               config=cfg, batch_size=64)
+        assert res.stats.n_batches == 5
+    finally:
+        index_mod.assign_and_summarize = orig
+    # S-side phase 1 ran zero times after build: plan_queries only
+    # re-derives the R side (jitted assignment + θ/LB)
+    assert calls["n"] == 0
+
+
+def test_per_batch_plans_differ_but_results_exact():
+    """The per-batch planner really is query-dependent: different batches
+    produce different θ/grouping, yet every batch's results are exact."""
+    s = _data(300, 4, 10)
+    cfg = JoinConfig(k=4, n_pivots=16, n_groups=3, seed=0)
+    index = build_index(s, cfg)
+    near = _data(60, 4, 11, scale=1.0)
+    far = _data(60, 4, 12, scale=8.0)
+    qp_near = plan_queries(near, index, cfg)
+    qp_far = plan_queries(far, index, cfg)
+    assert not np.array_equal(qp_near.theta, qp_far.theta)
+    for batch in (near, far):
+        res = knn_join(batch, config=cfg, index=index)
+        bd, _ = brute_force_knn(batch, s, 4)
+        np.testing.assert_allclose(res.distances, bd, atol=1e-4)
+
+
+def test_stream_state_merges_revisited_slots():
+    """StreamJoinState is a genuine sorted-run merger: presenting the
+    same slots twice keeps the k best across both runs."""
+    state = StreamJoinState(n=3, k=4)
+    rows = np.arange(3)
+    d1 = np.sort(np.float32([[1, 3, 5, 7], [2, 4, 6, 8], [0, 1, 2, 3]]), 1)
+    i1 = np.arange(12).reshape(3, 4)
+    state.update(rows, d1, i1)
+    np.testing.assert_array_equal(state.distances, d1)
+    d2 = np.sort(np.float32([[0, 2, 9, 9], [5, 5, 5, 5], [4, 5, 6, 7]]), 1)
+    i2 = 100 + np.arange(12).reshape(3, 4)
+    state.update(rows, d2, i2)
+    ref = np.sort(np.concatenate([d1, d2], 1), 1)[:, :4]
+    np.testing.assert_array_equal(state.distances, ref)
+    # ids track their distances through the merge
+    assert state.indices[0, 0] == 100 and state.indices[0, 1] == 0
+
+
+@pytest.mark.parametrize("metric", ["l1", "linf"])
+def test_batched_metric_generality(metric):
+    """L1/L∞ threads through index build + per-batch planning + join."""
+    rng = np.random.default_rng(13)
+    r = rng.normal(size=(180, 5)).astype(np.float32) * 3
+    s = rng.normal(size=(300, 5)).astype(np.float32) * 3
+    cfg = JoinConfig(k=5, metric=metric, n_pivots=16, n_groups=3)
+    index = build_index(s, cfg)
+    res = knn_join_batched(r, index=index, config=cfg, batch_size=47)
+    one = knn_join(r, config=cfg, index=index)
+    np.testing.assert_array_equal(res.distances, one.distances)
+    bd, _ = brute_force_knn(r, s, 5, metric=metric)
+    np.testing.assert_allclose(res.distances, bd, atol=1e-3)
+
+
+def test_hypothesis_property_any_split():
+    pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis; tier-1 must "
+        "still collect on clean environments without it")
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def instance(draw):
+        n_r = draw(st.integers(20, 100))
+        n_s = draw(st.integers(30, 140))
+        dim = draw(st.integers(2, 6))
+        k = draw(st.integers(1, min(8, n_s)))
+        m = draw(st.integers(2, 16))
+        g = draw(st.integers(1, min(5, m)))
+        bs = draw(st.integers(1, n_r))
+        seed = draw(st.integers(0, 2**16))
+        return n_r, n_s, dim, k, m, g, bs, seed
+
+    @given(instance())
+    @settings(max_examples=20, deadline=None)
+    def prop(inst):
+        n_r, n_s, dim, k, m, g, bs, seed = inst
+        rng = np.random.default_rng(seed)
+        r = rng.normal(size=(n_r, dim)).astype(np.float32) * 3
+        s = rng.normal(size=(n_s, dim)).astype(np.float32) * 3
+        cfg = JoinConfig(k=k, n_pivots=m, n_groups=g, seed=seed)
+        index = build_index(s, cfg)
+        one = knn_join(r, config=cfg, index=index)
+        res = knn_join_batched(r, index=index, config=cfg, batch_size=bs)
+        np.testing.assert_array_equal(res.distances, one.distances)
+        np.testing.assert_array_equal(res.indices, one.indices)
+        bd, _ = brute_force_knn(r, s, k)
+        np.testing.assert_allclose(one.distances, bd, atol=1e-3)
+
+    prop()
