@@ -204,6 +204,64 @@ def streaming_vs_oneshot_bench(n: int = 20000,
     ]
 
 
+def mutable_index_bench(n: int = 20000, batches: int = 4) -> List[Row]:
+    """Online mutability (core.segments.MutableIndex): insert+seal and
+    delete throughput, multi-segment query latency while deltas and
+    tombstones are live, compaction cost, and the post-compaction query
+    latency the compaction buys back. Embedded correctness check: the
+    live set is unchanged by compact(), so pre/post query distances must
+    match bitwise."""
+    from repro.core import JoinConfig, MutableIndex
+
+    dim, k, nq = 8, 10, 512
+    ins_batch = max(256, n // 10)
+    n_del = max(64, n // 10)
+    base = _clustered(n, dim, seed=0)
+    q = _clustered(nq, dim, seed=1)
+    cfg = JoinConfig(k=k, n_pivots=64, n_groups=8, seed=3)
+    mi = MutableIndex.build(base, cfg, seal_threshold=ins_batch)
+    mi.join_batch(q)   # warm the jitted planner + merge stages
+
+    t0 = time.perf_counter()
+    for i in range(batches):
+        mi.insert(_clustered(ins_batch, dim, seed=10 + i))
+    t_insert = time.perf_counter() - t0          # includes the seals
+
+    rng = np.random.default_rng(7)
+    doomed = rng.choice(n, n_del, replace=False)
+    t0 = time.perf_counter()
+    mi.delete(doomed)
+    t_delete = time.perf_counter() - t0
+
+    n_segments_pre = mi.n_segments
+    t0 = time.perf_counter()
+    d_pre, _ = mi.join_batch(q)
+    t_q_pre = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    mi.compact()
+    t_compact = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    d_post, _ = mi.join_batch(q)
+    t_q_post = time.perf_counter() - t0
+    if not np.array_equal(d_pre, d_post):
+        raise AssertionError("query distances changed across compaction")
+
+    return [
+        Row("kernel_mutable_index",
+            f"n={n},ins={batches}x{ins_batch},del={n_del},q={nq},k={k}",
+            t_compact,
+            {"insert_rows_per_s": batches * ins_batch / t_insert,
+             "delete_ids_per_s": n_del / t_delete,
+             "query_pre_compact_s": t_q_pre,
+             "query_post_compact_s": t_q_post,
+             "post_over_pre": t_q_post / t_q_pre,
+             "compact_s": t_compact,
+             "segments_pre_compact": float(n_segments_pre)}),
+    ]
+
+
 def _pack_send_buffers_loop(rows, aux, dest, src_of_row, n_src, n_dst, cap):
     """The seed's per-row packing loop, kept as the microbench baseline."""
     nbuf = {k: np.zeros((n_src, n_dst, cap) + v.shape[1:], v.dtype)
@@ -259,4 +317,5 @@ def pack_send_buffers_bench(n: int = 100_000) -> List[Row]:
 
 ALL = [distance_topk_bench, distance_topk_gather_bench,
        index_build_vs_batch_plan_bench, streaming_vs_oneshot_bench,
+       mutable_index_bench,
        pack_send_buffers_bench, assign_bench, flash_attention_bench]

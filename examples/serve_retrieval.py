@@ -5,6 +5,12 @@ states are joined (R ⋉ S, |R| = batch) against a datastore of key
 embeddings using the PGBJ machinery, and the retrieval distribution is
 interpolated with the LM head.
 
+The datastore is mutable while it serves: between request waves new
+(key, value) pairs are ingested with ``add_entries`` (they seal into a
+delta segment — S-side phase 1 never re-runs on the existing base),
+stale ones are tombstoned with ``remove_entries``, and ``compact()``
+folds everything back into one base between decode steps.
+
 Run:  PYTHONPATH=src python examples/serve_retrieval.py
 """
 import dataclasses
@@ -51,8 +57,29 @@ def main():
     for i, (p, o) in enumerate(zip(prompts, outs)):
         print(f"req {i}: prompt={list(p)[:6]}… → {list(o)}")
     print("\nserved 6 requests in 2 batched waves with kNN-LM retrieval ✓")
-    print(f"datastore: {store.keys.shape[0]} keys, "
+    print(f"datastore: {store.n_entries} live entries, "
           f"{store.config.n_pivots} pivots, {store.config.n_groups} groups")
+
+    # --- online update between waves: ingest a fresh corpus chunk and
+    # retire the oldest entries — no phase-1 re-run on existing segments
+    corpus2 = rng.integers(0, cfg.vocab, (16, 48), dtype=np.int32)
+    hs2, _ = forward(params, cfg, jnp.asarray(corpus2), opts=opts)
+    new_keys = np.asarray(hs2[:, :-1].reshape(-1, cfg.vocab))[:, :64]
+    new_vals = corpus2[:, 1:].reshape(-1)
+    ids = store.add_entries(new_keys, new_vals)
+    store.remove_entries(np.arange(128))        # oldest 128 pairs
+    print(f"after update: {store.n_entries} live entries in "
+          f"{store.index.n_segments} segments "
+          f"({store.index.n_tombstones} tombstones), "
+          f"new ids {ids[0]}..{ids[-1]}")
+
+    outs = srv.generate(prompts[:2], max_new_tokens=8)
+    print(f"re-served 2 requests against the updated store ✓")
+
+    store.compact()                             # between decode steps
+    print(f"compacted to {store.index.n_segments} segment, "
+          f"{store.n_entries} live entries "
+          f"({store.index.last_compact_s * 1e3:.1f} ms)")
 
 
 if __name__ == "__main__":

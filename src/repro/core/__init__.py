@@ -12,6 +12,7 @@ from .grouping import (
 from .index import SIndex, QueryPlan, build_index, plan_queries
 from .api import knn_join, plan_join, execute_join, JoinPlan
 from .stream import StreamJoinEngine, StreamJoinState, knn_join_batched
+from .segments import MutableIndex, Segment
 from .schedule import TileSchedule, build_tile_schedule, compact_visit_mask
 from .metrics import pairwise_dist
 from .baselines import brute_force_knn, hbrj_join, pbj_join
@@ -27,6 +28,7 @@ __all__ = [
     "SIndex", "QueryPlan", "build_index", "plan_queries",
     "knn_join", "plan_join", "execute_join", "JoinPlan",
     "StreamJoinEngine", "StreamJoinState", "knn_join_batched",
+    "MutableIndex", "Segment",
     "TileSchedule", "build_tile_schedule", "compact_visit_mask",
     "pairwise_dist",
     "brute_force_knn", "hbrj_join", "pbj_join",

@@ -159,17 +159,22 @@ def knn_join(
     config: Optional[JoinConfig] = None,
     *,
     plan: Optional[JoinPlan] = None,
-    index: Optional[SIndex] = None,
+    index=None,
 ) -> JoinResult:
     """PGBJ kNN join: for every row of ``r``, the k nearest rows of ``s``.
 
-    Returns global S row indices and true distances, ascending per query.
+    Returns global S row indices (int64) and true distances, ascending
+    per query.
 
-    ``index=`` joins against a prebuilt ``SIndex`` (S-side phase 1 is
-    *not* re-run; ``s`` may be omitted); ``plan=`` additionally reuses a
-    query plan. Otherwise the index is built from ``s`` with pivots
-    selected from ``r`` — the paper's one-shot pipeline.
+    ``index=`` joins against a prebuilt ``SIndex`` — or a mutable
+    segmented ``core.segments.MutableIndex``, whose batch fans over all
+    live segments — (S-side phase 1 is *not* re-run; ``s`` may be
+    omitted); ``plan=`` additionally reuses a query plan. Otherwise the
+    index is built from ``s`` with pivots selected from ``r`` — the
+    paper's one-shot pipeline.
     """
+    from .segments import MutableIndex
+
     if plan is not None:
         index = plan.index
     if index is not None:
@@ -178,6 +183,16 @@ def knn_join(
     if k is not None and k != config.k:
         config = dataclasses.replace(config, k=k)
     r = np.ascontiguousarray(r, np.float32)
+    if isinstance(index, MutableIndex):
+        if s is not None and s.shape[0] != index.n_s:
+            raise ValueError(
+                f"s has {s.shape[0]} rows but the mutable index holds "
+                f"{index.n_s} live; results would index the wrong dataset")
+        if config.k > index.n_s:
+            raise ValueError(f"k={config.k} > live |S|={index.n_s}")
+        stats = JoinStats(n_r=r.shape[0], n_s=index.n_s)
+        out_d, out_i = index.join_batch(r, config=config, stats=stats)
+        return JoinResult(indices=out_i, distances=out_d, stats=stats)
     built_here = index is None
     if index is None:
         if s is None:

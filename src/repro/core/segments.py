@@ -1,0 +1,450 @@
+"""Mutable segmented index — online inserts/deletes over the serving
+datastore (LSM-flavored, exact).
+
+The paper's pipeline assumes a static S: phase 1 (pivots, Voronoi
+assignment, T_S) runs once and is never revisited. A serving datastore
+is not static — it grows and shrinks while it answers queries — so this
+module layers mutability *on top of* the build-once ``SIndex`` without
+ever re-running phase 1 on data that already has one:
+
+* ``MutableIndex`` holds an ordered list of sealed segments (each a
+  full ``SIndex`` over its own rows) plus a small write buffer.
+  ``insert`` appends to the buffer; when the buffer crosses
+  ``seal_threshold`` rows it is *sealed* into a new delta ``SIndex``
+  (phase 1 runs over the delta rows only). ``delete`` records global
+  ids in a tombstone set — no segment is touched. ``compact`` folds all
+  segments + buffer − tombstones back into one rebuilt base (the only
+  operation that re-runs phase 1 over old rows; eligible to run between
+  decode steps).
+
+* Ids are **global and 64-bit**: each segment owns a contiguous id
+  range starting at its ``id_offset``; a row's global id is
+  ``offset + local``. Ids are stable across inserts/deletes and only
+  change at ``compact``, which re-bases survivors to ``0..n_live-1``
+  (ascending old-id order) and returns the old ids so callers can remap
+  row-aligned payloads (e.g. the kNN-LM value table).
+
+* Queries stay **exact**: a batch fans out over every live segment
+  (per-segment ``plan_queries`` + ``execute_join`` — the same engines
+  as the static path, any reducer), each segment over-fetches
+  adaptively (``k + min(dead, k)`` first, escalating to the certain
+  ``k + dead`` bound for queries whose masked run proves incomplete)
+  so masking dead rows can never surface an incomplete top-k, and the
+  per-segment sorted runs fold through ``StreamJoinState``'s dedup
+  merge. Results are
+  bitwise-identical (distances, and ids up to the documented remap) to
+  a fresh ``build_index`` over the surviving rows — every engine
+  reports shape-canonical distances (``metrics.canonical_topk``), a
+  pure function of the (query, row) pair, so segment boundaries are
+  invisible in the output. One caveat: when *distinct* rows tie at
+  exactly the same float32 distance, which of the tied ids is reported
+  (or their order) may differ from the fresh rebuild — both answers are
+  exact kNN sets; only the tie-break differs between the merge network
+  and a single engine's selection order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from .api import execute_join
+from .index import SIndex, build_index, plan_queries
+from .metrics import canonical_topk, cmp_dist
+from .partition import build_summary
+from .stream import StreamJoinState
+from .types import JoinConfig, JoinStats
+
+__all__ = ["Segment", "MutableIndex"]
+
+
+@dataclasses.dataclass
+class Segment:
+    """One sealed immutable segment: a full ``SIndex`` over its rows plus
+    the global id range it owns (``id_offset .. id_offset + n_rows``)."""
+
+    index: SIndex
+    id_offset: int
+    _t_s_wide: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    @property
+    def n_rows(self) -> int:
+        return self.index.n_s
+
+    def index_for_k(self, k: int) -> SIndex:
+        """The segment's index with a T_S wide enough for a k-row fetch.
+
+        Tombstone masking over-fetches (k + dead rows), which can exceed
+        the pivot-kNN list width T_S was built with. The lists are a pure
+        function of the stored (s_part, s_dist), so widening is a cheap
+        re-summarize — no assignment, no distance computation. Widths are
+        rounded up to the next power of two and cached so the cache stays
+        O(log k) as tombstones accumulate.
+        """
+        width = self.index.t_s.knn_dists.shape[1]
+        if k <= width:
+            return self.index
+        cap = 1 << max(0, (min(k, self.n_rows) - 1).bit_length())
+        cap = min(max(cap, k), self.n_rows)
+        if cap not in self._t_s_wide:
+            t_s = build_summary(self.index.s_part, self.index.s_dist,
+                                self.index.n_pivots, k=cap)
+            self._t_s_wide[cap] = dataclasses.replace(self.index, t_s=t_s)
+        return self._t_s_wide[cap]
+
+
+class MutableIndex:
+    """A mutable, segmented, exact kNN index over a changing dataset S.
+
+    Drop-in for ``SIndex`` everywhere a query-side caller goes:
+    ``knn_join(r, index=mi)``, ``knn_join_batched(r, index=mi)``,
+    ``StreamJoinEngine(mi)`` and ``serve.retrieval.Datastore`` all
+    accept it. See the module docstring for the id-space and exactness
+    contracts.
+    """
+
+    def __init__(self, base: Optional[SIndex] = None,
+                 config: Optional[JoinConfig] = None, *,
+                 seal_threshold: int = 4096):
+        if base is None and config is None:
+            raise ValueError("MutableIndex needs a base SIndex or a config")
+        if seal_threshold < 1:
+            raise ValueError("seal_threshold must be >= 1")
+        self.config = config or base.config
+        self.seal_threshold = int(seal_threshold)
+        self.segments: list[Segment] = []
+        self._next_id = 0
+        if base is not None:
+            self.segments.append(Segment(base, 0))
+            self._next_id = base.n_s
+        self._tombstones: set[int] = set()
+        self._tomb_sorted: Optional[np.ndarray] = None
+        self._buffer: list[np.ndarray] = []
+        self._buffer_ids: list[np.ndarray] = []
+        self._n_buffer = 0
+        self._version = 0
+        self._live_cache = None
+        self.last_compact_s = 0.0
+
+    @classmethod
+    def build(cls, s: np.ndarray, config: Optional[JoinConfig] = None, *,
+              seal_threshold: int = 4096) -> "MutableIndex":
+        """Phase 1 over the initial S, wrapped mutable."""
+        config = config or JoinConfig()
+        return cls(build_index(s, config), config,
+                   seal_threshold=seal_threshold)
+
+    # ---- sizes / introspection
+
+    @property
+    def n_s(self) -> int:
+        """Live row count (matches the ``SIndex`` property every caller
+        validates ``k`` against)."""
+        return self._next_id - len(self._tombstones)
+
+    @property
+    def n_live(self) -> int:
+        return self.n_s
+
+    @property
+    def n_segments(self) -> int:
+        """Sealed segments plus the write buffer if it holds rows."""
+        return len(self.segments) + (1 if self._n_buffer else 0)
+
+    @property
+    def n_tombstones(self) -> int:
+        return len(self._tombstones)
+
+    @property
+    def n_buffered(self) -> int:
+        return self._n_buffer
+
+    @property
+    def dim(self) -> int:
+        if self.segments:
+            return self.segments[0].index.dim
+        if self._buffer:
+            return self._buffer[0].shape[1]
+        raise ValueError("empty MutableIndex has no dimensionality yet")
+
+    # ---- mutation
+
+    def insert(self, rows: np.ndarray) -> np.ndarray:
+        """Append rows; returns their newly-assigned global int64 ids.
+
+        Rows land in the write buffer (queryable immediately, by brute
+        force) and seal into a delta ``SIndex`` once the buffer crosses
+        ``seal_threshold`` — phase 1 runs over the delta only, never
+        over pre-existing segments.
+        """
+        rows = np.ascontiguousarray(rows, np.float32)
+        if rows.ndim != 2 or rows.shape[0] == 0:
+            raise ValueError(f"insert needs (n, dim) rows, got {rows.shape}")
+        if self.segments or self._buffer:
+            if rows.shape[1] != self.dim:
+                raise ValueError(
+                    f"insert dim {rows.shape[1]} != index dim {self.dim}")
+        ids = np.arange(self._next_id, self._next_id + rows.shape[0],
+                        dtype=np.int64)
+        self._next_id += rows.shape[0]
+        self._buffer.append(rows)
+        self._buffer_ids.append(ids)
+        self._n_buffer += rows.shape[0]
+        self._version += 1
+        if self._n_buffer >= self.seal_threshold:
+            self.seal()
+        return ids
+
+    def seal(self) -> Optional[Segment]:
+        """Flush the write buffer into a sealed delta segment (no-op when
+        empty). Phase 1 (pivots from the delta, assignment, T_S, packed
+        layout) runs over the buffered rows only."""
+        if self._n_buffer == 0:
+            return None
+        rows = np.concatenate(self._buffer, axis=0)
+        offset = int(self._buffer_ids[0][0])
+        self._buffer, self._buffer_ids, self._n_buffer = [], [], 0
+        seg = Segment(build_index(rows, self.config), offset)
+        self.segments.append(seg)
+        self._version += 1
+        return seg
+
+    def delete(self, ids) -> None:
+        """Tombstone rows by global id. O(|ids|); no segment is touched.
+        Raises on ids that were never allocated or are already dead."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        bad = ids[(ids < 0) | (ids >= self._next_id)]
+        if bad.size:
+            raise ValueError(f"unknown row ids {bad[:5].tolist()} "
+                             f"(allocated id space is [0, {self._next_id}))")
+        new = set(ids.tolist())
+        if len(new) != ids.size:
+            raise ValueError("duplicate ids in one delete call")
+        dead = new & self._tombstones
+        if dead:
+            raise ValueError(
+                f"ids already deleted: {sorted(dead)[:5]}")
+        self._tombstones |= new
+        self._tomb_sorted = None
+        self._version += 1
+
+    def compact(self, *, stats: Optional[JoinStats] = None) -> np.ndarray:
+        """Fold segments + buffer − tombstones into one rebuilt base.
+
+        The only operation that re-runs phase 1 over pre-existing rows;
+        cheap enough to run between decode steps at serving scale.
+        Survivors are re-based to ids ``0..n_live-1`` in ascending old-id
+        order; returns the old global ids in new-id order so callers can
+        remap row-aligned payloads (``payload_new = payload_old[ret]``).
+        """
+        t0 = time.perf_counter()
+        rows, old_ids = self.live_rows()
+        self.segments = []
+        self._buffer, self._buffer_ids, self._n_buffer = [], [], 0
+        self._tombstones.clear()
+        self._tomb_sorted = None
+        self._next_id = rows.shape[0]
+        if rows.shape[0]:
+            self.segments.append(Segment(build_index(rows, self.config), 0))
+        self._version += 1
+        self.last_compact_s = time.perf_counter() - t0
+        if stats is not None:
+            stats.compact_time_s += self.last_compact_s
+        return old_ids
+
+    # ---- views
+
+    def live_rows(self) -> tuple[np.ndarray, np.ndarray]:
+        """(rows, global ids) of all surviving rows, ascending by id —
+        the canonical enumeration ``compact`` re-bases to, and the order
+        a fresh ``build_index`` oracle sees them in."""
+        tomb = self._tomb_array()
+        chunks, idchunks = [], []
+        for seg in self.segments:
+            gids = seg.id_offset + np.arange(seg.n_rows, dtype=np.int64)
+            rows = seg.index.rows_for_ids(
+                np.arange(seg.n_rows, dtype=np.int64))
+            keep = ~_in_sorted(gids, tomb)
+            chunks.append(rows[keep])
+            idchunks.append(gids[keep])
+        for rows, gids in zip(self._buffer, self._buffer_ids):
+            keep = ~_in_sorted(gids, tomb)
+            chunks.append(rows[keep])
+            idchunks.append(gids[keep])
+        if not chunks:
+            d = self.dim if (self.segments or self._buffer) else 0
+            return (np.zeros((0, d), np.float32), np.zeros((0,), np.int64))
+        return np.concatenate(chunks, axis=0), np.concatenate(idchunks)
+
+    def live_device_rows(self):
+        """Live rows as a device-resident jnp array + their global ids,
+        cached until the next mutation (the brute-force kernel path's
+        view of the mutable datastore)."""
+        if self._live_cache is None or self._live_cache[0] != self._version:
+            import jax.numpy as jnp
+            rows, gids = self.live_rows()
+            self._live_cache = (self._version, jnp.asarray(rows), gids)
+        return self._live_cache[1], self._live_cache[2]
+
+    def _tomb_array(self) -> np.ndarray:
+        if self._tomb_sorted is None:
+            self._tomb_sorted = np.fromiter(
+                sorted(self._tombstones), np.int64, len(self._tombstones))
+        return self._tomb_sorted
+
+    # ---- query
+
+    def join_batch(
+        self, queries: np.ndarray, *,
+        config: Optional[JoinConfig] = None,
+        stats: Optional[JoinStats] = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Exact (dists, global ids) of the batch's k nearest live rows.
+
+        Fans the batch over every live segment — per-segment planning +
+        join through the configured reducer, over-fetching by the
+        segment's tombstone count — masks dead rows, and folds the runs
+        through the ``StreamJoinState`` dedup merge.
+        """
+        cfg = config or self.config
+        k = cfg.k
+        queries = np.ascontiguousarray(queries, np.float32)
+        nq = queries.shape[0]
+        if k > self.n_s:
+            raise ValueError(f"k={k} > live rows |S|={self.n_s}")
+        if stats is not None:
+            stats.n_segments = self.n_segments
+            stats.n_tombstones = self.n_tombstones
+        if nq == 0:
+            return (np.zeros((0, k), np.float32),
+                    np.full((0, k), -1, np.int64))
+        tomb = self._tomb_array()
+        state = StreamJoinState(n=nq, k=k)
+        all_rows = np.arange(nq)
+        for seg in self.segments:
+            # the segment owns the contiguous id range [offset, offset+n),
+            # so its tombstone count is one sorted-range probe, not a scan
+            n_dead = int(np.searchsorted(tomb, seg.id_offset + seg.n_rows)
+                         - np.searchsorted(tomb, seg.id_offset))
+            if seg.n_rows == n_dead:
+                continue   # fully tombstoned segment
+            d, gids = self._join_segment(queries, seg, n_dead, tomb, cfg,
+                                         stats)
+            state.update(all_rows, d, gids)
+        if self._n_buffer:
+            d, gids = self._join_buffer(queries, k, tomb, cfg, stats)
+            if d is not None:
+                state.update(all_rows, d, gids)
+        return state.distances, state.indices
+
+    def _join_segment(self, queries, seg: Segment, n_dead: int,
+                      tomb: np.ndarray, cfg: JoinConfig, stats):
+        """One segment's masked top-k runs, with adaptive over-fetch.
+
+        A fetch of the segment's exact top-m contains the top-j *live*
+        rows, where j is however many of the m survive masking — so any
+        query that still shows ≥ min(k, live) live entries is complete.
+        Fetching ``k + n_dead`` is always sufficient but degrades to a
+        near-full scan as tombstones pile up, so the first pass fetches
+        only ``k + min(n_dead, k)`` (covers up to k dead rows in the
+        query's neighborhood) and the rare queries that prove incomplete
+        — more than k tombstones inside their fetched prefix — re-run at
+        the certain bound.
+        """
+        k = cfg.k
+        need = min(k, seg.n_rows - n_dead)
+        m_full = min(seg.n_rows, k + n_dead)
+        m1 = min(m_full, k + min(n_dead, k))
+        d, gids = self._fetch_segment_topm(queries, seg, m1, cfg, stats)
+        d, gids = _mask_dead(d, gids, tomb)
+        if m1 < m_full:
+            lack = (gids >= 0).sum(axis=1) < need
+            if lack.any():
+                d2, g2 = self._fetch_segment_topm(
+                    queries[lack], seg, m_full, cfg, stats)
+                d2, g2 = _mask_dead(d2, g2, tomb)
+                d, gids = _trim(d, gids, k)
+                d2, g2 = _trim(d2, g2, k)
+                d[lack], gids[lack] = d2, g2
+                return d, gids
+        return _trim(d, gids, k)
+
+    def _fetch_segment_topm(self, queries, seg: Segment, m: int,
+                            cfg: JoinConfig, stats):
+        """Exact top-m of one segment (global ids, canonical distances)
+        through the configured reducer engine."""
+        seg_cfg = cfg if m == cfg.k else dataclasses.replace(cfg, k=m)
+        index = seg.index_for_k(m)
+        qplan = plan_queries(queries, index, seg_cfg)
+        if stats is not None:
+            stats.pivot_pairs_computed += queries.shape[0] * index.n_pivots
+        d, local = execute_join(queries, index, qplan, stats=stats)
+        return d, np.where(local >= 0, local + seg.id_offset, -1)
+
+    def _join_buffer(self, queries, k, tomb, cfg, stats):
+        """Brute-force the unsealed write buffer (small by construction:
+        |buffer| < seal_threshold), reported through the same canonical
+        distance path as the segment engines."""
+        rows = np.concatenate(self._buffer, axis=0)
+        gids = np.concatenate(self._buffer_ids)
+        dead = _in_sorted(gids, tomb)
+        n_dead = int(dead.sum())
+        if n_dead == rows.shape[0]:
+            return None, None
+        k_fetch = min(rows.shape[0], k + n_dead)
+        dc = cmp_dist(queries, rows, cfg.metric)
+        if stats is not None:
+            stats.pairs_computed += dc.size
+        if k_fetch < rows.shape[0]:
+            sel = np.argpartition(dc, k_fetch - 1, axis=1)[:, :k_fetch]
+        else:
+            sel = np.broadcast_to(np.arange(rows.shape[0]),
+                                  (queries.shape[0], rows.shape[0]))
+        d, ids = canonical_topk(queries, gids[sel], rows[sel], cfg.metric)
+        return _trim(*_mask_dead(d, ids, tomb), k)
+
+    def __repr__(self) -> str:
+        return (f"MutableIndex(n_live={self.n_s}, "
+                f"segments={len(self.segments)}, "
+                f"buffered={self._n_buffer}, "
+                f"tombstones={self.n_tombstones})")
+
+
+def _in_sorted(ids: np.ndarray, sorted_ids: np.ndarray) -> np.ndarray:
+    """Membership of ``ids`` in an ascending id array (vectorized; -1
+    query padding is never a member)."""
+    if sorted_ids.size == 0:
+        return np.zeros(ids.shape, bool)
+    pos = np.searchsorted(sorted_ids, ids)
+    pos = np.clip(pos, 0, sorted_ids.size - 1)
+    return sorted_ids[pos] == ids
+
+
+def _mask_dead(d: np.ndarray, ids: np.ndarray, tomb: np.ndarray,
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """Demote tombstoned ids to (+inf, -1) and restore ascending order
+    (stable, so the surviving run order is untouched)."""
+    if tomb.size:
+        dead = _in_sorted(ids, tomb) & (ids >= 0)
+        if dead.any():
+            d = np.where(dead, np.float32(np.inf), d)
+            ids = np.where(dead, np.int64(-1), ids)
+            order = np.argsort(d, axis=1, kind="stable")
+            d = np.take_along_axis(d, order, axis=1)
+            ids = np.take_along_axis(ids, order, axis=1)
+    return d, ids
+
+
+def _trim(d: np.ndarray, ids: np.ndarray, k: int,
+          ) -> tuple[np.ndarray, np.ndarray]:
+    """Normalize a masked run to exactly k columns (truncate an
+    over-fetch, pad an under-full segment with (+inf, -1))."""
+    if d.shape[1] > k:
+        d, ids = d[:, :k], ids[:, :k]
+    elif d.shape[1] < k:
+        pad = ((0, 0), (0, k - d.shape[1]))
+        d = np.pad(d, pad, constant_values=np.inf)
+        ids = np.pad(ids, pad, constant_values=-1)
+    return np.ascontiguousarray(d), np.ascontiguousarray(ids)

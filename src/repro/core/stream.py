@@ -35,18 +35,36 @@ __all__ = ["StreamJoinEngine", "StreamJoinState", "knn_join_batched"]
 
 
 def _merge_runs_jit(ad, ai, bd, bi):
-    """Jitted odd-even merge (compiled once per run shape — the bitonic
-    network is ~log2(2k) stages of eager ops otherwise, and per-batch
-    dispatch overhead would swamp the merge itself)."""
+    """Jitted dedup + odd-even merge (compiled once per run shape — the
+    bitonic network is ~log2(2k) stages of eager ops otherwise, and
+    per-batch dispatch overhead would swamp the merge itself)."""
     global _merge_runs_compiled
     if _merge_runs_compiled is None:
         import jax
-        from repro.kernels.sorted_merge import merge_sorted_runs
-        _merge_runs_compiled = jax.jit(merge_sorted_runs)
+        from repro.kernels.sorted_merge import merge_sorted_runs_unique
+        _merge_runs_compiled = jax.jit(merge_sorted_runs_unique)
     return _merge_runs_compiled(ad, ai, bd, bi)
 
 
 _merge_runs_compiled = None
+
+
+def _split_ids(ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """int64 row ids → (hi, lo) int32 pair. jnp arrays are int32 under
+    default JAX config, so 64-bit ids must travel through the merge
+    network as two lanes — a plain ``.astype(np.int32)`` silently
+    truncates once segment-offset ids pass 2³¹. ``-1`` maps to
+    (-1, -1) and back."""
+    ids = np.asarray(ids, np.int64)
+    hi = (ids >> 32).astype(np.int32)
+    lo = (ids & np.int64(0xFFFFFFFF)).astype(np.uint32).view(np.int32)
+    return hi, lo
+
+
+def _join_ids(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    """(hi, lo) int32 pair → int64 row ids (inverse of ``_split_ids``)."""
+    return ((np.asarray(hi, np.int64) << 32)
+            | (np.asarray(lo, np.int64) & np.int64(0xFFFFFFFF)))
 
 
 @dataclasses.dataclass
@@ -54,36 +72,64 @@ class StreamJoinState:
     """Running top-k per query slot, maintained as ascending sorted runs.
 
     ``update`` merges a batch's (dists, ids) runs into the named slots
-    via ``merge_sorted_runs`` — a no-op for slots seen once (merging
-    with the +inf run), a genuine k-way merge when a slot is revisited
-    (e.g. the same queries joined against another index shard).
+    via ``merge_sorted_runs_unique`` — a no-op for slots seen once
+    (merging with the +inf run), a genuine k-way merge when a slot is
+    revisited (e.g. the same queries joined against another index
+    segment or shard). Equal ids across the two runs are deduplicated
+    (the smaller distance survives), so a row offered twice — a
+    compaction/re-query overlap — never occupies two top-k slots. Ids
+    are int64 end to end: they cross the jnp merge as (hi, lo) int32
+    pairs, so segment-offset ids beyond 2³¹ survive uncorrupted.
     """
 
     n: int
     k: int
     distances: np.ndarray = dataclasses.field(init=False)
     indices: np.ndarray = dataclasses.field(init=False)
+    _seen: np.ndarray = dataclasses.field(init=False, repr=False)
 
     def __post_init__(self):
         self.distances = np.full((self.n, self.k), np.inf, np.float32)
         self.indices = np.full((self.n, self.k), -1, np.int64)
+        self._seen = np.zeros((self.n,), bool)
 
     def update(self, rows: np.ndarray, d: np.ndarray, i: np.ndarray) -> None:
         """Merge ascending (|rows|, k) runs into the tracked slots."""
         import jax.numpy as jnp
         from repro.kernels.sorted_merge import next_pow2
 
+        rows = np.asarray(rows)
+        d = np.asarray(d, np.float32)
+        i = np.asarray(i, np.int64)
+        # first touch of a slot is a plain store: merging an ascending
+        # k-run with the all-(+inf, -1) initial run is the identity, so
+        # the disjoint-batch fold (knn_join_batched) never pays the
+        # dedup merge — only genuinely revisited slots do
+        fresh = ~self._seen[rows]
+        if fresh.any():
+            fr = rows[fresh]
+            self.distances[fr] = d[fresh]
+            self.indices[fr] = i[fresh]
+            self._seen[fr] = True
+            if fresh.all():
+                return
+            rows, d, i = rows[~fresh], d[~fresh], i[~fresh]
+
         kp = next_pow2(self.k)
         pad = ((0, 0), (0, kp - self.k))
-        md, mi = _merge_runs_jit(
+        ahi, alo = _split_ids(np.pad(self.indices[rows], pad,
+                                     constant_values=-1))
+        bhi, blo = _split_ids(np.pad(np.asarray(i, np.int64), pad,
+                                     constant_values=-1))
+        md, (mhi, mlo) = _merge_runs_jit(
             jnp.asarray(np.pad(self.distances[rows], pad,
                                constant_values=np.inf)),
-            jnp.asarray(np.pad(self.indices[rows], pad,
-                               constant_values=-1).astype(np.int32)),
+            (jnp.asarray(ahi), jnp.asarray(alo)),
             jnp.asarray(np.pad(d, pad, constant_values=np.inf)),
-            jnp.asarray(np.pad(i, pad, constant_values=-1).astype(np.int32)))
+            (jnp.asarray(bhi), jnp.asarray(blo)))
         self.distances[rows] = np.asarray(md)[:, :self.k]
-        self.indices[rows] = np.asarray(mi)[:, :self.k].astype(np.int64)
+        self.indices[rows] = _join_ids(
+            np.asarray(mhi), np.asarray(mlo))[:, :self.k]
 
 
 class StreamJoinEngine:
@@ -92,9 +138,14 @@ class StreamJoinEngine:
     Holds nothing per-batch: the expensive S-side artifacts live in the
     index (packed pivot-sorted rows, T_S, ``pivd``), each ``join_batch``
     call pays only jitted R assignment + θ/LB + the group joins.
+
+    ``index`` may be a build-once ``SIndex`` or a mutable segmented
+    ``core.segments.MutableIndex`` — the latter fans each batch over all
+    live segments (base + deltas + write buffer) and folds the
+    per-segment sorted runs through the dedup merge.
     """
 
-    def __init__(self, index: SIndex, config: Optional[JoinConfig] = None):
+    def __init__(self, index, config: Optional[JoinConfig] = None):
         self.index = index
         self.config = config or index.config
 
@@ -104,11 +155,16 @@ class StreamJoinEngine:
         """(dists, ids) for one micro-batch — true distances ascending,
         global S row indices."""
         from .api import execute_join
+        from .segments import MutableIndex
 
         queries = np.ascontiguousarray(queries, np.float32)
-        qplan = plan_queries(queries, self.index, self.config)
         if stats is not None:
             stats.n_batches += 1
+        if isinstance(self.index, MutableIndex):
+            return self.index.join_batch(queries, config=self.config,
+                                         stats=stats)
+        qplan = plan_queries(queries, self.index, self.config)
+        if stats is not None:
             stats.pivot_pairs_computed += (
                 queries.shape[0] * self.index.n_pivots)
         return execute_join(queries, self.index, qplan, stats=stats)
@@ -128,16 +184,18 @@ def knn_join_batched(
     k: int | None = None,
     config: Optional[JoinConfig] = None,
     *,
-    index: Optional[SIndex] = None,
+    index=None,
     batch_size: int = 0,
 ) -> JoinResult:
     """Streaming PGBJ join: R in micro-batches against a build-once index.
 
     ``r`` is either one array (split into ``batch_size`` chunks; 0 =
     ``config.batch_size`` or single batch) or an iterable of micro-batch
-    arrays. ``index=`` reuses a prebuilt ``SIndex`` — S-side phase 1
-    never re-runs; otherwise the index is built here from ``s`` (pivots
-    sampled from S: the query set is not assumed to exist up front).
+    arrays. ``index=`` reuses a prebuilt ``SIndex`` (or a mutable
+    segmented ``MutableIndex``) — S-side phase 1 never re-runs on
+    pre-existing segments; otherwise the index is built here from ``s``
+    (pivots sampled from S: the query set is not assumed to exist up
+    front).
 
     Exactness: equals one-shot ``knn_join`` against the same index for
     any batch split. Results are ordered by arrival: row ``j`` of the

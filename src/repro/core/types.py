@@ -107,6 +107,12 @@ class JoinStats:
     tiles_visited: int = 0
     # streaming engine: planned+joined R micro-batches (0 = one-shot path)
     n_batches: int = 0
+    # mutable segmented index (core.segments): live segments fanned over
+    # at query time (sealed deltas + write buffer), tombstoned rows
+    # masked during the merge, and total time spent in compact()
+    n_segments: int = 0
+    n_tombstones: int = 0
+    compact_time_s: float = 0.0
 
     @property
     def selectivity(self) -> float:
@@ -129,8 +135,16 @@ class JoinStats:
 
 @dataclasses.dataclass
 class JoinResult:
-    """kNN-join output:  indices into S and distances, per object of R."""
+    """kNN-join output:  indices into S and distances, per object of R.
 
-    indices: np.ndarray    # (|R|, k) int32 — row ids into S, by ascending distance
+    Indices are **int64** (every engine returns int64; segment-offset
+    ids from the mutable index overflow int32 by design): row ids into
+    S for a static ``SIndex``, global segment-offset ids for a
+    ``core.segments.MutableIndex`` (stable until ``compact``). ``-1``
+    marks padding slots (fewer than k live candidates), always paired
+    with a ``+inf`` distance.
+    """
+
+    indices: np.ndarray    # (|R|, k) int64 — row ids into S, by ascending distance
     distances: np.ndarray  # (|R|, k) float32 — true (non-squared) distances
     stats: JoinStats

@@ -21,13 +21,21 @@ Compare-exchange uses the XOR-partner formulation: the partner of lane
 ``x`` at distance ``dist`` is ``x ^ dist``, materialized with two lane
 rolls and a select (roll lowers to slice+concatenate, which Mosaic
 supports on the lane dimension).
+
+Id payloads: every primitive accepts the id argument either as a single
+int array or as a **tuple of arrays** permuted in lockstep with the
+distances. The tuple form is how wide ids travel through the network —
+jnp arrays are int32 under default JAX config, so a 64-bit row id is
+carried as a (hi, lo) int32 pair (see ``core.stream.StreamJoinState``)
+instead of being silently truncated.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["next_pow2", "bitonic_sort", "tile_topk", "merge_sorted_runs"]
+__all__ = ["next_pow2", "bitonic_sort", "tile_topk", "merge_sorted_runs",
+           "mask_duplicate_ids", "merge_sorted_runs_unique"]
 
 
 def next_pow2(n: int) -> int:
@@ -38,23 +46,37 @@ def _lane_iota(shape, ndim):
     return jax.lax.broadcasted_iota(jnp.int32, shape, ndim - 1)
 
 
+def _as_tuple(i):
+    return i if isinstance(i, tuple) else (i,)
+
+
+def _like(i, parts):
+    return parts if isinstance(i, tuple) else parts[0]
+
+
 def _cmp_swap(d, i, dist: int, asc):
     """One compare-exchange stage over XOR-partners at ``dist`` lanes.
 
     ``asc`` is a bool array broadcastable against ``d`` giving the sort
     direction of each lane's enclosing bitonic block. Ties never swap, so
-    duplicate distances keep their original ids.
+    duplicate distances keep their original ids. ``i`` is one id array or
+    a tuple of id arrays permuted together.
     """
     bitc = (_lane_iota(d.shape, d.ndim) & dist) == 0
-    p_d = jnp.where(bitc, jnp.roll(d, -dist, axis=-1),
-                    jnp.roll(d, dist, axis=-1))
-    p_i = jnp.where(bitc, jnp.roll(i, -dist, axis=-1),
-                    jnp.roll(i, dist, axis=-1))
+
+    def partner(x):
+        return jnp.where(bitc, jnp.roll(x, -dist, axis=-1),
+                         jnp.roll(x, dist, axis=-1))
+
+    p_d = partner(d)
+    ids = _as_tuple(i)
+    p_ids = tuple(partner(x) for x in ids)
     d_gt_p = d > p_d
     p_gt_d = p_d > d
     take = jnp.where(asc, jnp.where(bitc, d_gt_p, p_gt_d),
                      jnp.where(bitc, p_gt_d, d_gt_p))
-    return jnp.where(take, p_d, d), jnp.where(take, p_i, i)
+    out = tuple(jnp.where(take, p, x) for p, x in zip(p_ids, ids))
+    return jnp.where(take, p_d, d), _like(i, out)
 
 
 def bitonic_sort(d, i):
@@ -100,13 +122,67 @@ def merge_sorted_runs(ad, ai, bd, bi):
 
     ``concat(A, reverse(B))`` is bitonic, so log2(2k)+1 compare-exchange
     stages sort it; the first k lanes are the merged smallest-k run.
+    Ids may be single arrays or matching tuples of arrays.
     """
     kp = ad.shape[-1]
     assert kp == bd.shape[-1] and kp & (kp - 1) == 0
     d = jnp.concatenate([ad, jnp.flip(bd, axis=-1)], axis=-1)
-    i = jnp.concatenate([ai, jnp.flip(bi, axis=-1)], axis=-1)
+    i = _like(ai, tuple(
+        jnp.concatenate([a, jnp.flip(b, axis=-1)], axis=-1)
+        for a, b in zip(_as_tuple(ai), _as_tuple(bi))))
     dist = kp
     while dist >= 1:
         d, i = _cmp_swap(d, i, dist, True)
         dist //= 2
-    return d[..., :kp], i[..., :kp]
+    return d[..., :kp], _like(ai, tuple(
+        x[..., :kp] for x in _as_tuple(i)))
+
+
+def mask_duplicate_ids(ad, ai, bd, bi):
+    """Suppress B-run entries whose id already appears in the A run.
+
+    An id that occurs in both runs references the same underlying row, so
+    both copies carry the same distance in this codebase (every engine
+    reports ``metrics.canonical_topk`` distances, a pure function of the
+    (query, row) pair); A absorbs the elementwise-min of its duplicates'
+    distances anyway so the smaller value survives even if a caller feeds
+    diverging copies, and B's copy is demoted to (+inf, -1) so the merge
+    can never return the same row twice. Padding lanes (id -1, +inf) are
+    "duplicates" of each other by this rule, which is a no-op. O(k²)
+    fully-vectorized compares — tuple ids match on every component.
+    """
+    ais, bis = _as_tuple(ai), _as_tuple(bi)
+    eq = None
+    for a, b in zip(ais, bis):
+        e = a[..., :, None] == b[..., None, :]       # (..., ka, kb)
+        eq = e if eq is None else eq & e
+    ad = jnp.minimum(
+        ad, jnp.min(jnp.where(eq, bd[..., None, :], jnp.inf), axis=-1))
+    b_dup = jnp.any(eq, axis=-2)
+    bd = jnp.where(b_dup, jnp.inf, bd)
+    bis = tuple(jnp.where(b_dup, -1, x) for x in bis)
+    return ad, ai, bd, _like(bi, bis)
+
+
+def merge_sorted_runs_unique(ad, ai, bd, bi):
+    """Top-k merge with id dedup: a row present in both runs (the same
+    query slot revisited with overlapping candidate sets — the
+    multi-segment / re-query-after-compaction path) contributes one
+    entry, at its smaller distance, instead of occupying two top-k slots.
+
+    Dedup masking punches +inf holes into the middle of the runs, so the
+    bitonic precondition of the cheap odd-even merge no longer holds;
+    the merged order is re-established with a full bitonic sort of the
+    concatenation — ½·log²(2k) stages instead of log2(2k), paid only on
+    the streaming-state path, never inside the tile kernels.
+    """
+    ad, ai, bd, bi = mask_duplicate_ids(ad, ai, bd, bi)
+    kp = ad.shape[-1]
+    assert kp == bd.shape[-1] and kp & (kp - 1) == 0
+    d = jnp.concatenate([ad, bd], axis=-1)
+    i = _like(ai, tuple(
+        jnp.concatenate([a, b], axis=-1)
+        for a, b in zip(_as_tuple(ai), _as_tuple(bi))))
+    d, i = bitonic_sort(d, i)
+    return d[..., :kp], _like(ai, tuple(
+        x[..., :kp] for x in _as_tuple(i)))

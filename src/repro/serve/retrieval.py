@@ -6,14 +6,14 @@ the datastore is the S side of an `R ⋉ S` kNN join — |R| ≪ |S| is
 exactly the regime where shipping S subsets instead of all of S pays
 (paper §3).
 
-The build-once/query-many split (core.index) is what makes this a
-serving primitive: ``Datastore.build`` runs S-side phase 1 once —
-pivots, Voronoi assignment, T_S, the pivot-sorted packed rows — and
-every decode step's batch is planned fresh by the streaming engine
-(``core.stream.StreamJoinEngine``): jitted R assignment + θ/LB, then
-the per-group join against the resident index. No warmup-query
-planning, no stale θ from a representative sample — the bounds each
-step prunes with are derived from that step's actual hidden states.
+The datastore is **mutable while it serves**: it holds a segmented
+``core.segments.MutableIndex``, so ``add_entries`` can ingest new
+(key, value) pairs mid-decode — they land in a write buffer that seals
+into a small delta segment, and S-side phase 1 never re-runs on
+pre-existing segments — and ``remove_entries`` tombstones stale entries
+without touching any segment. ``compact()`` folds segments + tombstones
+back into one base between decode steps and remaps the row-aligned
+``keys``/``values`` tables to the re-based id space.
 
 p(token) = (1−λ) p_LM + λ softmax(−d²/τ) aggregated over retrieved
 neighbors (Khandelwal et al. 2020), with PGBJ supplying the neighbors.
@@ -21,6 +21,10 @@ Both neighbor paths (the PGBJ join and the raw `distance_topk` kernel)
 return **true** distances; `knn_logits` converts them to one comparable
 space via `core.metrics.to_cmp` before the softmax, so the two paths
 produce identical retrieval distributions (pinned by a regression test).
+Padding slots (id −1 / +inf distance — fewer than k live neighbors) are
+masked out of the softmax explicitly: they carry zero weight instead of
+wrapping around the value table, and a query with zero finite neighbors
+degrades to the log-floor distribution rather than NaN.
 """
 from __future__ import annotations
 
@@ -31,33 +35,70 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import JoinConfig, StreamJoinEngine, build_index
-from repro.core.index import SIndex
+from repro.core import JoinConfig, MutableIndex, StreamJoinEngine
 from repro.core.metrics import to_cmp
 from repro.kernels import distance_topk
 
 
 @dataclasses.dataclass
 class Datastore:
-    keys: np.ndarray       # (N, D) float32
-    values: np.ndarray     # (N,) int32 token ids
-    index: SIndex          # build-once S side (pivots, T_S, packed rows)
+    keys: np.ndarray       # (N_alloc, D) float32, row g = global id g
+    values: np.ndarray     # (N_alloc,) int32 token ids, aligned to keys
+    index: MutableIndex    # segmented mutable S side (base + deltas)
     config: JoinConfig
 
     @classmethod
     def build(cls, keys, values, *, k: int = 8, n_pivots: int = 256,
-              n_groups: int = 8, seed: int = 0):
-        """S-side phase 1, once: after this, serving never touches the
-        keys again except through the index's packed layout."""
+              n_groups: int = 8, seed: int = 0, seal_threshold: int = 4096):
+        """S-side phase 1, once, over the initial keys: after this,
+        serving touches pre-existing keys only through the segments'
+        packed layouts — growth happens in delta segments."""
         keys = np.ascontiguousarray(keys, np.float32)
         cfg = JoinConfig(k=k, n_pivots=min(n_pivots, keys.shape[0]),
                          n_groups=n_groups, grouping="geometric", seed=seed)
         return cls(keys=keys, values=np.asarray(values, np.int32),
-                   index=build_index(keys, cfg), config=cfg)
+                   index=MutableIndex.build(keys, cfg,
+                                            seal_threshold=seal_threshold),
+                   config=cfg)
+
+    @property
+    def n_entries(self) -> int:
+        """Live (key, value) pairs."""
+        return self.index.n_s
+
+    def add_entries(self, keys, values) -> np.ndarray:
+        """Ingest new (key, value) pairs mid-decode; returns their global
+        ids. Buffered immediately (queryable from the next batch on),
+        sealed into a delta segment past the threshold — phase 1 never
+        re-runs on pre-existing segments."""
+        keys = np.ascontiguousarray(keys, np.float32)
+        values = np.atleast_1d(np.asarray(values, np.int32))
+        if keys.shape[0] != values.shape[0]:
+            raise ValueError(
+                f"{keys.shape[0]} keys but {values.shape[0]} values")
+        ids = self.index.insert(keys)
+        self.keys = np.concatenate([self.keys, keys], axis=0)
+        self.values = np.concatenate([self.values, values])
+        return ids
+
+    def remove_entries(self, ids) -> None:
+        """Tombstone entries by global id — O(|ids|), no segment touched;
+        the rows stop being retrievable from the next batch on."""
+        self.index.delete(ids)
+
+    def compact(self) -> np.ndarray:
+        """Fold segments + tombstones into one rebuilt base (between
+        decode steps); re-bases ids to ``0..n_live-1`` and remaps the
+        row-aligned keys/values tables. Returns the old ids in new-id
+        order."""
+        old_ids = self.index.compact()
+        self.keys = np.ascontiguousarray(self.keys[old_ids])
+        self.values = np.ascontiguousarray(self.values[old_ids])
+        return old_ids
 
     def engine(self, k: Optional[int] = None) -> StreamJoinEngine:
-        """A streaming engine over the resident index (optionally with a
-        per-caller k — the index's T_S supports any k ≤ build k)."""
+        """A streaming engine over the resident segmented index
+        (optionally with a per-caller k ≤ the live row count)."""
         cfg = self.config if k is None or k == self.config.k \
             else dataclasses.replace(self.config, k=k)
         return StreamJoinEngine(self.index, cfg)
@@ -70,30 +111,51 @@ class KnnLMConfig:
     k: int = 8
 
 
+_LOG_FLOOR = np.float32(np.log(1e-9))
+
+
 def knn_logits(queries: np.ndarray, store: Datastore, kcfg: KnnLMConfig,
                vocab: int, *, use_kernel: bool = False) -> np.ndarray:
     """Retrieval distribution per query, (B, vocab) log-space.
 
     ``use_kernel=False`` (default) plans + joins the batch against the
-    datastore index (the PGBJ serve path); ``use_kernel=True`` runs the
-    brute-force `distance_topk` kernel over the index's device-resident
-    packed rows. Both return true distances, normalized to comparable
-    space (`to_cmp`: squared for L2) before ``softmax(−d_cmp/τ)``.
+    datastore's segmented index (the PGBJ serve path);
+    ``use_kernel=True`` runs the brute-force `distance_topk` kernel over
+    the store's live rows. Both return true distances, normalized to
+    comparable space (`to_cmp`: squared for L2) before
+    ``softmax(−d_cmp/τ)``; padded slots (id −1 / non-finite distance)
+    are excluded from the softmax, and a query with zero finite
+    neighbors gets the flat log-floor row (never NaN, never a wraparound
+    read of ``values[-1]``).
     """
     queries = np.ascontiguousarray(queries, np.float32)
+    nq = queries.shape[0]
+    k_eff = min(kcfg.k, store.index.n_s)
+    if k_eff == 0:
+        return np.full((nq, vocab), _LOG_FLOOR, np.float32)
     if use_kernel:
-        d, local = distance_topk(jnp.asarray(queries),
-                                 store.index.device_rows(), kcfg.k)
+        rows_dev, gids = store.index.live_device_rows()
+        d, local = distance_topk(jnp.asarray(queries), rows_dev, k_eff)
         d = np.asarray(d)
-        idx = store.index.s_ids_sorted[np.asarray(local)]
+        local = np.asarray(local)
+        idx = np.where(local >= 0,
+                       gids[np.clip(local, 0, gids.shape[0] - 1)], -1)
     else:
-        d, idx = store.engine(kcfg.k).join_batch(queries)
-    w = jax.nn.softmax(
-        jnp.asarray(-to_cmp(d, store.config.metric) / kcfg.tau), axis=-1)
-    toks = store.values[idx]                                        # (B,k)
-    probs = np.zeros((queries.shape[0], vocab), np.float32)
-    np.add.at(probs, (np.arange(queries.shape[0])[:, None], toks),
-              np.asarray(w))
+        d, idx = store.engine(k_eff).join_batch(queries)
+    valid = (idx >= 0) & np.isfinite(d)
+    x = np.where(valid, -to_cmp(d, store.config.metric) / kcfg.tau,
+                 -np.inf).astype(np.float32)
+    # masked softmax: padded slots carry zero weight; an all-masked row
+    # (no finite neighbors) yields all-zero weights, not 0/0
+    m = np.max(x, axis=1, keepdims=True)
+    m = np.where(np.isfinite(m), m, np.float32(0.0))
+    e = np.where(valid, np.exp(x - m), np.float32(0.0)).astype(np.float32)
+    z = e.sum(axis=1, keepdims=True)
+    w = e / np.maximum(z, np.float32(1e-30))
+    toks = store.values[np.clip(idx, 0, store.values.shape[0] - 1)]  # (B,k)
+    toks = np.where(idx >= 0, toks, 0)          # masked: w is 0 anyway
+    probs = np.zeros((nq, vocab), np.float32)
+    np.add.at(probs, (np.arange(nq)[:, None], toks), w)
     return np.log(np.maximum(probs, 1e-9))
 
 

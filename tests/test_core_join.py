@@ -154,6 +154,19 @@ def test_k_larger_than_some_partition():
     np.testing.assert_allclose(res.distances, bd, atol=1e-4)
 
 
+def test_join_result_dtypes():
+    """JoinResult contract: indices are int64 (segment-offset ids from
+    the mutable index overflow int32 by design), distances float32 —
+    across every reducer engine."""
+    r = _data(60, 4, 30)
+    s = _data(90, 4, 31)
+    for reducer in ("dense", "pruned", "gather"):
+        res = knn_join(r, s, config=JoinConfig(
+            k=4, n_pivots=8, n_groups=2, reducer=reducer))
+        assert res.indices.dtype == np.int64, reducer
+        assert res.distances.dtype == np.float32, reducer
+
+
 def test_errors():
     r = _data(50, 3, 20)
     with pytest.raises(ValueError):

@@ -1,0 +1,196 @@
+"""Mutable segmented index: online inserts/deletes/compaction stay exact.
+
+The load-bearing acceptance test: after ANY interleaving of inserts,
+deletes and compactions, `MutableIndex` query results are bitwise
+identical — distances, and ids up to the documented remap — to a fresh
+`build_index` over the surviving rows, for all three reducers and the
+streaming path. (Continuous random data: id equality is only promised
+for tie-free distances — see the caveat in core/segments.py.)
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    JoinConfig, MutableIndex, build_index, knn_join, knn_join_batched)
+
+
+def _data(rng, n, dim=6, scale=3.0):
+    return rng.normal(size=(n, dim)).astype(np.float32) * scale
+
+
+def _oracle(mi, r, cfg):
+    """Fresh static index over the surviving rows; fresh local ids
+    remapped into the mutable index's global id space."""
+    rows, gids = mi.live_rows()
+    res = knn_join(r, config=cfg, index=build_index(rows, cfg))
+    remapped = np.where(res.indices >= 0,
+                        gids[np.clip(res.indices, 0, None)], -1)
+    return res.distances, remapped
+
+
+def _check(mi, r, cfg):
+    res = knn_join(r, config=cfg, index=mi)
+    od, oi = _oracle(mi, r, cfg)
+    np.testing.assert_array_equal(res.distances, od)
+    np.testing.assert_array_equal(res.indices, oi)
+    return res
+
+
+@pytest.mark.parametrize("reducer", ["dense", "pruned", "gather"])
+def test_oracle_any_interleaving(reducer):
+    """Acceptance: insert → delete → seal → compact → delete → insert,
+    checked against a fresh rebuild at every step, one-shot + streaming."""
+    rng = np.random.default_rng(0)
+    cfg = JoinConfig(k=5, n_pivots=16, n_groups=4, seed=1, reducer=reducer)
+    mi = MutableIndex.build(_data(rng, 300), cfg, seal_threshold=50)
+    r = _data(rng, 40)
+    _check(mi, r, cfg)
+
+    mi.insert(_data(rng, 60))                 # crosses threshold → seals
+    assert len(mi.segments) == 2
+    _check(mi, r, cfg)
+
+    mi.delete(np.arange(40))                  # tombstones inside the base
+    mi.insert(_data(rng, 20))                 # stays buffered
+    assert mi.n_buffered == 20 and mi.n_segments == 3
+    res = _check(mi, r, cfg)
+    assert res.stats.n_segments == 3 and res.stats.n_tombstones == 40
+
+    # streaming path over the same mutable index
+    batched = knn_join_batched(r, index=mi, config=cfg, batch_size=13)
+    np.testing.assert_array_equal(batched.distances, res.distances)
+    np.testing.assert_array_equal(batched.indices, res.indices)
+
+    pre = res.distances
+    mi.compact()
+    assert (mi.n_segments, mi.n_tombstones, mi.n_buffered) == (1, 0, 0)
+    res = _check(mi, r, cfg)
+    # the live set did not change: distances invariant under compaction
+    np.testing.assert_array_equal(res.distances, pre)
+
+    # mutate again after the rebase: ids were remapped, results stay exact
+    mi.delete(res.indices[0, :2])
+    mi.insert(_data(rng, 10))
+    _check(mi, r, cfg)
+
+
+def test_ids_are_global_stable_and_remapped_on_compact():
+    rng = np.random.default_rng(1)
+    cfg = JoinConfig(k=3, n_pivots=8, n_groups=2, seed=0)
+    mi = MutableIndex.build(_data(rng, 80), cfg, seal_threshold=10)
+    ids = mi.insert(_data(rng, 12))
+    np.testing.assert_array_equal(ids, np.arange(80, 92))  # offset id space
+    mi.delete([5, 81])
+    rows_before, ids_before = mi.live_rows()
+    old_ids = mi.compact()
+    np.testing.assert_array_equal(old_ids, ids_before)     # survivor order
+    rows_after, ids_after = mi.live_rows()
+    np.testing.assert_array_equal(rows_after, rows_before)
+    np.testing.assert_array_equal(ids_after, np.arange(90))  # re-based dense
+
+
+def test_segment_offset_ids_survive_int32_overflow():
+    """Global ids past 2³¹ flow uncorrupted through planning, join and
+    the (hi, lo)-split merge state — the id-truncation regression."""
+    rng = np.random.default_rng(2)
+    cfg = JoinConfig(k=4, n_pivots=8, n_groups=2, seed=0)
+    mi = MutableIndex.build(_data(rng, 100), cfg, seal_threshold=10)
+    mi._next_id = 2**31 + 7       # long-lived datastore's id watermark
+    big = mi.insert(_data(rng, 12))
+    assert big[0] == 2**31 + 7 and len(mi.segments) == 2
+    r = _data(rng, 9)
+    res = knn_join(r, config=cfg, index=mi)
+    od, oi = _oracle(mi, r, cfg)
+    np.testing.assert_array_equal(res.indices, oi)
+    assert res.indices.max() > 2**31
+    # and batched, which folds through StreamJoinState
+    batched = knn_join_batched(r, index=mi, config=cfg, batch_size=4)
+    np.testing.assert_array_equal(batched.indices, oi)
+
+
+def test_tombstoned_nearest_neighbor_is_replaced_exactly():
+    """Deleting a query's nearest neighbor surfaces the next-best LIVE
+    row (per-segment over-fetch k + tombstones), never a dead id."""
+    rng = np.random.default_rng(3)
+    cfg = JoinConfig(k=4, n_pivots=8, n_groups=2, seed=0)
+    s = _data(rng, 120)
+    mi = MutableIndex.build(s, cfg)
+    r = _data(rng, 15)
+    first = knn_join(r, config=cfg, index=mi)
+    doomed = np.unique(first.indices[:, 0])
+    mi.delete(doomed)
+    res = _check(mi, r, cfg)
+    assert not np.isin(res.indices, doomed).any()
+
+
+@pytest.mark.parametrize("reducer", ["dense", "pruned", "gather"])
+def test_overfetch_escalation_stays_exact(reducer):
+    """Force the adaptive over-fetch's second pass: delete far more than
+    k rows, all inside one query's neighborhood, so the first-pass
+    ``k + min(n_dead, k)`` prefix is provably incomplete for that query
+    and it re-runs at the certain ``k + n_dead`` bound."""
+    rng = np.random.default_rng(8)
+    cfg = JoinConfig(k=4, n_pivots=12, n_groups=3, seed=2, reducer=reducer)
+    s = _data(rng, 250)
+    mi = MutableIndex.build(s, cfg)
+    r = _data(rng, 10)
+    # kill the 20 nearest rows of query 0 (k=4 → first pass fetches 8)
+    top20 = knn_join(r[:1], k=20, config=cfg, index=mi).indices[0]
+    mi.delete(top20)
+    res = _check(mi, r, cfg)
+    assert not np.isin(res.indices, top20).any()
+    assert res.stats.n_tombstones == 20
+
+
+def test_delete_validates_ids():
+    rng = np.random.default_rng(4)
+    mi = MutableIndex.build(_data(rng, 30),
+                            JoinConfig(k=2, n_pivots=4, n_groups=2))
+    with pytest.raises(ValueError):
+        mi.delete([30])           # never allocated
+    with pytest.raises(ValueError):
+        mi.delete([-1])
+    mi.delete([7])
+    with pytest.raises(ValueError):
+        mi.delete([7])            # already dead
+    with pytest.raises(ValueError):
+        mi.delete([3, 3])         # duplicate in one call
+
+
+def test_k_larger_than_live_rows_raises():
+    rng = np.random.default_rng(5)
+    cfg = JoinConfig(k=4, n_pivots=4, n_groups=2)
+    mi = MutableIndex.build(_data(rng, 6), cfg)
+    mi.delete([0, 1, 2])
+    assert mi.n_s == 3
+    with pytest.raises(ValueError):
+        knn_join(_data(rng, 2), config=cfg, index=mi)
+    # k == live works and over-fetches around the tombstones
+    res = knn_join(_data(rng, 2), k=3, config=cfg, index=mi)
+    assert (res.indices >= 0).all()
+
+
+def test_empty_after_full_delete_and_compact():
+    rng = np.random.default_rng(6)
+    cfg = JoinConfig(k=2, n_pivots=4, n_groups=2)
+    mi = MutableIndex.build(_data(rng, 10), cfg)
+    mi.delete(np.arange(10))
+    assert mi.n_s == 0
+    mi.compact()
+    assert mi.n_s == 0 and mi.n_segments == 0
+    ids = mi.insert(_data(rng, 5))            # index is reusable afterwards
+    np.testing.assert_array_equal(ids, np.arange(5))
+    res = knn_join(_data(rng, 3), k=2, config=cfg, index=mi)
+    assert (res.indices >= 0).all()
+
+
+def test_compaction_time_lands_in_stats():
+    rng = np.random.default_rng(7)
+    cfg = JoinConfig(k=3, n_pivots=8, n_groups=2)
+    mi = MutableIndex.build(_data(rng, 60), cfg)
+    mi.delete([1, 2])
+    from repro.core import JoinStats
+    stats = JoinStats()
+    mi.compact(stats=stats)
+    assert stats.compact_time_s > 0.0
+    assert mi.last_compact_s == stats.compact_time_s

@@ -97,6 +97,100 @@ def test_datastore_index_reused_across_decode_steps():
         index_mod.assign_and_summarize = orig
 
 
+def test_add_entries_mid_decode_no_phase1_on_existing_segments():
+    """Acceptance: `add_entries` mid-decode changes retrieval results
+    without re-running S-side phase 1 on pre-existing segments — the
+    only phase-1 run is over the sealed delta's own rows (pinned the
+    same way tests/test_stream.py pins index reuse)."""
+    import repro.core.index as index_mod
+
+    rng = np.random.default_rng(11)
+    keys = rng.normal(size=(300, 8)).astype(np.float32)
+    vals = rng.integers(0, 32, 300).astype(np.int32)
+    store = Datastore.build(keys, vals, k=4, n_pivots=16, n_groups=2,
+                            seal_threshold=2)
+    kcfg = KnnLMConfig(k=4, tau=5.0)
+    q = rng.normal(size=(3, 8)).astype(np.float32)
+    before = knn_logits(q, store, kcfg, vocab=40)
+
+    phase1_sizes = []
+    orig = index_mod.assign_and_summarize
+
+    def guard(data, *a, **kw):
+        phase1_sizes.append(data.shape[0])
+        return orig(data, *a, **kw)
+
+    index_mod.assign_and_summarize = guard
+    try:
+        # plant the queries themselves as new entries with a fresh token:
+        # retrieval must now find them (distance 0) mid-decode; the
+        # 3-row batch crosses seal_threshold=2 and seals into a delta
+        ids = store.add_entries(q, np.full(3, 39, np.int32))
+        assert store.index.n_segments == 2 and store.index.n_buffered == 0
+        after = knn_logits(q, store, kcfg, vocab=40)
+    finally:
+        index_mod.assign_and_summarize = orig
+    assert not np.array_equal(before, after)
+    assert (after.argmax(1) == 39).all()        # the planted pairs dominate
+    # phase 1 ran exactly once, over the 3 delta rows — never over the
+    # 300 pre-existing base rows
+    assert phase1_sizes == [3]
+    # deletion is mid-decode too: tombstoning the planted pairs restores
+    # the original retrieval distribution without touching any segment
+    store.remove_entries(ids)
+    restored = knn_logits(q, store, kcfg, vocab=40)
+    np.testing.assert_allclose(restored, before, rtol=1e-5, atol=1e-6)
+
+
+def test_knn_logits_masks_padding_and_missing_neighbors():
+    """Edge cases of the padded-id fix: k > |finite neighbors| must not
+    wrap around the value table (`values[-1]`) nor produce NaN."""
+    rng = np.random.default_rng(12)
+    keys = rng.normal(size=(40, 6)).astype(np.float32)
+    vals = rng.integers(0, 8, 40).astype(np.int32)
+    vals[-1] = 9                                  # the wraparound target
+    store = Datastore.build(keys, vals, k=4, n_pivots=8, n_groups=2)
+    q = rng.normal(size=(5, 6)).astype(np.float32)
+    # leave fewer live entries than k: 3 live < k=4
+    store.remove_entries(np.arange(3, 40))
+    assert store.n_entries == 3
+    for use_kernel in (False, True):
+        lg = knn_logits(q, store, KnnLMConfig(k=4), vocab=10,
+                        use_kernel=use_kernel)
+        assert np.isfinite(lg).all()
+        # no probability mass may leak onto the deleted rows' tokens —
+        # in particular none onto token 9 via a values[-1] wraparound
+        live_tokens = set(vals[:3].tolist())
+        for t in range(10):
+            if t not in live_tokens:
+                np.testing.assert_allclose(lg[:, t], np.log(1e-9))
+    # zero live entries: the all-masked row degrades to the log floor
+    store.remove_entries(np.arange(3))
+    lg = knn_logits(q, store, KnnLMConfig(k=4), vocab=10)
+    assert np.isfinite(lg).all()
+    np.testing.assert_allclose(lg, np.log(1e-9))
+
+
+def test_datastore_compact_remaps_values():
+    """Compaction re-bases ids; the value table must follow so retrieved
+    tokens are unchanged."""
+    rng = np.random.default_rng(13)
+    keys = rng.normal(size=(200, 8)).astype(np.float32)
+    vals = rng.integers(0, 32, 200).astype(np.int32)
+    store = Datastore.build(keys, vals, k=4, n_pivots=16, n_groups=2,
+                            seal_threshold=8)
+    store.add_entries(rng.normal(size=(10, 8)).astype(np.float32),
+                      rng.integers(0, 32, 10).astype(np.int32))
+    store.remove_entries([0, 5, 203])
+    q = rng.normal(size=(4, 8)).astype(np.float32)
+    kcfg = KnnLMConfig(k=4, tau=5.0)
+    before = knn_logits(q, store, kcfg, vocab=32)
+    store.compact()
+    assert store.index.n_segments == 1 and store.keys.shape[0] == 207
+    after = knn_logits(q, store, kcfg, vocab=32)
+    np.testing.assert_allclose(after, before, rtol=1e-5, atol=1e-6)
+
+
 def test_interpolation_limits():
     lm = jnp.log(jnp.asarray([[0.7, 0.2, 0.1]]))
     knn = np.log(np.asarray([[0.05, 0.05, 0.9]], np.float32))

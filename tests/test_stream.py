@@ -122,6 +122,57 @@ def test_stream_state_merges_revisited_slots():
     assert state.indices[0, 0] == 100 and state.indices[0, 1] == 0
 
 
+def test_stream_state_keeps_int64_ids():
+    """Regression: ids above the int32 range must survive the merge —
+    the old path truncated S row ids to int32 before the kernel, silently
+    corrupting segment-offset ids ≥ 2³¹ (and |S| ≥ 2³¹)."""
+    state = StreamJoinState(n=2, k=4)
+    base = np.int64(2**31)
+    big = np.array([[base + 3, base + 9, 2**33 + 1, base + 40],
+                    [7, base, 2**40, 2**40 + 123]], np.int64)
+    d = np.float32([[1, 2, 3, 4], [1, 2, 3, 4]])
+    state.update(np.arange(2), d, big)
+    np.testing.assert_array_equal(state.indices, big)
+    # revisit with a better run: merged ids still exact at 64 bits
+    d2 = np.float32([[0.5, 5, 6, 7], [0.1, 9, 9, 9]])
+    i2 = np.array([[2**35, -1, -1, -1], [2**36 + 17, -1, -1, -1]], np.int64)
+    state.update(np.arange(2), d2, i2)
+    np.testing.assert_array_equal(
+        state.indices[:, 0], [2**35, 2**36 + 17])
+    np.testing.assert_array_equal(state.indices[0, 1:], big[0, :3])
+
+
+def test_stream_state_dedups_revisited_overlap():
+    """A slot revisited with an overlapping candidate set keeps each S
+    row at most once (the odd-even merge alone would return duplicates),
+    at its smaller distance, and backfills with the next-best rows."""
+    state = StreamJoinState(n=1, k=4)
+    state.update(np.array([0]), np.float32([[1, 2, 3, 4]]),
+                 np.array([[10, 11, 12, 13]], np.int64))
+    # rows 11/12 offered again (same canonical distances), plus new rows:
+    # the duplicates collapse, 20@3.5 takes the freed slot
+    state.update(np.array([0]), np.float32([[2, 3, 3.5, 5]]),
+                 np.array([[11, 12, 20, 21]], np.int64))
+    np.testing.assert_array_equal(state.indices, [[10, 11, 12, 20]])
+    np.testing.assert_array_equal(state.distances,
+                                  np.float32([[1, 2, 3, 3.5]]))
+    # overlap where the revisit is strictly better: min distance survives
+    state2 = StreamJoinState(n=1, k=4)
+    state2.update(np.array([0]), np.float32([[1, 2, 3, 4]]),
+                  np.array([[10, 11, 12, 13]], np.int64))
+    state2.update(np.array([0]), np.float32([[0.5, 2.5, 6, 7]]),
+                  np.array([[12, 30, 31, 32]], np.int64))
+    np.testing.assert_array_equal(state2.indices, [[12, 10, 11, 30]])
+    np.testing.assert_array_equal(state2.distances, [[0.5, 1, 2, 2.5]])
+    # ids with identical low 32 bits are NOT duplicates (hi/lo compare)
+    state3 = StreamJoinState(n=1, k=2)
+    state3.update(np.array([0]), np.float32([[1, 2]]),
+                  np.array([[5, 6]], np.int64))
+    state3.update(np.array([0]), np.float32([[0.5, 1.5]]),
+                  np.array([[2**32 + 5, 2**33 + 6]], np.int64))
+    np.testing.assert_array_equal(state3.indices, [[2**32 + 5, 5]])
+
+
 @pytest.mark.parametrize("metric", ["l1", "linf"])
 def test_batched_metric_generality(metric):
     """L1/L∞ threads through index build + per-batch planning + join."""
