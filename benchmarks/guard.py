@@ -1,0 +1,112 @@
+"""Benchmark regression guard for CI.
+
+Compares the key perf-contract metrics of a fresh ``benchmarks.run
+--json`` record against a committed baseline and fails loudly on a >2×
+regression. The guarded rows are the ones this repo's serving-path
+claims rest on:
+
+* ``kernel_streaming_vs_oneshot`` / ``overhead_frac`` — the megastep
+  acceptance metric (streaming must stay near one-shot cost);
+* ``kernel_index_build_amortization`` / ``plan_frac_of_batch`` — the
+  host planner's per-batch share;
+* ``kernel_megastep_vs_hostplanned`` / ``speedup`` — fused megastep vs
+  host-planned per-batch latency;
+* ``kernel_megastep_vs_hostplanned`` / ``device_steady_state_syncs`` —
+  hard invariant: the device-level steady state performs **zero** host
+  syncs, any nonzero value fails regardless of the baseline.
+
+Baselines: ``BENCH_kernels.json`` records the full-size sweep;
+``BENCH_kernels_fast.json`` records the ``--fast`` (CI-sized) sweep —
+compare like against like, the metrics are workload-size dependent.
+
+Usage:  python -m benchmarks.guard --baseline BENCH_kernels_fast.json \
+            --current bench-fast.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# (bench row, metric, direction): "lower" metrics regress by growing,
+# "higher" metrics regress by shrinking. ``slack`` is an absolute
+# allowance on top of the 2× ratio so near-zero baselines don't turn
+# CI-machine noise into failures.
+CHECKS = [
+    ("kernel_streaming_vs_oneshot", "overhead_frac", "lower", 0.10),
+    ("kernel_index_build_amortization", "plan_frac_of_batch", "lower", 0.05),
+    ("kernel_megastep_vs_hostplanned", "speedup", "higher", 2.0),
+]
+HARD_ZERO = [("kernel_megastep_vs_hostplanned", "device_steady_state_syncs")]
+
+
+def _rows(records: list, bench: str) -> list:
+    return [r for r in records if r.get("bench") == bench]
+
+
+def check(baseline: list, current: list) -> list[str]:
+    """Returns a list of human-readable failure messages (empty = pass)."""
+    failures = []
+    for bench, metric, direction, slack in CHECKS:
+        base_rows = _rows(baseline, bench)
+        cur_rows = _rows(current, bench)
+        if not base_rows:
+            continue   # metric not in the committed baseline yet
+        if not cur_rows:
+            failures.append(
+                f"{bench}: row missing from the current sweep (the bench "
+                f"crashed or was removed) — baseline has it")
+            continue
+        base = float(base_rows[0][metric])
+        cur = float(cur_rows[0][metric])
+        if direction == "lower":
+            # a negative baseline (streaming faster than one-shot) would
+            # make the 2x ratio nonsensical — clamp at 0 so the limit is
+            # always "at most 2x the (non-negative) baseline + slack"
+            limit = max(base, 0.0) * 2.0 + slack
+            if cur > limit:
+                failures.append(
+                    f"{bench}.{metric} regressed: {cur:.4f} vs baseline "
+                    f"{base:.4f} (limit {limit:.4f} = 2x + {slack} slack). "
+                    f"Lower is better here — the per-batch overhead the "
+                    f"megastep is supposed to keep down has grown >2x.")
+        else:
+            limit = max(base / 2.0 - slack, 0.0)
+            if cur < limit:
+                failures.append(
+                    f"{bench}.{metric} regressed: {cur:.4f} vs baseline "
+                    f"{base:.4f} (limit {limit:.4f} = baseline/2). Higher "
+                    f"is better here — the megastep speedup collapsed.")
+    for bench, metric in HARD_ZERO:
+        for row in _rows(current, bench):
+            if float(row.get(metric, 0.0)) != 0.0:
+                failures.append(
+                    f"{bench}.{metric} = {row[metric]} — the megastep "
+                    f"steady state must perform zero host syncs; something "
+                    f"reintroduced a device→host round-trip.")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed JSON record (match the sweep size: "
+                         "BENCH_kernels_fast.json for --fast runs)")
+    ap.add_argument("--current", required=True,
+                    help="fresh benchmarks.run --json output")
+    args = ap.parse_args()
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.current) as fh:
+        current = json.load(fh)
+    failures = check(baseline, current)
+    if failures:
+        print("benchmark regression guard FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print("benchmark regression guard: all key rows within 2x of baseline")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,10 @@ from .index import SIndex, QueryPlan, build_index, plan_queries
 from .api import knn_join, plan_join, execute_join, JoinPlan
 from .stream import StreamJoinEngine, StreamJoinState, knn_join_batched
 from .segments import MutableIndex, Segment
-from .schedule import TileSchedule, build_tile_schedule, compact_visit_mask
+from .megastep import MegastepEngine
+from .schedule import (
+    TileSchedule, build_tile_schedule, compact_visit_mask,
+    segment_tile_stats, visit_mask_jnp, compact_visits_jnp)
 from .metrics import pairwise_dist
 from .baselines import brute_force_knn, hbrj_join, pbj_join
 
@@ -28,8 +31,9 @@ __all__ = [
     "SIndex", "QueryPlan", "build_index", "plan_queries",
     "knn_join", "plan_join", "execute_join", "JoinPlan",
     "StreamJoinEngine", "StreamJoinState", "knn_join_batched",
-    "MutableIndex", "Segment",
+    "MutableIndex", "Segment", "MegastepEngine",
     "TileSchedule", "build_tile_schedule", "compact_visit_mask",
+    "segment_tile_stats", "visit_mask_jnp", "compact_visits_jnp",
     "pairwise_dist",
     "brute_force_knn", "hbrj_join", "pbj_join",
 ]

@@ -15,7 +15,10 @@ over ``(SIndex, QueryPlan)`` for callers of the pre-split API.
 The streaming micro-batch engine lives in ``core.stream``
 (``knn_join_batched``); the distributed (shard_map) execution in
 ``core.distributed`` — both share the index, the planner and the
-per-group executor below.
+per-group executor below. ``core.megastep`` fuses the whole per-batch
+path (assignment → bounds → schedule → gather top-k → merge) into one
+jitted device pass; ``knn_join(megastep=True)`` runs it one-shot, and
+the host-planned pipeline here remains its reference oracle.
 """
 from __future__ import annotations
 
@@ -160,6 +163,7 @@ def knn_join(
     *,
     plan: Optional[JoinPlan] = None,
     index=None,
+    megastep: bool = False,
 ) -> JoinResult:
     """PGBJ kNN join: for every row of ``r``, the k nearest rows of ``s``.
 
@@ -172,6 +176,13 @@ def knn_join(
     omitted); ``plan=`` additionally reuses a query plan. Otherwise the
     index is built from ``s`` with pivots selected from ``r`` — the
     paper's one-shot pipeline.
+
+    ``megastep=True`` executes the batch through the fused
+    device-resident megastep (`core.megastep`, L2 only) instead of the
+    host-planned engines — identical results, one jitted pass. This
+    one-shot form builds a fresh engine per call; streaming / serving
+    callers should hold a ``StreamJoinEngine(megastep=True)`` so the
+    uploaded index payload and the compiled step persist across batches.
     """
     from .segments import MutableIndex
 
@@ -191,7 +202,12 @@ def knn_join(
         if config.k > index.n_s:
             raise ValueError(f"k={config.k} > live |S|={index.n_s}")
         stats = JoinStats(n_r=r.shape[0], n_s=index.n_s)
-        out_d, out_i = index.join_batch(r, config=config, stats=stats)
+        if megastep:
+            from .megastep import MegastepEngine
+            out_d, out_i = MegastepEngine(index, config).join_batch(
+                r, stats=stats)
+        else:
+            out_d, out_i = index.join_batch(r, config=config, stats=stats)
         return JoinResult(indices=out_i, distances=out_d, stats=stats)
     built_here = index is None
     if index is None:
@@ -208,6 +224,22 @@ def knn_join(
                 f"{index.n_s}; results would index the wrong dataset")
         if config.k > index.n_s:
             raise ValueError(f"k={config.k} > |S|={index.n_s}")
+    if megastep:
+        # the fused path plans on device inside its own jit — a caller's
+        # prebuilt QueryPlan cannot be honored, so reject rather than
+        # silently discard it
+        if plan is not None:
+            raise ValueError(
+                "megastep=True plans on device and cannot reuse plan=; "
+                "pass index= (the megastep re-derives the query side "
+                "in-jit) or drop megastep")
+        from .megastep import MegastepEngine
+        stats = JoinStats(n_r=r.shape[0], n_s=index.n_s)
+        if built_here:
+            stats.pivot_pairs_computed += index.n_s * index.n_pivots
+        out_d, out_i = MegastepEngine(index, config).join_batch(
+            r, stats=stats)
+        return JoinResult(indices=out_i, distances=out_d, stats=stats)
     if plan is not None:
         qplan = plan.query
         if config is not qplan.config:
@@ -229,8 +261,8 @@ def knn_join(
     stats = JoinStats(n_r=r.shape[0], n_s=index.n_s)
     # job-1 mapper pivot distances count toward Eq. 13 (paper §6 note);
     # a reused index's S-side phase 1 was paid at build, not here
-    stats.pivot_pairs_computed += r.shape[0] * index.n_pivots
     if built_here:
         stats.pivot_pairs_computed += index.n_s * index.n_pivots
+    stats.pivot_pairs_computed += r.shape[0] * index.n_pivots
     out_d, out_i = execute_join(r, index, qplan, stats=stats)
     return JoinResult(indices=out_i, distances=out_d, stats=stats)

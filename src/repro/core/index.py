@@ -69,6 +69,8 @@ class SIndex:
     s_inv: np.ndarray            # (|S|,) original row -> sorted position
     _device_rows: object = dataclasses.field(
         default=None, repr=False, compare=False)
+    _tile_stats: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def n_s(self) -> int:
@@ -89,6 +91,19 @@ class SIndex:
             import jax.numpy as jnp
             self._device_rows = jnp.asarray(self.s_sorted)
         return self._device_rows
+
+    def tile_stats(self, bn: int):
+        """Per-S-tile Thm-2 statistics ``(sd_min, sd_max, present)`` over
+        the packed layout at tile size ``bn`` (see
+        `core.schedule.segment_tile_stats`) — query-independent, computed
+        once and cached for the index's lifetime. The device-resident
+        megastep uploads these as constants so its in-jit schedule build
+        touches only query-dependent math."""
+        if bn not in self._tile_stats:
+            from .schedule import segment_tile_stats
+            self._tile_stats[bn] = segment_tile_stats(
+                self.s_part_sorted, self.s_dist_sorted, self.n_pivots, bn)
+        return self._tile_stats[bn]
 
     def replica_mask_sorted(self, lb_group: np.ndarray, g: int) -> np.ndarray:
         """Theorem 6 membership over the *sorted* row layout: which packed

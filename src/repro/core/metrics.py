@@ -55,31 +55,85 @@ def cmp_dist(a: np.ndarray, b: np.ndarray, metric: str = "l2",
     return pairwise_dist(a, b, metric, block=block)
 
 
+def canonical_gathered(q, neigh, metric: str = "l2"):
+    """The canonical per-pair distance graph, on jnp arrays (traceable).
+
+    ``q`` (n, dim) vs ``neigh`` (n, k, dim) → (n, k) float32 true
+    distances. The reduction over ``dim`` is an *unrolled* left-to-right
+    chain of elementwise float32 ops: XLA never reassociates explicit
+    elementwise adds, so every (q, s) pair produces the same bits no
+    matter the leading shape, the backend fusion decisions, or whether
+    the graph is embedded in a larger jit (the fused query megastep
+    inlines exactly this graph on device). Both the host canonicalizer
+    (:func:`gathered_dist`) and the megastep call this one function —
+    bitwise equality between the two execution paths rests on it.
+    """
+    import jax.numpy as jnp
+
+    d = q[:, None, :].astype(jnp.float32) - neigh.astype(jnp.float32)
+    if metric == "l2":
+        acc = d[..., 0] * d[..., 0]
+        for t in range(1, d.shape[-1]):
+            acc = acc + d[..., t] * d[..., t]
+        return jnp.sqrt(acc)
+    a = jnp.abs(d)
+    acc = a[..., 0]
+    for t in range(1, a.shape[-1]):
+        acc = acc + a[..., t] if metric == "l1" else jnp.maximum(acc, a[..., t])
+    return acc
+
+
+_gathered_jit: dict = {}
+
+
 def gathered_dist(q: np.ndarray, neigh: np.ndarray, metric: str = "l2",
                   *, block: int = 8192) -> np.ndarray:
     """True distances of each query to its gathered neighbor rows.
 
     ``q`` (n, dim) vs ``neigh`` (n, k, dim) → (n, k). Shape-canonical:
-    every pair reduces over ``dim`` with the same fixed-order einsum/sum
-    loop no matter how many rows surround it, so the value of a (q, s)
-    pair is independent of batch composition — unlike BLAS matmul, whose
-    kernel dispatch (gemm vs gemv, blocking) varies with operand shape.
-    This is what lets the streaming engine promise bitwise-identical
-    results for any micro-batch split.
+    every pair reduces over ``dim`` with the same fixed-order unrolled
+    elementwise chain (`canonical_gathered`) no matter how many rows
+    surround it, so the value of a (q, s) pair is independent of batch
+    composition — unlike BLAS matmul, whose kernel dispatch (gemm vs
+    gemv, blocking) varies with operand shape. This is what lets the
+    streaming engine promise bitwise-identical results for any
+    micro-batch split, and what makes the device-resident megastep
+    (core.megastep) report the same bits as the host-planned path.
+
+    Rows are processed in ``block``-sized chunks (bounded device memory
+    for huge one-shot joins), each padded to a power-of-two bucket so
+    the jit cache stays small across ragged batch sizes — per-row
+    values are unaffected by both the chunking and the padding rows.
     """
     q = np.asarray(q, np.float32)
     neigh = np.asarray(neigh, np.float32)
-    out = np.empty(neigh.shape[:2], np.float32)
-    for lo in range(0, q.shape[0], block):
-        hi = min(lo + block, q.shape[0])
-        qb, nb = q[lo:hi], neigh[lo:hi]
-        if metric == "l2":
-            diff = qb[:, None, :] - nb
-            out[lo:hi] = np.sqrt(np.einsum("nkd,nkd->nk", diff, diff))
-        else:
-            diff = np.abs(qb[:, None, :] - nb)
-            out[lo:hi] = diff.sum(-1) if metric == "l1" else diff.max(-1)
+    n, k = neigh.shape[:2]
+    if n == 0 or k == 0 or q.shape[1] == 0:
+        return np.zeros((n, k), np.float32)
+    if n <= block:
+        return _gathered_block(q, neigh, metric)
+    out = np.empty((n, k), np.float32)
+    for lo in range(0, n, block):
+        hi = min(lo + block, n)
+        out[lo:hi] = _gathered_block(q[lo:hi], neigh[lo:hi], metric)
     return out
+
+
+def _gathered_block(q: np.ndarray, neigh: np.ndarray,
+                    metric: str) -> np.ndarray:
+    import jax
+
+    n, k = neigh.shape[:2]
+    bucket = 1 << max(3, (n - 1).bit_length())
+    key = (metric, int(q.shape[1]), int(k), bucket)
+    fn = _gathered_jit.get(key)
+    if fn is None:
+        fn = jax.jit(lambda qq, nn: canonical_gathered(qq, nn, metric))
+        _gathered_jit[key] = fn
+    if bucket != n:
+        q = np.pad(q, ((0, bucket - n), (0, 0)))
+        neigh = np.pad(neigh, ((0, bucket - n), (0, 0), (0, 0)))
+    return np.asarray(fn(q, neigh))[:n]
 
 
 def canonical_topk(q: np.ndarray, ids: np.ndarray, neigh: np.ndarray,

@@ -43,7 +43,106 @@ from .metrics import cmp_dist, from_cmp
 from .types import JoinStats
 
 __all__ = ["TileSchedule", "build_tile_schedule", "compact_visit_mask",
-           "schedule_for_group"]
+           "schedule_for_group", "segment_tile_stats", "visit_mask_jnp",
+           "compact_visits_jnp"]
+
+
+def segment_tile_stats(
+    s_part_sorted: np.ndarray, s_dist_sorted: np.ndarray, m: int, bn: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-S-tile Thm-2 statistics, precomputed once per index upload.
+
+    Returns ``(sd_min, sd_max, present)`` of shape (ns_tiles, M): the
+    min/max ``|p_j, s|`` over each tile's rows of partition j and whether
+    partition j has any row in the tile. A pure function of the packed S
+    layout — query-independent, so the device-resident megastep receives
+    it as a constant instead of recomputing it per batch.
+    """
+    n_s = int(s_part_sorted.shape[0])
+    ns_tiles = max(1, -(-n_s // bn))
+    sd_min = np.full((ns_tiles, m), np.inf, np.float32)
+    sd_max = np.full((ns_tiles, m), -np.inf, np.float32)
+    valid = s_part_sorted >= 0
+    tile_of_s = (np.arange(n_s) // bn).astype(np.int64)
+    idx = (tile_of_s[valid], s_part_sorted[valid])
+    np.minimum.at(sd_min, idx, s_dist_sorted[valid].astype(np.float32))
+    np.maximum.at(sd_max, idx, s_dist_sorted[valid].astype(np.float32))
+    present = sd_max > -np.inf
+    return sd_min, sd_max, present
+
+
+def visit_mask_jnp(qp, home, th_q, valid_q, pivd,
+                   sd_min, sd_max, present, *, bm: int, metric: str = "l2"):
+    """Cor. 1 + Thm 2 lowered to jnp for one segment — the host
+    ``build_tile_schedule`` bound evaluation as a traced graph, so the
+    megastep computes its schedule under the same jit as the kernel.
+
+    ``qp`` (B, M) true query→pivot distances, ``home`` (B,) int32,
+    ``th_q`` (B,) per-query kNN radius bound (−inf for padding rows),
+    ``valid_q`` (B,) bool; ``sd_min``/``sd_max``/``present`` from
+    :func:`segment_tile_stats`. B must be a multiple of ``bm``. Returns a
+    (B // bm, ns_tiles) bool visit mask. Tile reductions take the loosest
+    bound over the tile's valid queries, exactly like the host builder —
+    the scheduled candidate set is a superset of the per-query set, so
+    the join stays exact.
+    """
+    import jax.numpy as jnp
+
+    b, m = qp.shape
+    nr_tiles = b // bm
+    home_c = jnp.clip(home, 0, m - 1)
+    if metric == "l2":
+        q2 = qp.astype(jnp.float32) ** 2
+        home_sq = jnp.take_along_axis(q2, home_c[:, None], axis=1)
+        denom = jnp.maximum(2.0 * pivd[home_c], 1e-30)
+        d_hp = (q2 - home_sq) / denom
+        alive = d_hp <= th_q[:, None]
+    else:
+        alive = jnp.ones((b, m), bool)
+    alive = alive.at[jnp.arange(b), home_c].set(True)
+    alive = alive & valid_q[:, None]
+
+    alive_t = alive.reshape(nr_tiles, bm, m).any(axis=1)
+    lo_q = jnp.where(alive, qp - th_q[:, None], jnp.inf)
+    hi_q = jnp.where(alive, qp + th_q[:, None], -jnp.inf)
+    lo_t = lo_q.reshape(nr_tiles, bm, m).min(axis=1)
+    hi_t = hi_q.reshape(nr_tiles, bm, m).max(axis=1)
+
+    overlap = (alive_t[:, None, :] & present[None, :, :]
+               & (sd_max[None, :, :] >= lo_t[:, None, :])
+               & (sd_min[None, :, :] <= hi_t[:, None, :]))
+    return overlap.any(axis=2)
+
+
+def compact_visits_jnp(visit):
+    """(nr_tiles, T) bool → prefix-compacted (schedule, counts) in jnp:
+    the `compact_visit_mask` lowering — segment-sum ranks (a cumulative
+    sum along the tile axis) plus a flat scatter, all static shapes.
+
+    Rows with zero visits get one fallback visit of tile 0 so every R
+    tile's output flush runs (the host builder's fallback rule). Padding
+    slots repeat the row's last valid entry, so the scalar-prefetched
+    block index never changes on dead steps and the Pallas pipeline
+    reuses the resident block instead of issuing a fresh DMA.
+    """
+    import jax.numpy as jnp
+
+    nr_tiles, t = visit.shape
+    empty = ~visit.any(axis=1)
+    visit = visit.at[:, 0].set(visit[:, 0] | empty)
+    counts = visit.sum(axis=1).astype(jnp.int32)
+    rank = jnp.cumsum(visit.astype(jnp.int32), axis=1) - 1
+    # flat scatter into one spare trash column for unvisited tiles
+    pos = jnp.where(visit, rank, t)
+    row = jnp.broadcast_to(jnp.arange(nr_tiles)[:, None], (nr_tiles, t))
+    tile = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None, :],
+                            (nr_tiles, t))
+    sched = jnp.zeros((nr_tiles, t + 1), jnp.int32)
+    sched = sched.at[row, pos].set(tile)[:, :t]
+    last = jnp.take_along_axis(sched, (counts - 1)[:, None], axis=1)
+    slot = jnp.arange(t, dtype=jnp.int32)[None, :]
+    sched = jnp.where(slot < counts[:, None], sched, last)
+    return sched, counts
 
 
 def schedule_for_group(

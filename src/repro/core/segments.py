@@ -126,6 +126,7 @@ class MutableIndex:
         self._n_buffer = 0
         self._version = 0
         self._live_cache = None
+        self._buffer_seg = None
         self.last_compact_s = 0.0
 
     @classmethod
@@ -206,6 +207,7 @@ class MutableIndex:
         rows = np.concatenate(self._buffer, axis=0)
         offset = int(self._buffer_ids[0][0])
         self._buffer, self._buffer_ids, self._n_buffer = [], [], 0
+        self._buffer_seg = None
         seg = Segment(build_index(rows, self.config), offset)
         self.segments.append(seg)
         self._version += 1
@@ -243,6 +245,10 @@ class MutableIndex:
         rows, old_ids = self.live_rows()
         self.segments = []
         self._buffer, self._buffer_ids, self._n_buffer = [], [], 0
+        # drop the ephemeral buffer-segment view: compact re-bases
+        # _next_id downward, so a later buffer could reproduce the cache
+        # key (_next_id, n_buffer) while holding different rows
+        self._buffer_seg = None
         self._tombstones.clear()
         self._tomb_sorted = None
         self._next_id = rows.shape[0]
@@ -255,6 +261,38 @@ class MutableIndex:
         return old_ids
 
     # ---- views
+
+    @property
+    def version(self) -> int:
+        """Monotonic mutation counter: bumps on every insert / seal /
+        delete / compact. Device-resident consumers (the megastep engine)
+        key their uploaded payload on it and re-upload only when it
+        moves — steady-state queries never re-ship the index."""
+        return self._version
+
+    def tombstones_sorted(self) -> np.ndarray:
+        """The tombstoned global ids as an ascending int64 array (the
+        liveness mask the megastep uploads is derived from this)."""
+        return self._tomb_array()
+
+    def segment_snapshot(self) -> list[tuple[SIndex, int]]:
+        """(index, id_offset) views of every live segment, *including*
+        the unsealed write buffer presented through an ephemeral delta
+        ``SIndex`` (phase 1 over the buffered rows only, cached until the
+        buffer changes, never mutating this index). This is the fan-out
+        set a single fused megastep call covers — the buffer stays
+        queryable without waiting for ``seal``.
+        """
+        out = [(seg.index, seg.id_offset) for seg in self.segments]
+        if self._n_buffer:
+            key = (self._next_id, self._n_buffer)
+            if self._buffer_seg is None or self._buffer_seg[0] != key:
+                rows = np.concatenate(self._buffer, axis=0)
+                offset = int(self._buffer_ids[0][0])
+                self._buffer_seg = (key, build_index(rows, self.config),
+                                    offset)
+            out.append((self._buffer_seg[1], self._buffer_seg[2]))
+        return out
 
     def live_rows(self) -> tuple[np.ndarray, np.ndarray]:
         """(rows, global ids) of all surviving rows, ascending by id —

@@ -2,13 +2,26 @@
 
 The build-once/query-many split (core.index) makes the R side cheap to
 re-plan, so R no longer has to exist up front: it can arrive in
-micro-batches of configurable size. Each batch plans (`plan_queries`,
-jitted assignment + bounds) and joins (`api.execute_join`) against the
-resident index, and its top-k rows land in a ``StreamJoinState`` that
-merges runs with the same odd-even sorted-run merge the Pallas kernels
-use (`kernels.sorted_merge.merge_sorted_runs`). Device memory is
-bounded by (batch, |replica set of batch|) — |R| ≫ VMEM/HBM streams
-through without ever materializing an |R|-sized plan.
+micro-batches of configurable size. Two per-batch execution paths share
+this engine:
+
+* **host-planned** (the reference oracle): each batch plans
+  (`plan_queries`, jitted assignment + bounds, host grouping) and joins
+  (`api.execute_join`) against the resident index, and its top-k rows
+  land in a ``StreamJoinState`` that merges runs with the same odd-even
+  sorted-run merge the Pallas kernels use
+  (`kernels.sorted_merge.merge_sorted_runs`).
+* **megastep** (``megastep=True``, L2 only): the whole per-batch path —
+  assignment, θ/LB bounds, visit-schedule build, the gather top-k and
+  the cross-segment merge — runs as *one jitted device pass*
+  (`core.megastep.MegastepEngine`). Ragged batch sizes are padded to
+  power-of-two buckets and the compiled step is cached per (bucket, k,
+  segment structure), so a repeating batch size re-plans nothing and
+  recompiles nothing. Bitwise-identical results to the host path.
+
+Either way device memory is bounded by the batch and the resident index
+— |R| ≫ VMEM/HBM streams through without ever materializing an
+|R|-sized plan.
 
 Semantics: every engine here is exact, and a query's result depends
 only on (query row, index) — the candidate supersets the bounds ship
@@ -137,17 +150,39 @@ class StreamJoinEngine:
 
     Holds nothing per-batch: the expensive S-side artifacts live in the
     index (packed pivot-sorted rows, T_S, ``pivd``), each ``join_batch``
-    call pays only jitted R assignment + θ/LB + the group joins.
+    call pays only jitted R assignment + θ/LB + the group joins — or,
+    with ``megastep`` enabled, one fused device pass that also folds the
+    schedule build and the cross-segment merge into the same jit
+    (`core.megastep`), bucketed so repeating ragged batch sizes reuse
+    the compiled step instead of re-padding and re-planning.
 
     ``index`` may be a build-once ``SIndex`` or a mutable segmented
     ``core.segments.MutableIndex`` — the latter fans each batch over all
-    live segments (base + deltas + write buffer) and folds the
-    per-segment sorted runs through the dedup merge.
+    live segments (base + deltas + write buffer); the host path folds
+    the per-segment sorted runs through the dedup merge, the megastep
+    carries the running top-k across segments in VMEM/scan state.
+
+    ``megastep``: ``True`` | ``False`` | ``"auto"`` — auto enables the
+    fused path when the metric supports it (L2); ``True`` raises on
+    unsupported configs rather than silently falling back.
     """
 
-    def __init__(self, index, config: Optional[JoinConfig] = None):
+    def __init__(self, index, config: Optional[JoinConfig] = None, *,
+                 megastep: object = False):
         self.index = index
         self.config = config or index.config
+        if megastep == "auto":
+            megastep = self.config.metric == "l2"
+        self._megastep = None
+        if megastep:
+            from .megastep import MegastepEngine
+            self._megastep = MegastepEngine(index, self.config)
+
+    @property
+    def megastep_engine(self):
+        """The fused-path driver when enabled (None on the host path) —
+        exposes the device-level `enqueue` / `join_batch_device` API."""
+        return self._megastep
 
     def join_batch(
         self, queries: np.ndarray, *, stats: Optional[JoinStats] = None,
@@ -160,6 +195,8 @@ class StreamJoinEngine:
         queries = np.ascontiguousarray(queries, np.float32)
         if stats is not None:
             stats.n_batches += 1
+        if self._megastep is not None:
+            return self._megastep.join_batch(queries, stats=stats)
         if isinstance(self.index, MutableIndex):
             return self.index.join_batch(queries, config=self.config,
                                          stats=stats)
@@ -186,6 +223,7 @@ def knn_join_batched(
     *,
     index=None,
     batch_size: int = 0,
+    megastep: object = False,
 ) -> JoinResult:
     """Streaming PGBJ join: R in micro-batches against a build-once index.
 
@@ -195,7 +233,9 @@ def knn_join_batched(
     segmented ``MutableIndex``) — S-side phase 1 never re-runs on
     pre-existing segments; otherwise the index is built here from ``s``
     (pivots sampled from S: the query set is not assumed to exist up
-    front).
+    front). ``megastep=True`` (or "auto") runs each batch through the
+    fused device-resident megastep instead of the host-planned path —
+    identical results, one jitted pass per batch.
 
     Exactness: equals one-shot ``knn_join`` against the same index for
     any batch split. Results are ordered by arrival: row ``j`` of the
@@ -228,7 +268,7 @@ def knn_join_batched(
         batch_size = r.shape[0] if isinstance(r, np.ndarray) else 1 << 62
     batch_size = max(1, batch_size)   # |R| = 0 must not zero the stride
 
-    engine = StreamJoinEngine(index, config)
+    engine = StreamJoinEngine(index, config, megastep=megastep)
     stats = JoinStats(n_s=index.n_s)
     if built_here:   # a reused index's S phase 1 was paid at build time
         stats.pivot_pairs_computed += index.n_s * index.n_pivots

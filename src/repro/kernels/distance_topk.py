@@ -18,6 +18,16 @@ Thm 2 evaluated at tile granularity — DESIGN.md §2.1) enter two ways:
   unchanged block index means the pipeline re-uses the resident VMEM
   block instead of issuing a new copy.
 
+  The optional ``alive`` row mask (float32, >0 = live) serves the fused
+  megastep (core.megastep): the schedule may concatenate the tile ranges
+  of *several* index segments, and the per-query running top-k then
+  carries across segment boundaries in VMEM scratch — one launch per
+  micro-batch instead of one per segment, with no per-segment (n, k)
+  runs round-tripping through HBM. Tombstoned rows and per-segment
+  padding rows arrive with ``alive == 0`` and are masked to +inf
+  *before* selection, so the flushed run is the exact top-k over live
+  rows only.
+
 VMEM budget per step (bm=128, bn=512, d≤128, k≤64, f32):
   R tile 64 KiB + S tile 256 KiB + dist tile 256 KiB + scratch 2·32 KiB
   + sort temporaries ≈ 1 MiB  — comfortably inside the ~16 MiB/core VMEM.
@@ -34,7 +44,8 @@ from .sorted_merge import merge_sorted_runs, next_pow2, tile_topk
 
 __all__ = [
     "distance_topk_kernel", "distance_topk_pallas",
-    "distance_topk_gather_kernel", "distance_topk_gather_pallas",
+    "distance_topk_gather_kernel", "distance_topk_gather_alive_kernel",
+    "distance_topk_gather_pallas",
 ]
 
 
@@ -175,6 +186,41 @@ def distance_topk_gather_kernel(
         out_i_ref[...] = scratch_i[...][:, :k]
 
 
+def distance_topk_gather_alive_kernel(
+    # scalar-prefetch refs, then tensor refs:
+    sched_ref, cnt_ref, r_ref, s_ref, alive_ref, out_d_ref, out_i_ref,
+    scratch_d, scratch_i,
+    *, k: int, kp: int, n_s: int, bn: int, max_visits: int,
+):
+    """The gather kernel with a per-row liveness mask — the megastep's
+    in-VMEM cross-segment scan step. ``alive_ref`` holds the scheduled
+    tile's (1, bn) float32 mask (tombstones and per-segment padding are
+    0); masked rows are +inf *before* the sorted-run fold, so the carried
+    VMEM run is always the exact top-k over live rows seen so far."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        scratch_d[...] = jnp.full_like(scratch_d, jnp.inf)
+        scratch_i[...] = jnp.full_like(scratch_i, -1)
+
+    @pl.when(j < cnt_ref[i])
+    def _compute():
+        tile = sched_ref[i, j]
+        d2 = _sq_dists(r_ref, s_ref)
+        gid = tile * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+        live = (alive_ref[...] > 0.0) & (gid < n_s)
+        d2 = jnp.where(live, d2, jnp.inf)
+        _merge_tile(scratch_d, scratch_i, d2,
+                    jnp.broadcast_to(gid, d2.shape), kp)
+
+    @pl.when(j == max_visits - 1)
+    def _flush():
+        out_d_ref[...] = jnp.sqrt(scratch_d[...][:, :k])
+        out_i_ref[...] = scratch_i[...][:, :k]
+
+
 def distance_topk_gather_pallas(
     r: jnp.ndarray,
     s: jnp.ndarray,
@@ -182,6 +228,7 @@ def distance_topk_gather_pallas(
     schedule: jnp.ndarray,
     counts: jnp.ndarray,
     *,
+    alive: jnp.ndarray | None = None,
     bm: int = 128,
     bn: int = 512,
     interpret: bool = False,
@@ -191,6 +238,10 @@ def distance_topk_gather_pallas(
     schedule: (nr_tiles, max_visits) int32 S-tile indices, rows padded by
               repeating the last valid entry (core.schedule.TileSchedule).
     counts:   (nr_tiles,) int32 — number of real entries per row.
+    alive:    optional (n_s,) float32 row-liveness mask (>0 = live). Used
+              by the megastep to mask tombstoned rows and per-segment
+              padding inside a concatenated multi-segment layout; rows
+              with ``alive == 0`` can never enter the top-k.
 
     Ids are row indices into ``s`` as laid out here; callers that sorted S
     for tile coherence translate back through their permutation.
@@ -210,16 +261,26 @@ def distance_topk_gather_pallas(
     r_pad = jnp.pad(r, ((0, nr_tiles * bm - n_r), (0, 0)))
     s_pad = jnp.pad(s, ((0, ns_tiles * bn - n_s), (0, 0)))
 
+    kern = (distance_topk_gather_kernel if alive is None
+            else distance_topk_gather_alive_kernel)
     kernel = functools.partial(
-        distance_topk_gather_kernel,
-        k=k, kp=kp, n_s=n_s, bn=bn, max_visits=max_visits)
+        kern, k=k, kp=kp, n_s=n_s, bn=bn, max_visits=max_visits)
+    in_specs = [
+        pl.BlockSpec((bm, d), lambda i, j, sched, cnt: (i, 0)),
+        pl.BlockSpec((bn, d), lambda i, j, sched, cnt: (sched[i, j], 0)),
+    ]
+    args = [schedule.astype(jnp.int32), counts.astype(jnp.int32),
+            r_pad, s_pad]
+    if alive is not None:
+        alive_pad = jnp.pad(alive.astype(jnp.float32),
+                            (0, ns_tiles * bn - n_s)).reshape(ns_tiles, bn)
+        in_specs.append(
+            pl.BlockSpec((1, bn), lambda i, j, sched, cnt: (sched[i, j], 0)))
+        args.append(alive_pad)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(nr_tiles, max_visits),
-        in_specs=[
-            pl.BlockSpec((bm, d), lambda i, j, sched, cnt: (i, 0)),
-            pl.BlockSpec((bn, d), lambda i, j, sched, cnt: (sched[i, j], 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bm, k), lambda i, j, sched, cnt: (i, 0)),
             pl.BlockSpec((bm, k), lambda i, j, sched, cnt: (i, 0)),
@@ -237,7 +298,7 @@ def distance_topk_gather_pallas(
             jax.ShapeDtypeStruct((nr_tiles * bm, k), jnp.int32),
         ],
         interpret=interpret,
-    )(schedule.astype(jnp.int32), counts.astype(jnp.int32), r_pad, s_pad)
+    )(*args)
     return out_d[:n_r], out_i[:n_r]
 
 

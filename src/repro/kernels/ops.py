@@ -48,13 +48,17 @@ def distance_topk(
     *, visit_mask: Optional[jnp.ndarray] = None,
     schedule: Optional[jnp.ndarray] = None,
     counts: Optional[jnp.ndarray] = None,
+    alive: Optional[jnp.ndarray] = None,
     bm: int = 128, bn: int = 512, impl: str = "auto",
 ):
     """k nearest rows of s per row of r → (dists ascending, ids int32).
 
     impl="gather" / "gather_interpret" run the pruned-schedule kernel and
     require ``schedule`` (nr_tiles, max_visits) + ``counts`` (nr_tiles,);
-    impl="gather_ref" is its jnp oracle. Other impls ignore them.
+    impl="gather_ref" is its jnp oracle. ``alive`` (optional (n_s,)
+    float32 row mask, >0 = live) masks tombstoned / padding rows on the
+    gather impls — the megastep's concatenated multi-segment layout.
+    Other impls ignore schedule/counts/alive.
     """
     impl = ("pallas" if use_pallas() else "ref") if impl == "auto" else impl
     if impl == "ref":
@@ -64,9 +68,9 @@ def distance_topk(
             raise ValueError(f"impl={impl!r} requires schedule and counts")
         if impl == "gather_ref":
             return ref.distance_topk_gather_ref(
-                r, s, k, schedule, counts, bm=bm, bn=bn)
+                r, s, k, schedule, counts, bm=bm, bn=bn, alive=alive)
         return distance_topk_gather_pallas(
-            r, s, k, schedule, counts, bm=bm, bn=bn,
+            r, s, k, schedule, counts, alive=alive, bm=bm, bn=bn,
             interpret=impl == "gather_interpret")
     return distance_topk_pallas(
         r, s, k, visit_mask=visit_mask, bm=bm, bn=bn,

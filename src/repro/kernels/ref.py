@@ -25,12 +25,15 @@ def distance_topk_ref(r: jnp.ndarray, s: jnp.ndarray, k: int):
 def distance_topk_gather_ref(
     r: jnp.ndarray, s: jnp.ndarray, k: int,
     schedule: jnp.ndarray, counts: jnp.ndarray, *, bm: int, bn: int,
+    alive: jnp.ndarray | None = None,
 ):
     """Oracle for the pruned-schedule kernel: mask unscheduled tiles.
 
     Computes the dense distance matrix, then restricts each R tile's
     candidate columns to the S tiles its schedule row names — the same
-    candidate set ``distance_topk_gather_pallas`` ever sees.
+    candidate set ``distance_topk_gather_pallas`` ever sees. ``alive``
+    (optional (n_s,) float32, >0 = live) additionally masks tombstoned /
+    per-segment-padding rows, mirroring the kernel's megastep mask.
     """
     r = r.astype(jnp.float32)
     s = s.astype(jnp.float32)
@@ -44,6 +47,8 @@ def distance_topk_gather_ref(
     row_tile = jnp.arange(n_r) // bm
     col_tile = jnp.arange(n_s) // bn
     mask = allowed[row_tile][:, col_tile]                        # (n_r, n_s)
+    if alive is not None:
+        mask = mask & (alive.astype(jnp.float32) > 0.0)[None, :]
     d2 = (jnp.sum(r * r, 1)[:, None] + jnp.sum(s * s, 1)[None, :]
           - 2.0 * (r @ s.T))
     d2 = jnp.where(mask, jnp.maximum(d2, 0.0), jnp.inf)

@@ -28,6 +28,14 @@ distances. The tuple form is how wide ids travel through the network —
 jnp arrays are int32 under default JAX config, so a 64-bit row id is
 carried as a (hi, lo) int32 pair (see ``core.stream.StreamJoinState``)
 instead of being silently truncated.
+
+Consumers: the Pallas tile kernels (`kernels.distance_topk`) fold each
+tile through ``tile_topk`` + ``merge_sorted_runs`` in VMEM scratch; the
+fused megastep (`core.megastep`) carries the same sorted run across a
+*concatenated multi-segment* schedule — one scan/launch instead of one
+per segment — and dedup-merges its carried device stream state with
+``merge_sorted_runs_unique``; the host ``StreamJoinState`` uses the same
+unique merge for revisited query slots.
 """
 from __future__ import annotations
 

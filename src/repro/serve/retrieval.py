@@ -15,6 +15,15 @@ without touching any segment. ``compact()`` folds segments + tombstones
 back into one base between decode steps and remaps the row-aligned
 ``keys``/``values`` tables to the re-based id space.
 
+Steady-state retrieval runs the **fused megastep** (`core.megastep`):
+the datastore keeps one ``StreamJoinEngine(megastep=...)`` per k, whose
+device-resident index payload and compiled step persist across decode
+steps — each batch is one upload, one jitted
+assign→bounds→schedule→gather-top-k→merge pass over all live segments,
+one fetch. No per-batch host planning: the old per-decode
+``plan_queries`` round-trip exists only on the (still available)
+host-planned oracle path.
+
 p(token) = (1−λ) p_LM + λ softmax(−d²/τ) aggregated over retrieved
 neighbors (Khandelwal et al. 2020), with PGBJ supplying the neighbors.
 Both neighbor paths (the PGBJ join and the raw `distance_topk` kernel)
@@ -46,6 +55,9 @@ class Datastore:
     values: np.ndarray     # (N_alloc,) int32 token ids, aligned to keys
     index: MutableIndex    # segmented mutable S side (base + deltas)
     config: JoinConfig
+    # one resident engine per k: the megastep's uploaded index payload
+    # and compiled step live here and survive across decode steps
+    _engines: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @classmethod
     def build(cls, keys, values, *, k: int = 8, n_pivots: int = 256,
@@ -97,11 +109,19 @@ class Datastore:
         return old_ids
 
     def engine(self, k: Optional[int] = None) -> StreamJoinEngine:
-        """A streaming engine over the resident segmented index
-        (optionally with a per-caller k ≤ the live row count)."""
-        cfg = self.config if k is None or k == self.config.k \
-            else dataclasses.replace(self.config, k=k)
-        return StreamJoinEngine(self.index, cfg)
+        """The resident streaming engine for ``k`` (≤ the live row
+        count), created once and cached: repeat decode steps reuse the
+        megastep's device-resident payload and compiled step instead of
+        re-padding and re-planning. Mutations are picked up through the
+        index version — no engine invalidation needed."""
+        kk = self.config.k if k is None else int(k)
+        eng = self._engines.get(kk)
+        if eng is None:
+            cfg = self.config if kk == self.config.k \
+                else dataclasses.replace(self.config, k=kk)
+            eng = StreamJoinEngine(self.index, cfg, megastep="auto")
+            self._engines[kk] = eng
+        return eng
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,8 +138,10 @@ def knn_logits(queries: np.ndarray, store: Datastore, kcfg: KnnLMConfig,
                vocab: int, *, use_kernel: bool = False) -> np.ndarray:
     """Retrieval distribution per query, (B, vocab) log-space.
 
-    ``use_kernel=False`` (default) plans + joins the batch against the
-    datastore's segmented index (the PGBJ serve path);
+    ``use_kernel=False`` (default) runs the batch through the
+    datastore's resident engine — the fused megastep over the segmented
+    index: one jitted assign→bounds→schedule→gather-top-k→merge pass,
+    no per-batch host planning (the PGBJ serve path);
     ``use_kernel=True`` runs the brute-force `distance_topk` kernel over
     the store's live rows. Both return true distances, normalized to
     comparable space (`to_cmp`: squared for L2) before

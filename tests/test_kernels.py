@@ -108,6 +108,40 @@ def test_distance_topk_gather_pruned_schedule(nr, ns, dim, k, seed):
     assert (np.asarray(i) == np.asarray(ri))[fin].mean() > 0.999
 
 
+@pytest.mark.parametrize("seed,dead_frac", [(0, 0.2), (1, 0.6), (2, 0.95)])
+def test_distance_topk_gather_alive_mask(seed, dead_frac):
+    """The megastep's liveness mask: rows with alive == 0 (tombstones,
+    per-segment padding in a concatenated layout) can never enter the
+    top-k, and the kernel (interpret) matches the masked jnp oracle —
+    including when live rows run short and (-1, +inf) slots appear."""
+    rng = np.random.default_rng(seed)
+    nr, ns, dim, k = 64, 320, 5, 8
+    r = jnp.asarray(rng.normal(size=(nr, dim)).astype(np.float32))
+    s = jnp.asarray(rng.normal(size=(ns, dim)).astype(np.float32))
+    alive_np = (rng.random(ns) >= dead_frac).astype(np.float32)
+    alive = jnp.asarray(alive_np)
+    bm, bn = 32, 64
+    nr_t, ns_t = -(-nr // bm), -(-ns // bn)
+    sched = jnp.asarray(np.tile(np.arange(ns_t, dtype=np.int32), (nr_t, 1)))
+    cnt = jnp.full((nr_t,), ns_t, jnp.int32)
+    d, i = ops.distance_topk(r, s, k, schedule=sched, counts=cnt,
+                             alive=alive, bm=bm, bn=bn,
+                             impl="gather_interpret")
+    rd, ri = ops.distance_topk(r, s, k, schedule=sched, counts=cnt,
+                               alive=alive, bm=bm, bn=bn, impl="gather_ref")
+    d, i, rd, ri = map(np.asarray, (d, i, rd, ri))
+    np.testing.assert_allclose(d, rd, atol=1e-4)
+    fin = np.isfinite(rd)
+    assert (i == ri)[fin].mean() > 0.999
+    # no dead row ever surfaces; short live sets pad with -1/+inf
+    dead_ids = np.where(alive_np == 0)[0]
+    assert not np.isin(i[fin], dead_ids).any()
+    n_live = int(alive_np.sum())
+    if n_live < k:
+        assert (i[:, n_live:] == -1).all() and not np.isfinite(
+            d[:, n_live:]).any()
+
+
 def test_distance_topk_gather_dtypes():
     rng = np.random.default_rng(3)
     r = jnp.asarray(rng.normal(size=(48, 8))).astype(jnp.bfloat16)
