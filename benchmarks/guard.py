@@ -14,6 +14,13 @@ claims rest on:
 * ``kernel_megastep_vs_hostplanned`` / ``device_steady_state_syncs`` —
   hard invariant: the device-level steady state performs **zero** host
   syncs, any nonzero value fails regardless of the baseline.
+* ``kernel_quant_coarse_vs_fp32`` / ``bytes_per_row_int8`` and
+  ``coarse_speedup`` — the quantized tier's memory and coarse-pass
+  contracts (repro.quant);
+* ``kernel_quant_coarse_vs_fp32`` / ``bitwise_equal`` — hard invariant:
+  the quantized path must be bitwise the fp32 oracle's output; anything
+  but 1.0 fails regardless of the baseline (the bench itself also
+  raises on divergence, this guards a silently-edited record).
 
 Baselines: ``BENCH_kernels.json`` records the full-size sweep;
 ``BENCH_kernels_fast.json`` records the ``--fast`` (CI-sized) sweep —
@@ -36,8 +43,14 @@ CHECKS = [
     ("kernel_streaming_vs_oneshot", "overhead_frac", "lower", 0.10),
     ("kernel_index_build_amortization", "plan_frac_of_batch", "lower", 0.05),
     ("kernel_megastep_vs_hostplanned", "speedup", "higher", 2.0),
+    # quantized tier: resident bytes/row must not bloat (>2× = someone
+    # fattened the codes/metadata), the coarse pass must not collapse
+    ("kernel_quant_coarse_vs_fp32", "bytes_per_row_int8", "lower", 1.0),
+    ("kernel_quant_coarse_vs_fp32", "coarse_speedup", "higher", 0.05),
 ]
 HARD_ZERO = [("kernel_megastep_vs_hostplanned", "device_steady_state_syncs")]
+# metrics that must be exactly 1.0 in the current sweep, baseline or not
+HARD_ONE = [("kernel_quant_coarse_vs_fp32", "bitwise_equal")]
 
 
 def _rows(records: list, bench: str) -> list:
@@ -84,6 +97,16 @@ def check(baseline: list, current: list) -> list[str]:
                     f"{bench}.{metric} = {row[metric]} — the megastep "
                     f"steady state must perform zero host syncs; something "
                     f"reintroduced a device→host round-trip.")
+    for bench, metric in HARD_ONE:
+        for row in _rows(current, bench):
+            # a MISSING key fails too: this is exactly the
+            # silently-edited-record case the invariant exists for
+            if float(row.get(metric, 0.0)) != 1.0:
+                failures.append(
+                    f"{bench}.{metric} = {row.get(metric, '<missing>')} — "
+                    f"the quantized path's contract is bitwise equality "
+                    f"with the fp32 oracle; an inexact (or unreported) "
+                    f"result is a correctness bug, not a perf regression.")
     return failures
 
 

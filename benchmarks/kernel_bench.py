@@ -400,6 +400,91 @@ def megastep_vs_hostplanned_bench(n: int = 20000,
     ]
 
 
+def quant_coarse_vs_fp32_bench(n: int = 20000, batches: int = 8) -> List[Row]:
+    """Quantized tier (repro.quant) vs the fp32 megastep on the same
+    index: resident bytes/row (the 4× claim `SIndex.nbytes_resident`
+    reports), coarse-pass and end-to-end per-batch latency, shortlist
+    hit-rate, certification rate — and an embedded **bitwise** equality
+    gate (the quantized tier's contract is exactness, so the bench
+    fails CI outright on any divergence; no tolerance).
+
+    dim=32: wide enough that codes dominate the ε/scale metadata (the
+    bytes_ratio acceptance floor is 3.5×). On CPU the int8 contraction
+    has no vectorized XLA kernel, so ``coarse_speedup`` here benchmarks
+    the *reference* (likely < 1); on TPU the same pass is the one that
+    moves 4× fewer bytes through the MXU.
+    """
+    from repro.core import JoinConfig, JoinStats, StreamJoinEngine, \
+        build_index
+
+    n_s, dim, k = n, 32, 10
+    batch = max(64, n // 40)
+    s = _clustered(n_s, dim, seed=0)
+    cfg = JoinConfig(k=k, n_pivots=64, n_groups=8, seed=3)
+    index = build_index(s, cfg)
+    fp_eng = StreamJoinEngine(index, cfg, megastep=True)
+    q_eng = StreamJoinEngine(index, cfg, quantized=True)
+    qeng = q_eng.megastep_engine                 # the QuantMegastepEngine
+    qs = [_clustered(batch, dim, seed=10 + i) for i in range(batches)]
+
+    fd, fi = fp_eng.join_batch(qs[0])            # warm both engines
+    stats = JoinStats()
+    qd, qi = q_eng.join_batch(qs[0], stats=stats)
+    if not (np.array_equal(qd, fd) and np.array_equal(qi, fi)):
+        raise AssertionError(
+            "quantized path diverged bitwise from the fp32 megastep")
+
+    # shortlist hit-rate: fraction of the true top-k already inside the
+    # coarse int8 shortlist (before the exact re-rank / fallback)
+    _, _, short_ids = qeng.coarse_shortlist(qs[0])
+    hits = np.fromiter(
+        (np.isin(fi[j], short_ids[j]).mean() for j in range(batch)),
+        np.float64, batch)
+
+    # the equality gate covers EVERY batch the sweep touches, not just
+    # the warm-up — a regression that corrupts results only after the
+    # first batch must not slip past the HARD_ONE guard
+    for q in qs[1:]:
+        fd2, fi2 = fp_eng.join_batch(q)
+        qd2, qi2 = q_eng.join_batch(q)
+        if not (np.array_equal(qd2, fd2) and np.array_equal(qi2, fi2)):
+            raise AssertionError(
+                "quantized path diverged bitwise from the fp32 megastep")
+
+    t0 = time.perf_counter()
+    for q in qs:
+        fp_eng.join_batch(q)
+    t_fp = (time.perf_counter() - t0) / batches
+    t0 = time.perf_counter()
+    for q in qs:
+        qeng.coarse_shortlist(q)
+    t_coarse = (time.perf_counter() - t0) / batches
+    st_all = JoinStats()
+    t0 = time.perf_counter()
+    for q in qs:
+        q_eng.join_batch(q, stats=st_all)
+    t_quant = (time.perf_counter() - t0) / batches
+
+    bpr_fp32 = index.nbytes_resident(quantized=False) / n_s
+    bpr_int8 = index.nbytes_resident(quantized=True) / n_s
+    return [
+        Row("kernel_quant_coarse_vs_fp32",
+            f"ns={n_s}x{dim},k={k},batch={batch},mp={qeng.mp}", t_quant,
+            {"bytes_per_row_fp32": bpr_fp32,
+             "bytes_per_row_int8": bpr_int8,
+             "bytes_ratio": bpr_fp32 / bpr_int8,
+             "fp32_batch_s": t_fp,
+             "quant_coarse_s": t_coarse,
+             "quant_batch_s": t_quant,
+             "coarse_speedup": t_fp / t_coarse,
+             "endtoend_speedup": t_fp / t_quant,
+             "shortlist_hit_rate": float(hits.mean()),
+             "certified_frac":
+                 1.0 - st_all.n_quant_fallback / (batches * batch),
+             "bitwise_equal": 1.0}),
+    ]
+
+
 def _pack_send_buffers_loop(rows, aux, dest, src_of_row, n_src, n_dst, cap):
     """The seed's per-row packing loop, kept as the microbench baseline."""
     nbuf = {k: np.zeros((n_src, n_dst, cap) + v.shape[1:], v.dtype)
@@ -456,4 +541,5 @@ def pack_send_buffers_bench(n: int = 100_000) -> List[Row]:
 ALL = [distance_topk_bench, distance_topk_gather_bench,
        index_build_vs_batch_plan_bench, streaming_vs_oneshot_bench,
        megastep_vs_hostplanned_bench, mutable_index_bench,
+       quant_coarse_vs_fp32_bench,
        pack_send_buffers_bench, assign_bench, flash_attention_bench]

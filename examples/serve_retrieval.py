@@ -40,7 +40,9 @@ def main():
     keys = np.asarray(hs[:, :-1].reshape(-1, cfg.vocab))[:, :64]  # (N, 64)
     vals = corpus[:, 1:].reshape(-1)
     # S-side phase 1 runs once here; each decode step's hidden-state batch
-    # is planned fresh against the resident index (no warmup queries)
+    # is planned fresh against the resident index (no warmup queries).
+    # quantized=True would serve the same bits from an int8-resident
+    # index at ~4x less device memory (repro.quant)
     store = Datastore.build(keys, vals, k=8, n_pivots=64, n_groups=4)
     kcfg = KnnLMConfig(lam=0.3, tau=100.0, k=8)
 

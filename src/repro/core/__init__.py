@@ -9,7 +9,8 @@ from .bounds import (
 from .grouping import (
     geometric_grouping, greedy_grouping, group_partitions,
     replication_count_exact, replication_count_partitions)
-from .index import SIndex, QueryPlan, build_index, plan_queries
+from .index import (
+    SIndex, QueryPlan, build_index, plan_queries, as_float32_rows)
 from .api import knn_join, plan_join, execute_join, JoinPlan
 from .stream import StreamJoinEngine, StreamJoinState, knn_join_batched
 from .segments import MutableIndex, Segment
@@ -29,6 +30,7 @@ __all__ = [
     "geometric_grouping", "greedy_grouping", "group_partitions",
     "replication_count_exact", "replication_count_partitions",
     "SIndex", "QueryPlan", "build_index", "plan_queries",
+    "as_float32_rows",
     "knn_join", "plan_join", "execute_join", "JoinPlan",
     "StreamJoinEngine", "StreamJoinState", "knn_join_batched",
     "MutableIndex", "Segment", "MegastepEngine",

@@ -164,6 +164,7 @@ def knn_join(
     plan: Optional[JoinPlan] = None,
     index=None,
     megastep: bool = False,
+    quantized: Optional[bool] = None,
 ) -> JoinResult:
     """PGBJ kNN join: for every row of ``r``, the k nearest rows of ``s``.
 
@@ -183,6 +184,13 @@ def knn_join(
     one-shot form builds a fresh engine per call; streaming / serving
     callers should hold a ``StreamJoinEngine(megastep=True)`` so the
     uploaded index payload and the compiled step persist across batches.
+
+    ``quantized=True`` (default: on when ``config.quantize != "none"``)
+    runs the two-tier quantized engine (`repro.quant`, L2 only): int8
+    coarse scan over the index's error-bounded codes, exact fp32
+    re-rank of a k+slack shortlist — bitwise the oracle's result with a
+    ~4× smaller device-resident index. Implies the megastep-style fused
+    planner; like it, a one-shot call builds a fresh engine per call.
     """
     from .segments import MutableIndex
 
@@ -193,7 +201,34 @@ def knn_join(
     config = config or JoinConfig(k=k or 10)
     if k is not None and k != config.k:
         config = dataclasses.replace(config, k=k)
+    if quantized is None:
+        quantized = config.quantize != "none"
     r = np.ascontiguousarray(r, np.float32)
+    if quantized:
+        if plan is not None:
+            raise ValueError(
+                "quantized=True plans on device and cannot reuse plan=; "
+                "pass index= instead")
+        from repro.quant.engine import QuantMegastepEngine
+
+        built_here = index is None
+        if index is None:
+            if s is None:
+                raise ValueError("knn_join needs s= or a prebuilt index")
+            index = build_index(s, config, pivot_data=r)
+            s = None
+        if s is not None and s.shape[0] != index.n_s:
+            raise ValueError(
+                f"s has {s.shape[0]} rows but the index holds "
+                f"{index.n_s}; results would index the wrong dataset")
+        if config.k > index.n_s:
+            raise ValueError(f"k={config.k} > |S|={index.n_s}")
+        stats = JoinStats(n_r=r.shape[0], n_s=index.n_s)
+        if built_here:            # always a plain SIndex from build_index
+            stats.pivot_pairs_computed += index.n_s * index.n_pivots
+        out_d, out_i = QuantMegastepEngine(index, config).join_batch(
+            r, stats=stats)
+        return JoinResult(indices=out_i, distances=out_d, stats=stats)
     if isinstance(index, MutableIndex):
         if s is not None and s.shape[0] != index.n_s:
             raise ValueError(

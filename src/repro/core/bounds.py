@@ -30,7 +30,29 @@ __all__ = [
     "group_lower_bounds",
     "hyperplane_distances",
     "ring_bounds",
+    "pad_theta",
 ]
+
+
+def pad_theta(th):
+    """θ with a few-ulp safety margin, for *pruning comparisons only*.
+
+    The quantities compared against θ (per-batch |q, p| distances, ring
+    bounds, hyperplane distances) come out of different float32 graphs
+    than θ itself — a centered per-batch gemm on one side, the planner's
+    jitted θ reduction on the other. In real arithmetic the paper's
+    prune rules are exact at equality, but when true neighbors sit at
+    distance *exactly* θ (e.g. ≥ k rows duplicated at a pivot make the
+    Thm-3 bound tight), a one-ulp discrepancy between two computations
+    of the same real quantity can prune a true neighbor. Comparing
+    against a θ padded by ~30 ulp relative + a tiny absolute term keeps
+    every prune sound — a looser θ only widens the candidate superset —
+    at negligible pruning-power cost. Works on numpy and jnp arrays;
+    ±inf are fixed points. Regression: tests/test_quant.py's
+    duplicate-row cases, which fail without the pad on singleton
+    batches.
+    """
+    return th * np.float32(1.000004) + np.float32(1e-6)
 
 
 def pivot_distance_matrix(pivots: np.ndarray, metric: str = "l2"
@@ -104,7 +126,11 @@ def _theta_and_lb_jit(pivd, knn, u_r, occupied, *, k: int):
     flat = ub.reshape(pivd.shape[0], -1)
     kth = -jax.lax.top_k(-flat, k)[0][:, -1]          # k-th smallest
     theta = jnp.where(occupied, kth + u_r, -jnp.inf)
-    lb = pivd.T - u_r[None, :] - theta[None, :]
+    # LB is derived from the ulp-padded θ (pad_theta): the shipping test
+    # |s, p_j| >= LB compares the phase-1 assign graph against this one,
+    # and a neighbor at exactly LB must ship — a slightly smaller LB
+    # only widens the replica superset
+    lb = pivd.T - u_r[None, :] - pad_theta(theta)[None, :]
     lb = jnp.where(jnp.isfinite(theta)[None, :], lb, jnp.inf)
     return theta, jnp.maximum(lb, 0.0)
 
@@ -130,9 +156,12 @@ def replication_lower_bounds(
     """LB(P_j^S, P_i^R) matrix of Corollary 2 / Algorithm 2, shape (M_s, M_r).
 
     s ∈ P_j^S must be shipped to partition i iff |s, p_j| >= LB[j, i].
-    Empty R-partitions get LB = +inf (never ship).
+    Empty R-partitions get LB = +inf (never ship). Derived from the
+    ulp-padded θ (`pad_theta`, mirroring `_theta_and_lb_jit`): a
+    neighbor sitting at exactly LB must survive the fp discrepancy
+    between the assign graph's |s, p_j| and this bound.
     """
-    lb = pivd.T - t_r.upper[None, :] - theta[None, :]     # (M_s, M_r)
+    lb = pivd.T - t_r.upper[None, :] - pad_theta(theta)[None, :]
     lb = np.where(np.isfinite(theta)[None, :], lb, np.inf)
     return np.maximum(lb, 0.0).astype(np.float32)
 

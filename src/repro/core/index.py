@@ -41,7 +41,28 @@ from .partition import assign_and_summarize, assign_to_pivots, build_summary
 from .pivots import select_pivots
 from .types import JoinConfig, SummaryTable
 
-__all__ = ["SIndex", "QueryPlan", "build_index", "plan_queries"]
+__all__ = ["SIndex", "QueryPlan", "build_index", "plan_queries",
+           "as_float32_rows"]
+
+
+def as_float32_rows(x, *, what: str = "rows") -> np.ndarray:
+    """Boundary cast for model-emitted hidden states.
+
+    Serving models emit bfloat16/float16 activations (see
+    `launch/serve.py`); the join engines are float32 end to end. This is
+    the single place the cast happens: bf16/f16 (including jax arrays —
+    ml_dtypes registers the numpy casts) and f64 become C-contiguous
+    float32 in **one** ``astype`` — never a silent float64 round-trip —
+    and non-float dtypes are rejected instead of being coerced.
+    """
+    x = np.asarray(x)
+    if x.dtype == np.float32:
+        return np.ascontiguousarray(x)
+    if x.dtype.name not in ("float64", "float16", "bfloat16"):
+        raise TypeError(
+            f"{what} must be floating point (float32/float16/bfloat16), "
+            f"got dtype {x.dtype}")
+    return np.ascontiguousarray(x.astype(np.float32))
 
 
 @dataclasses.dataclass
@@ -70,6 +91,8 @@ class SIndex:
     _device_rows: object = dataclasses.field(
         default=None, repr=False, compare=False)
     _tile_stats: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    _quant: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
 
     @property
@@ -104,6 +127,36 @@ class SIndex:
             self._tile_stats[bn] = segment_tile_stats(
                 self.s_part_sorted, self.s_dist_sorted, self.n_pivots, bn)
         return self._tile_stats[bn]
+
+    def ensure_quant(self, bn: Optional[int] = None):
+        """The packed rows' int8 representation at tile size ``bn``
+        (default ``config.tile_s``): per-tile symmetric codes + scales +
+        per-row reconstruction-error bounds ε (`repro.quant.quantize`).
+        Built lazily on first use, cached for the index's lifetime —
+        segments are immutable, so seal/compact produce fresh indexes
+        and thereby fresh quantizations (the invalidation story)."""
+        bn = int(self.config.tile_s if bn is None else bn)
+        if bn not in self._quant:
+            from repro.quant.quantize import quantize_rows
+            self._quant[bn] = quantize_rows(self.s_sorted, bn)
+        return self._quant[bn]
+
+    def nbytes_resident(self, *, quantized: Optional[bool] = None) -> int:
+        """Device-resident bytes of the index's **row payload**: the
+        fp32 packed rows, or — quantized — the int8 codes + per-tile
+        scales + per-row ε bounds. Mode-independent per-row metadata
+        (global ids, liveness masks) is excluded: it is identical in
+        both tiers, and this accessor exists to report what quantization
+        buys (benchmarks report it as bytes/row). The default mode
+        follows ``config.quantize`` alone — a lazily-built quantization
+        (an explicit ``quantized=True`` query against an unquantized
+        config) never flips what the bare call reports, and a
+        ``MutableIndex`` sum stays single-mode across its segments."""
+        if quantized is None:
+            quantized = self.config.quantize != "none"
+        if not quantized:
+            return int(self.s_sorted.nbytes)
+        return int(self.ensure_quant().nbytes())
 
     def replica_mask_sorted(self, lb_group: np.ndarray, g: int) -> np.ndarray:
         """Theorem 6 membership over the *sorted* row layout: which packed
@@ -151,6 +204,8 @@ def build_index(
     *,
     pivot_data: Optional[np.ndarray] = None,
     pivots: Optional[np.ndarray] = None,
+    pivot_strategy: Optional[str] = None,
+    quantize: Optional[str] = None,
 ) -> SIndex:
     """S-side phase 1, once: pivot selection, Voronoi assignment, T_S,
     and the pivot-sorted row packing.
@@ -161,9 +216,22 @@ def build_index(
     pruning rate changes). The one-shot ``knn_join`` passes its R to
     reproduce the paper's preprocessing exactly. ``pivots`` overrides
     selection entirely (e.g. pivots recovered from a checkpoint).
+
+    ``pivot_strategy`` overrides the config's §4.1 selection strategy
+    ("random" | "farthest" | "kmeans") without hand-building a config.
+    ``quantize="int8"`` additionally attaches the packed rows' int8
+    representation (codes + scales + per-row ε, `repro.quant`) and
+    stamps the mode into the index's config, so a ``MutableIndex``
+    holding this index rebuilds the quantization on every seal/compact.
+    ``s`` may arrive as bfloat16/float16 hidden states — cast once here
+    (`as_float32_rows`), never silently widened to float64.
     """
     config = config or JoinConfig()
-    s = np.ascontiguousarray(s, np.float32)
+    if pivot_strategy is not None and pivot_strategy != config.pivot_strategy:
+        config = dataclasses.replace(config, pivot_strategy=pivot_strategy)
+    if quantize is not None and quantize != config.quantize:
+        config = dataclasses.replace(config, quantize=quantize)
+    s = as_float32_rows(s, what="S rows")
     if pivots is None:
         src = s if pivot_data is None else np.asarray(pivot_data)
         m = min(config.n_pivots, src.shape[0])
@@ -182,7 +250,7 @@ def build_index(
     order = np.lexsort((s_dist, s_part))
     inv = np.empty_like(order)
     inv[order] = np.arange(order.shape[0])
-    return SIndex(
+    index = SIndex(
         config=config, pivots=pivots, pivd=pivd,
         s_part=s_part, s_dist=s_dist, t_s=t_s,
         s_order=order,
@@ -191,6 +259,9 @@ def build_index(
         s_dist_sorted=np.ascontiguousarray(s_dist[order].astype(np.float32)),
         s_ids_sorted=order.astype(np.int64),
         s_inv=inv)
+    if config.quantize == "int8":
+        index.ensure_quant(config.tile_s)
+    return index
 
 
 def plan_queries(

@@ -33,6 +33,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from .bounds import pad_theta
 from .metrics import cmp_dist, from_cmp
 from .types import JoinStats
 
@@ -273,19 +274,20 @@ def join_group_pruned(
             # Corollary 1 per query: d(q, HP(p_i, p_j)) > θ ⇒ skip partition
             # (the generalized-hyperplane formula Thm 1 is Euclidean-only;
             # for L1/L∞ only the metric-generic ring test applies)
+            thp = pad_theta(th)      # ulp-robust at exact-θ neighbors
             if j == pi or metric != "l2":
                 alive = np.ones((q.shape[0],), bool)
             else:
                 denom = 2.0 * pivd[pi, j]
                 d_hp = (qp[:, jj] ** 2 - d_home ** 2) / max(denom, 1e-30)
-                alive = d_hp <= th
+                alive = d_hp <= thp
             if not alive.any():
                 if stats is not None:
                     stats.tiles_total += int(np.ceil((hi_j - lo_j) / tile_s))
                 continue
             # Theorem 2 interval for this partition
-            ring_lo = np.maximum(t_s_lower[j], qp[:, jj] - th)
-            ring_hi = np.minimum(t_s_upper[j], qp[:, jj] + th)
+            ring_lo = np.maximum(t_s_lower[j], qp[:, jj] - thp)
+            ring_hi = np.minimum(t_s_upper[j], qp[:, jj] + thp)
             for slo in range(lo_j, hi_j, tile_s):
                 shi = min(slo + tile_s, hi_j)
                 if stats is not None:
@@ -306,8 +308,9 @@ def join_group_pruned(
                 # θ tightens between tiles (block analogue of lines 22-24)
                 kth = from_cmp(bd[:, k - 1], metric)
                 th = np.minimum(th, kth)
-                ring_lo = np.maximum(t_s_lower[j], qp[:, jj] - th)
-                ring_hi = np.minimum(t_s_upper[j], qp[:, jj] + th)
+                thp = pad_theta(th)
+                ring_lo = np.maximum(t_s_lower[j], qp[:, jj] - thp)
+                ring_hi = np.minimum(t_s_upper[j], qp[:, jj] + thp)
         out_d[q_sel] = from_cmp(bd, metric)
         out_i[q_sel] = bi
     return out_d, out_i

@@ -72,37 +72,25 @@ def _next_pow2(n: int) -> int:
 # the jitted megastep
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("k", "bm", "bn", "metric", "dim", "n_finite_total",
-                     "seg_meta", "primary", "impl"))
-def _megastep(q, n_valid, dead_total, segs, tiles, state, *,
-              k: int, bm: int, bn: int, metric: str, dim: int,
-              n_finite_total: int, seg_meta: tuple, primary: int,
-              impl: str):
-    """assign → bounds → schedule → gather-top-k → merge, one trace.
+def _assign_bounds_schedule(q, n_valid, dead_total, segs, center, *,
+                            k: int, bm: int, metric: str,
+                            n_finite_total: int, seg_meta: tuple,
+                            primary: int):
+    """Stages 1–3 of the megastep (assign → union θ → compacted tile
+    schedule), shared — called inside a jit — by the fp32 megastep and
+    the quantized tier's coarse pass (`repro.quant.engine`), so both
+    consume the identical schedule/θ graph.
 
-    ``q`` (B, dim) bucket-padded queries; ``n_valid`` traced scalar;
-    ``dead_total`` traced tombstone count; ``segs`` a tuple of per-segment
-    device dicts; ``tiles`` the concatenated device S-side; ``state`` an
-    optional carried (d, id_hi, id_lo) device run to dedup-merge into.
-    ``seg_meta`` is the static per-segment (M, kk, ns_tiles) signature —
-    part of the jit cache key, so a changed segment structure retraces
-    while steady-state batches hit the cache.
+    Returns ``(qs, qcs, valid_s, perm, inv, th_q, sched, cnt)``: the
+    home-partition-sorted queries (raw and center-relative), their
+    validity mask, the sort permutation and its inverse, the per-query
+    θ (−inf on padding rows), and the compacted concatenated visit
+    schedule with its per-R-tile counts.
     """
-    global _TRACE_COUNT
-    _TRACE_COUNT += 1          # runs at trace time only == jit cache miss
-
     import jax.numpy as jnp
 
-    from repro.kernels.sorted_merge import merge_sorted_runs, \
-        merge_sorted_runs_unique, next_pow2
-
     b = q.shape[0]
-    nr_tiles = b // bm
-    kp = next_pow2(k)
     valid_q = jnp.arange(b) < n_valid
-    center = tiles["center"]
     qc = q - center[None, :]
 
     # ---- 1. assignment against every segment's pivots (shared with the
@@ -160,6 +148,42 @@ def _megastep(q, n_valid, dead_total, segs, tiles, state, *,
                              bm=bm, metric=metric)
               for g in range(len(seg_meta))]
     sched, cnt = compact_visits_jnp(jnp.concatenate(visits, axis=1))
+    return qs, qcs, valid_s, perm, inv, th_q, sched, cnt
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "bm", "bn", "metric", "dim", "n_finite_total",
+                     "seg_meta", "primary", "impl"))
+def _megastep(q, n_valid, dead_total, segs, tiles, state, *,
+              k: int, bm: int, bn: int, metric: str, dim: int,
+              n_finite_total: int, seg_meta: tuple, primary: int,
+              impl: str):
+    """assign → bounds → schedule → gather-top-k → merge, one trace.
+
+    ``q`` (B, dim) bucket-padded queries; ``n_valid`` traced scalar;
+    ``dead_total`` traced tombstone count; ``segs`` a tuple of per-segment
+    device dicts; ``tiles`` the concatenated device S-side; ``state`` an
+    optional carried (d, id_hi, id_lo) device run to dedup-merge into.
+    ``seg_meta`` is the static per-segment (M, kk, ns_tiles) signature —
+    part of the jit cache key, so a changed segment structure retraces
+    while steady-state batches hit the cache.
+    """
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1          # runs at trace time only == jit cache miss
+
+    import jax.numpy as jnp
+
+    from repro.kernels.sorted_merge import merge_sorted_runs, \
+        merge_sorted_runs_unique, next_pow2
+
+    b = q.shape[0]
+    nr_tiles = b // bm
+    kp = next_pow2(k)
+    center = tiles["center"]
+    qs, qcs, valid_s, perm, inv, th_q, sched, cnt = _assign_bounds_schedule(
+        q, n_valid, dead_total, segs, center, k=k, bm=bm, metric=metric,
+        n_finite_total=n_finite_total, seg_meta=seg_meta, primary=primary)
     t_total = sched.shape[1]
 
     # ---- 4. gather-top-kp over the concatenated schedule. The run keeps
@@ -314,6 +338,12 @@ class MegastepEngine:
             raise ValueError(f"unknown megastep impl {impl!r}")
         self.impl = impl           # None = auto (pallas on TPU, ref here)
         self.bucket_min = max(1, int(bucket_min))
+        # the quantized subclass (repro.quant.engine) keeps the fp32 rows
+        # host-side and uploads int8 codes instead — 4× less HBM resident
+        # — and resolves global ids host-side, so it skips the (hi, lo)
+        # id upload too
+        self._upload_fp32 = True
+        self._upload_ids = True
         self._struct = None        # (skey, struct dict)
         self._payload = None       # (vkey, _Payload)
         self._seg_cache: dict = {}
@@ -415,13 +445,23 @@ class MegastepEngine:
                 pivots_c=jnp.asarray(ent["pivots"] - center[None, :]),
                 pivd=ent["pivd"], knn=ent["knn"], sd_min=ent["sd_min"],
                 sd_max=ent["sd_max"], present=ent["present"]))
-        hi = (gids >> 32).astype(np.int32)
-        lo = (gids & np.int64(0xFFFFFFFF)).astype(np.uint32).view(np.int32)
+        tiles_dev = dict(center=jnp.asarray(center))
+        if self._upload_ids:
+            hi = (gids >> 32).astype(np.int32)
+            lo = (gids & np.int64(0xFFFFFFFF)).astype(np.uint32) \
+                .view(np.int32)
+            tiles_dev["id_hi"] = jnp.asarray(hi)
+            tiles_dev["id_lo"] = jnp.asarray(lo)
+        if self._upload_fp32:
+            tiles_dev["s"] = jnp.asarray(rows_all)
         return dict(
             segs_dev=tuple(segs_dev),
-            tiles_dev=dict(s=jnp.asarray(rows_all),
-                           id_hi=jnp.asarray(hi), id_lo=jnp.asarray(lo),
-                           center=jnp.asarray(center)),
+            tiles_dev=tiles_dev,
+            # the packed fp32 rows, host-side: only the quantized tier
+            # needs them (its exact re-rank gathers shortlists from here
+            # instead of HBM) — the fp32 engine must not pin a second
+            # full host copy of the index
+            rows_host=None if self._upload_fp32 else rows_all,
             gids=gids, seg_meta=tuple(seg_meta), dim=dim,
             n_finite_total=n_finite_total,
             primary=int(np.argmax(sizes)))

@@ -39,6 +39,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from .bounds import pad_theta
 from .metrics import cmp_dist, from_cmp
 from .types import JoinStats
 
@@ -91,20 +92,23 @@ def visit_mask_jnp(qp, home, th_q, valid_q, pivd,
     b, m = qp.shape
     nr_tiles = b // bm
     home_c = jnp.clip(home, 0, m - 1)
+    # prune against the ulp-padded θ (bounds.pad_theta): qp and th_q come
+    # from different fp graphs, and neighbors at exactly θ must survive
+    thp = pad_theta(th_q)
     if metric == "l2":
         q2 = qp.astype(jnp.float32) ** 2
         home_sq = jnp.take_along_axis(q2, home_c[:, None], axis=1)
         denom = jnp.maximum(2.0 * pivd[home_c], 1e-30)
         d_hp = (q2 - home_sq) / denom
-        alive = d_hp <= th_q[:, None]
+        alive = d_hp <= thp[:, None]
     else:
         alive = jnp.ones((b, m), bool)
     alive = alive.at[jnp.arange(b), home_c].set(True)
     alive = alive & valid_q[:, None]
 
     alive_t = alive.reshape(nr_tiles, bm, m).any(axis=1)
-    lo_q = jnp.where(alive, qp - th_q[:, None], jnp.inf)
-    hi_q = jnp.where(alive, qp + th_q[:, None], -jnp.inf)
+    lo_q = jnp.where(alive, qp - thp[:, None], jnp.inf)
+    hi_q = jnp.where(alive, qp + thp[:, None], -jnp.inf)
     lo_t = lo_q.reshape(nr_tiles, bm, m).min(axis=1)
     hi_t = hi_q.reshape(nr_tiles, bm, m).max(axis=1)
 
@@ -289,13 +293,16 @@ def build_tile_schedule(
             th_q[lo:hi] = np.where(valid_q[lo:hi],
                                    np.minimum(th_q[lo:hi], kth), -np.inf)
 
-    # Cor. 1 per (query, partition); home column never pruned
+    # Cor. 1 per (query, partition); home column never pruned. All θ
+    # comparisons use the ulp-padded θ (bounds.pad_theta) so neighbors
+    # at exactly θ survive fp discrepancies between the qp and θ graphs.
+    thp = pad_theta(th_q)
     if metric == "l2":
         q2 = qp.astype(np.float64) ** 2
         home_sq = np.take_along_axis(q2, home[:, None], axis=1)
         denom = np.maximum(2.0 * pivd[home], 1e-30)          # (n_r, M)
         d_hp = (q2 - home_sq) / denom
-        alive = d_hp <= th_q[:, None]
+        alive = d_hp <= thp[:, None]
     else:
         alive = np.ones((n_r, m), bool)
     alive[np.arange(n_r), home] = True
@@ -305,8 +312,8 @@ def build_tile_schedule(
     tile_of_r = (np.arange(n_r) // bm).astype(np.int64)
     alive_t = np.zeros((nr_tiles, m), bool)
     np.logical_or.at(alive_t, tile_of_r, alive)
-    lo_q = np.where(alive, qp - th_q[:, None], np.inf)
-    hi_q = np.where(alive, qp + th_q[:, None], -np.inf)
+    lo_q = np.where(alive, qp - thp[:, None], np.inf)
+    hi_q = np.where(alive, qp + thp[:, None], -np.inf)
     lo_t = np.full((nr_tiles, m), np.inf, np.float32)
     hi_t = np.full((nr_tiles, m), -np.inf, np.float32)
     np.minimum.at(lo_t, tile_of_r, lo_q.astype(np.float32))

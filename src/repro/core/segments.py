@@ -51,7 +51,7 @@ from typing import Optional
 import numpy as np
 
 from .api import execute_join
-from .index import SIndex, build_index, plan_queries
+from .index import SIndex, as_float32_rows, build_index, plan_queries
 from .metrics import canonical_topk, cmp_dist
 from .partition import build_summary
 from .stream import StreamJoinState
@@ -178,9 +178,11 @@ class MutableIndex:
         Rows land in the write buffer (queryable immediately, by brute
         force) and seal into a delta ``SIndex`` once the buffer crosses
         ``seal_threshold`` — phase 1 runs over the delta only, never
-        over pre-existing segments.
+        over pre-existing segments. Model-emitted bfloat16/float16
+        hidden states are cast to float32 once at this boundary
+        (`core.index.as_float32_rows`); non-float dtypes are rejected.
         """
-        rows = np.ascontiguousarray(rows, np.float32)
+        rows = as_float32_rows(rows, what="inserted rows")
         if rows.ndim != 2 or rows.shape[0] == 0:
             raise ValueError(f"insert needs (n, dim) rows, got {rows.shape}")
         if self.segments or self._buffer:
@@ -293,6 +295,13 @@ class MutableIndex:
                                     offset)
             out.append((self._buffer_seg[1], self._buffer_seg[2]))
         return out
+
+    def nbytes_resident(self, *, quantized: Optional[bool] = None) -> int:
+        """Device-resident row-payload bytes summed over all live
+        segments (including the write buffer's ephemeral view) — the
+        mutable-index counterpart of ``SIndex.nbytes_resident``."""
+        return sum(si.nbytes_resident(quantized=quantized)
+                   for si, _ in self.segment_snapshot())
 
     def live_rows(self) -> tuple[np.ndarray, np.ndarray]:
         """(rows, global ids) of all surviving rows, ascending by id —

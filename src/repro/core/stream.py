@@ -165,16 +165,28 @@ class StreamJoinEngine:
     ``megastep``: ``True`` | ``False`` | ``"auto"`` — auto enables the
     fused path when the metric supports it (L2); ``True`` raises on
     unsupported configs rather than silently falling back.
+
+    ``quantized``: ``True`` routes every batch through the two-tier
+    quantized engine (`repro.quant.QuantMegastepEngine`, L2 only):
+    int8-resident index payload, coarse scan + exact fp32 re-rank,
+    bitwise the oracle's results. Takes precedence over ``megastep``
+    (it *is* a megastep-mode engine). Default ``None`` follows
+    ``config.quantize``.
     """
 
     def __init__(self, index, config: Optional[JoinConfig] = None, *,
-                 megastep: object = False):
+                 megastep: object = False, quantized: Optional[bool] = None):
         self.index = index
         self.config = config or index.config
+        if quantized is None:
+            quantized = self.config.quantize != "none"
         if megastep == "auto":
             megastep = self.config.metric == "l2"
         self._megastep = None
-        if megastep:
+        if quantized:
+            from repro.quant.engine import QuantMegastepEngine
+            self._megastep = QuantMegastepEngine(index, self.config)
+        elif megastep:
             from .megastep import MegastepEngine
             self._megastep = MegastepEngine(index, self.config)
 
@@ -224,6 +236,7 @@ def knn_join_batched(
     index=None,
     batch_size: int = 0,
     megastep: object = False,
+    quantized: Optional[bool] = None,
 ) -> JoinResult:
     """Streaming PGBJ join: R in micro-batches against a build-once index.
 
@@ -235,7 +248,9 @@ def knn_join_batched(
     (pivots sampled from S: the query set is not assumed to exist up
     front). ``megastep=True`` (or "auto") runs each batch through the
     fused device-resident megastep instead of the host-planned path —
-    identical results, one jitted pass per batch.
+    identical results, one jitted pass per batch. ``quantized=True``
+    runs each batch through the two-tier int8 engine (`repro.quant`) —
+    identical results again, 4× smaller resident index.
 
     Exactness: equals one-shot ``knn_join`` against the same index for
     any batch split. Results are ordered by arrival: row ``j`` of the
@@ -268,7 +283,8 @@ def knn_join_batched(
         batch_size = r.shape[0] if isinstance(r, np.ndarray) else 1 << 62
     batch_size = max(1, batch_size)   # |R| = 0 must not zero the stride
 
-    engine = StreamJoinEngine(index, config, megastep=megastep)
+    engine = StreamJoinEngine(index, config, megastep=megastep,
+                              quantized=quantized)
     stats = JoinStats(n_s=index.n_s)
     if built_here:   # a reused index's S phase 1 was paid at build time
         stats.pivot_pairs_computed += index.n_s * index.n_pivots

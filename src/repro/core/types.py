@@ -42,6 +42,18 @@ class JoinConfig:
     # streaming engine (core.stream): R micro-batch rows per plan+join
     # round; 0 = one-shot (whole query set in a single batch)
     batch_size: int = 0
+    # quantized tier (repro.quant): "int8" attaches per-tile symmetric
+    # int8 codes + per-row error bounds ε to every built index / sealed
+    # segment, and routes knn_join(quantized=True) & friends through the
+    # two-tier coarse-scan → exact-re-rank engine (L2 only, results
+    # bitwise the fp32 oracle's)
+    quantize: str = "none"          # none | int8
+    # coarse shortlist over-fetch: k + quant_slack candidates survive
+    # the int8 pass into the exact fp32 re-rank (rounded up to a power
+    # of two); -1 = auto (shortlist max(pow2(4k), 128)). Smaller slack =
+    # cheaper re-rank but more certification failures falling back to
+    # the host oracle (exactness is unconditional either way).
+    quant_slack: int = -1
     seed: int = 0
 
     def __post_init__(self):
@@ -57,6 +69,16 @@ class JoinConfig:
             raise ValueError("batch_size must be >= 0")
         if self.metric not in ("l2", "l1", "linf"):
             raise ValueError(f"unknown metric {self.metric!r}")
+        if self.quantize not in ("none", "int8"):
+            raise ValueError(f"unknown quantize mode {self.quantize!r}")
+        if self.quantize != "none" and self.metric != "l2":
+            raise ValueError(
+                f"quantize={self.quantize!r} requires metric='l2' (the "
+                f"int8 coarse kernel is the Euclidean lowering); got "
+                f"{self.metric!r} — drop quantize or use the fp32 host "
+                f"engines")
+        if self.quant_slack < -1:
+            raise ValueError("quant_slack must be >= 0, or -1 for auto")
 
     @property
     def resolved_reducer(self) -> str:
@@ -113,6 +135,11 @@ class JoinStats:
     n_segments: int = 0
     n_tombstones: int = 0
     compact_time_s: float = 0.0
+    # quantized tier (repro.quant): queries whose coarse-pass
+    # certification failed and re-ran through the fp32 host oracle
+    # (exactness is unconditional; this counts how often the int8
+    # shortlist alone could not prove it)
+    n_quant_fallback: int = 0
 
     @property
     def selectivity(self) -> float:

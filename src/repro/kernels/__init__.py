@@ -1,10 +1,13 @@
 """Pallas TPU kernels for the compute hot-spots (+ jnp oracles).
 
 - distance_topk: the PGBJ reducer loop (paper Alg. 3)   [core hot-spot]
+- quant_coarse_topk: int8 coarse shortlist scan          [quantized tier]
 - assign:        phase-1 nearest-pivot map               [core hot-spot]
 - flash_attention: LM substrate prefill/train attention  [substrate]
 """
-from .ops import distance_topk, assign, flash_attention, use_pallas
+from .ops import (
+    distance_topk, quant_coarse_topk, assign, flash_attention, use_pallas)
 from . import ref
 
-__all__ = ["distance_topk", "assign", "flash_attention", "use_pallas", "ref"]
+__all__ = ["distance_topk", "quant_coarse_topk", "assign",
+           "flash_attention", "use_pallas", "ref"]

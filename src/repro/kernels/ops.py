@@ -34,8 +34,10 @@ from . import ref
 from .assign import assign_pallas
 from .distance_topk import distance_topk_gather_pallas, distance_topk_pallas
 from .flash_attention import flash_attention_pallas
+from .quant_topk import quant_coarse_gather_pallas
 
-__all__ = ["distance_topk", "assign", "flash_attention", "use_pallas"]
+__all__ = ["distance_topk", "quant_coarse_topk", "assign",
+           "flash_attention", "use_pallas"]
 
 
 def use_pallas() -> bool:
@@ -75,6 +77,44 @@ def distance_topk(
     return distance_topk_pallas(
         r, s, k, visit_mask=visit_mask, bm=bm, bn=bn,
         interpret=impl == "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=("mp", "bm", "bn", "impl"))
+def quant_coarse_topk(
+    qi: jnp.ndarray, qscale: jnp.ndarray, qeps: jnp.ndarray,
+    theta: jnp.ndarray, si: jnp.ndarray, sscale: jnp.ndarray,
+    seps: jnp.ndarray, alive: jnp.ndarray, mp: int,
+    *, schedule: Optional[jnp.ndarray] = None,
+    counts: Optional[jnp.ndarray] = None,
+    bm: int = 128, bn: int = 512, impl: str = "auto",
+):
+    """Int8 coarse shortlist for the quantized tier (`repro.quant`):
+    ascending certified lower bounds + packed row positions, (n, mp).
+
+    impl="pallas"/"pallas_interpret" run the schedule-driven gather
+    kernel (requires ``schedule`` + ``counts``; int8 tiles are the only
+    bytes streamed); impl="ref_sched" is its schedule-consuming scan
+    twin (same visit list, CPU validation); impl="ref" is the dense jnp
+    oracle (ignores the schedule — a sound candidate superset). The
+    shortlist is NOT a result: callers must re-rank it with exact fp32
+    distances and certify the exclusion (see `repro.quant.engine`).
+    """
+    impl = ("pallas" if use_pallas() else "ref") if impl == "auto" else impl
+    if impl == "ref":
+        return ref.quant_coarse_topk_ref(
+            qi, qscale, qeps, theta, si, sscale, seps, alive, mp, bn=bn)
+    if impl in ("pallas", "pallas_interpret", "ref_sched"):
+        if schedule is None or counts is None:
+            raise ValueError(f"impl={impl!r} requires schedule and counts")
+        if impl == "ref_sched":
+            return ref.quant_coarse_sched_ref(
+                qi, qscale, qeps, theta, si, sscale, seps, alive, mp,
+                schedule, counts, bm=bm, bn=bn)
+        return quant_coarse_gather_pallas(
+            qi, qscale, qeps, theta, si, sscale, seps, alive, mp,
+            schedule, counts, bm=bm, bn=bn,
+            interpret=impl == "pallas_interpret")
+    raise ValueError(f"unknown quant_coarse_topk impl {impl!r}")
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bp", "impl"))

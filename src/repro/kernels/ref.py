@@ -4,8 +4,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["distance_topk_ref", "distance_topk_gather_ref", "assign_ref",
-           "flash_attention_ref"]
+__all__ = ["distance_topk_ref", "distance_topk_gather_ref",
+           "quant_coarse_topk_ref", "quant_coarse_sched_ref",
+           "assign_ref", "flash_attention_ref"]
 
 
 def distance_topk_ref(r: jnp.ndarray, s: jnp.ndarray, k: int):
@@ -54,6 +55,98 @@ def distance_topk_gather_ref(
     d2 = jnp.where(mask, jnp.maximum(d2, 0.0), jnp.inf)
     neg, idx = jax.lax.top_k(-d2, k)
     return jnp.sqrt(-neg), idx.astype(jnp.int32)
+
+
+def quant_coarse_topk_ref(
+    qi: jnp.ndarray, qscale: jnp.ndarray, qeps: jnp.ndarray,
+    theta: jnp.ndarray, si: jnp.ndarray, sscale: jnp.ndarray,
+    seps: jnp.ndarray, alive: jnp.ndarray, mp: int, *, bn: int,
+):
+    """Oracle for the int8 coarse-scan kernel (`kernels.quant_topk`):
+    dense certified-lower-bound matrix + top-mp selection.
+
+    Same rescale formula (int8 dot → int32 → f32 rescale → ε-inflated
+    lower bound, see `quant_topk.coarse_lb_tile`) over *all* S rows —
+    a candidate superset of any schedule, which is fine: the quantized
+    tier's exactness rests on the shortlist's re-rank + certification,
+    not on which sound shortlist an impl picks. ``sscale`` is per tile
+    ((n_s // bn,)); ``theta`` is the per-query ε-inflatable prune
+    threshold; ``alive`` masks tombstones/padding. Returns ascending
+    (lb (n, mp), pos (n, mp)); empty slots are (+inf, -1).
+    """
+    from .quant_topk import coarse_lb_tile
+
+    # the kernel's exact bound formula over all tiles fused into one
+    # call: coarse_lb_tile takes the per-tile scales as a per-row
+    # vector, so the int8 contraction stays a single matmul
+    lb = coarse_lb_tile(
+        qi, qscale, qeps, si,
+        jnp.repeat(sscale.astype(jnp.float32), bn),
+        seps.astype(jnp.float32))
+    keep = (alive.astype(jnp.float32) > 0.0)[None, :] \
+        & (lb <= theta[:, None])
+    lb = jnp.where(keep, lb, jnp.inf)
+    mp_eff = min(mp, lb.shape[-1])     # shortlist wider than S: take all
+    neg, pos = jax.lax.top_k(-lb, mp_eff)
+    lb_run = -neg
+    pos = jnp.where(jnp.isfinite(lb_run), pos, -1).astype(jnp.int32)
+    if mp_eff < mp:
+        pad = ((0, 0), (0, mp - mp_eff))
+        lb_run = jnp.pad(lb_run, pad, constant_values=jnp.inf)
+        pos = jnp.pad(pos, pad, constant_values=-1)
+    return lb_run, pos
+
+
+def quant_coarse_sched_ref(
+    qi: jnp.ndarray, qscale: jnp.ndarray, qeps: jnp.ndarray,
+    theta: jnp.ndarray, si: jnp.ndarray, sscale: jnp.ndarray,
+    seps: jnp.ndarray, alive: jnp.ndarray, mp: int,
+    schedule: jnp.ndarray, counts: jnp.ndarray, *, bm: int, bn: int,
+):
+    """Schedule-driven scan twin of the int8 coarse kernel: the same
+    visit list, the same per-tile `coarse_lb_tile` rescale, the same
+    carried sorted mp-run — the CPU validation path for the quantized
+    tier's in-jit schedule consumption (mirrors the fp32 megastep's
+    ``ref_sched``). Query operands must already be padded to whole
+    ``bm`` tiles (the engine's bucketing guarantees it)."""
+    from .quant_topk import coarse_lb_tile
+    from .sorted_merge import merge_sorted_runs, tile_topk
+
+    n_r = qi.shape[0]
+    nr_tiles = n_r // bm
+    ns_tiles = si.shape[0] // bn
+    dim = qi.shape[1]
+    q3 = qi.reshape(nr_tiles, bm, dim)
+    qs3 = qscale.reshape(nr_tiles, bm)
+    qe3 = qeps.reshape(nr_tiles, bm)
+    th3 = theta.reshape(nr_tiles, bm)
+    s3 = si.reshape(ns_tiles, bn, dim)
+    seps3 = seps.astype(jnp.float32).reshape(ns_tiles, bn)
+    alive3 = alive.astype(jnp.float32).reshape(ns_tiles, bn)
+    lb_of_tile = jax.vmap(coarse_lb_tile)
+
+    def body(carry, xs):
+        cd, ci = carry
+        tile_idx, j = xs                          # (nr_tiles,), ()
+        lb = lb_of_tile(q3, qs3, qe3, s3[tile_idx],
+                        sscale[tile_idx], seps3[tile_idx])
+        pos = tile_idx[:, None] * bn + jnp.arange(bn)[None, :]
+        keep = ((j < counts)[:, None, None]
+                & (alive3[tile_idx][:, None, :] > 0.0)
+                & (lb <= th3[..., None]))
+        lb = jnp.where(keep, lb, jnp.inf)
+        td, ti = tile_topk(
+            lb, jnp.broadcast_to(pos[:, None, :], lb.shape), mp)
+        return merge_sorted_runs(cd, ci, td, ti), None
+
+    carry0 = (jnp.full((nr_tiles, bm, mp), jnp.inf, jnp.float32),
+              jnp.full((nr_tiles, bm, mp), -1, jnp.int32))
+    (cd, ci), _ = jax.lax.scan(
+        body, carry0,
+        (schedule.T, jnp.arange(schedule.shape[1], dtype=jnp.int32)))
+    lb_run = cd.reshape(n_r, mp)
+    pos = ci.reshape(n_r, mp)
+    return lb_run, jnp.where(jnp.isfinite(lb_run), pos, -1)
 
 
 def assign_ref(x: jnp.ndarray, pivots: jnp.ndarray):

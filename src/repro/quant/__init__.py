@@ -1,0 +1,8 @@
+"""Error-bounded quantized index tier: int8 coarse scan + exact fp32
+re-rank (see `repro.quant.quantize` for the representation and
+`repro.quant.engine` for the two-tier execution engine)."""
+from .quantize import QuantizedRows, quantize_rows, quantize_queries_np
+from .engine import QuantMegastepEngine, quantize_queries_jnp
+
+__all__ = ["QuantizedRows", "quantize_rows", "quantize_queries_np",
+           "QuantMegastepEngine", "quantize_queries_jnp"]

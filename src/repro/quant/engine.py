@@ -1,0 +1,271 @@
+"""Two-tier quantized query engine: int8 coarse scan → exact fp32
+re-rank, bitwise-identical to the fp32 oracle.
+
+The fused megastep (core.megastep) made the per-batch serving path
+compute-lean; this engine makes it *memory*-lean. The device-resident
+index payload holds int8 codes + per-tile scales + per-row error bounds
+ε instead of fp32 rows (≈ 4× fewer resident bytes, `SIndex.
+nbytes_resident`), and each batch runs:
+
+1. **plan** (shared jit graph with the fp32 megastep —
+   `core.megastep._assign_bounds_schedule`): assignment, union θ
+   (tombstone-widened), compacted Cor. 1 / Thm 2 tile schedule. All of
+   it uses *exact* pivot geometry, so no ε enters here.
+2. **coarse int8 scan** (`kernels.quant_topk`, jnp twin
+   `kernels.ref.quant_coarse_topk_ref`): over the scheduled tiles only,
+   int8 dot → int32 accumulate → fp32 rescale. Selection key per row is
+   the certified lower bound ``lb = max(d_coarse − ε_total, 0)`` with
+   ``ε_total = ε_s + ε_q + ε_num``; candidates with ``lb > θ`` are
+   masked — θ effectively *inflated by ε*, so a true neighbor
+   (distance ≤ θ ⇒ lb ≤ θ) is never pruned. The smallest
+   ``mp = pow2(k + slack)`` lower bounds survive as the shortlist.
+3. **exact re-rank**: the shortlisted rows are gathered from the
+   host-side fp32 packed rows and re-ranked through
+   ``metrics.canonical_topk`` — the *same* canonical distance graph
+   every other engine reports — so the quantized path emits the exact
+   bits the oracle does.
+4. **certification**: per query, let L = the mp-th (largest) shortlist
+   lower bound (+inf if the shortlist wasn't filled) and τ̂ = the k-th
+   smallest exact re-ranked distance. Every coarse candidate *outside*
+   the shortlist has lb ≥ L; if ``L ≥ τ̂`` no excluded row can beat the
+   reported k-th neighbor, so the result is provably the true top-k.
+   The (rare — adversarial near-ties at the shortlist boundary) queries
+   that fail re-run through the fp32 host oracle
+   (`JoinStats.n_quant_fallback` counts them). Exactness is therefore
+   **unconditional**, not probabilistic.
+
+The bitwise contract carries the same caveat as every other engine pair
+in this codebase (see `core.segments`): when *distinct* rows tie at
+exactly the same float32 canonical distance, which tied id is reported
+(or their order) may differ from the oracle's — the distances
+themselves are still bitwise-equal, and both answers are exact kNN
+sets; only the tie-break differs (here: shortlist order vs the oracle
+engine's selection order).
+
+Soundness of the lower bound (the ε lemma, hypothesis-tested in
+tests/test_quant.py): with ŝ = code·scale and q̂ the int8-quantized
+query, the triangle inequality gives |d(q̂, ŝ) − d(q, s)| ≤
+‖q − q̂‖ + ‖s − ŝ‖ ≤ ε_q + ε_s, and ε_num (see `kernels.quant_topk`)
+dominates the float32 rescale rounding of d(q̂, ŝ) itself.
+
+Trade-off vs the fp32 megastep: the shortlist gather is a host
+round-trip per batch (the fp32 rows deliberately do **not** live in
+HBM), so the quantized tier trades the zero-sync steady state for a 4×
+smaller resident datastore — the regime where |S| per device, not
+per-batch latency, is the binding constraint.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.megastep import MegastepEngine, _assign_bounds_schedule
+from repro.core.metrics import canonical_topk
+from repro.core.types import JoinConfig, JoinStats
+from repro.kernels.sorted_merge import next_pow2
+
+__all__ = ["QuantMegastepEngine", "quantize_queries_jnp"]
+
+
+def quantize_queries_jnp(q):
+    """Per-row symmetric int8 query quantization, in-jit.
+
+    Returns ``(codes int8, scales f32, eps f32)`` with eps an upper
+    bound on ‖q − q̂‖₂: the float32-computed norm is inflated by a
+    relative + absolute margin that dwarfs its own rounding error
+    (mirrors the rounded-up storage of the S-side ε).
+    """
+    import jax.numpy as jnp
+
+    amax = jnp.max(jnp.abs(q), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    codes = jnp.clip(jnp.round(q / scale[:, None]), -127, 127)
+    recon = codes * scale[:, None]
+    err = jnp.sqrt(jnp.sum(jnp.square(q - recon), axis=1))
+    eps = err * np.float32(1.0 + 1e-5) + np.float32(1e-7)
+    return codes.astype(jnp.int8), scale, eps.astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mp", "k", "bm", "bn", "metric", "dim",
+                     "n_finite_total", "seg_meta", "primary", "impl"))
+def _quant_coarse(q, n_valid, dead_total, segs, tiles, *,
+                  mp: int, k: int, bm: int, bn: int, metric: str,
+                  dim: int, n_finite_total: int, seg_meta: tuple,
+                  primary: int, impl: str):
+    """plan (shared with the fp32 megastep) → int8 coarse shortlist.
+
+    Returns ``(lb (B, mp) ascending certified lower bounds,
+    pos (B, mp) int32 rows into the packed layout)`` in the original
+    query order; empty slots are (+inf, -1).
+    """
+    from repro.kernels import ops
+
+    qs, _, _, _, inv, th_q, sched, cnt = _assign_bounds_schedule(
+        q, n_valid, dead_total, segs, tiles["center"], k=k, bm=bm,
+        metric=metric, n_finite_total=n_finite_total, seg_meta=seg_meta,
+        primary=primary)
+    qi, qscale, qeps = quantize_queries_jnp(qs)
+    # one dispatch for every impl (pallas / interpret / ref_sched /
+    # dense ref) — the registered op, traced into this jit. θ is
+    # ulp-padded (bounds.pad_theta) like every other prune site: the
+    # certified lb can equal the true distance exactly, and θ's fp
+    # value may round below the real Thm-3 bound.
+    from repro.core.bounds import pad_theta
+    lb, pos = ops.quant_coarse_topk(
+        qi, qscale, qeps, pad_theta(th_q), tiles["sq"], tiles["sscale"],
+        tiles["seps"], tiles["alive"], mp, schedule=sched, counts=cnt,
+        bm=bm, bn=bn, impl=impl)
+    return lb[inv], pos[inv]
+
+
+class QuantMegastepEngine(MegastepEngine):
+    """Memory-lean drop-in for `MegastepEngine`: same index kinds
+    (``SIndex`` or ``MutableIndex`` with live tombstones), same exact
+    bitwise results, int8-resident payload. Reached via
+    ``knn_join(..., quantized=True)``, ``knn_join_batched(...,
+    quantized=True)``, ``StreamJoinEngine(..., quantized=True)`` and
+    ``serve.Datastore(quantized=True)``. L2 only, like the megastep.
+    """
+
+    def __init__(self, index, config: Optional[JoinConfig] = None, *,
+                 slack: Optional[int] = None, bucket_min: int = 16,
+                 impl: Optional[str] = None):
+        if impl not in (None, "pallas", "pallas_interpret", "ref",
+                        "ref_sched"):
+            raise ValueError(f"unknown quant coarse impl {impl!r}")
+        cfg = config or index.config
+        if cfg.metric != "l2":
+            raise ValueError(
+                f"the quantized tier supports metric='l2' only, got "
+                f"{cfg.metric!r}; use the fp32 host engines "
+                f"(JoinConfig(quantize=...) rejects this combination at "
+                f"construction)")
+        super().__init__(index, config, bucket_min=bucket_min)
+        self.impl = impl
+        self._upload_fp32 = False
+        self._upload_ids = False       # ids resolve host-side via gids
+        k = self.config.k
+        if slack is None:
+            slack = self.config.quant_slack
+        if slack is None or slack < 0:
+            # auto: certification needs the shortlist boundary to clear
+            # the k-th neighbor by ~2·(ε_s + ε_q); on concentrated
+            # high-dim data that takes a rank gap of ~10×k (the
+            # kernel_quant_coarse_vs_fp32 bench pins certified_frac=1.0
+            # here, vs 0.05 at a bare 2k shortlist)
+            self.mp = max(next_pow2(4 * k), 128)
+        else:
+            self.mp = next_pow2(max(k + int(slack), k, 1))
+
+    # ---- device payload: int8 codes + scales + ε instead of fp32 rows
+
+    def _build_struct(self, segs, bn: int, k: int) -> dict:
+        import jax.numpy as jnp
+
+        st = super()._build_struct(segs, bn, k)
+        q_parts, sc_parts, eps_parts = [], [], []
+        for si, _off in segs:
+            qr = si.ensure_quant(bn)
+            q_parts.append(qr.q)
+            sc_parts.append(qr.scales)
+            eps_parts.append(qr.eps)
+        st["tiles_dev"]["sq"] = jnp.asarray(np.concatenate(q_parts, axis=0))
+        st["tiles_dev"]["sscale"] = jnp.asarray(np.concatenate(sc_parts))
+        # ε stays f16-resident (2 bytes/row); upcast is in-graph
+        st["tiles_dev"]["seps"] = jnp.asarray(np.concatenate(eps_parts))
+        return st
+
+    # ---- two-tier query path
+
+    def coarse_shortlist(self, queries: np.ndarray):
+        """The int8 pass alone: ``(lb, pos, ids)`` for one batch —
+        ascending certified lower bounds, packed-row positions and their
+        global ids (−1 on empty slots). Exposed for benches/tests; the
+        exact path is :meth:`join_batch`."""
+        from repro.kernels import ops
+
+        q = np.ascontiguousarray(queries, np.float32)
+        n = q.shape[0]
+        payload = self._refresh()
+        qd, nv = self.enqueue(q)
+        bucket = int(qd.shape[0])
+        bm = min(bucket, 1 << (int(self.config.tile_r).bit_length() - 1))
+        impl = self.impl or ("pallas" if ops.use_pallas() else "ref")
+        lb, pos = _quant_coarse(
+            qd, nv, payload.dead_total, payload.segs, payload.tiles,
+            mp=self.mp, k=self.config.k, bm=bm, bn=self.config.tile_s,
+            metric=self.config.metric, dim=payload.dim,
+            n_finite_total=payload.n_finite_total,
+            seg_meta=payload.seg_meta, primary=payload.primary, impl=impl)
+        lb = np.asarray(lb)[:n]
+        pos = np.asarray(pos)[:n]
+        gids = self._struct[1]["gids"]
+        ids = np.where(pos >= 0,
+                       gids[np.clip(pos, 0, gids.shape[0] - 1)], -1)
+        return lb, pos, ids
+
+    def join_batch(
+        self, queries: np.ndarray, *, stats: Optional[JoinStats] = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """(dists, int64 global ids): coarse int8 shortlist → exact fp32
+        canonical re-rank → per-query certification (fp32-oracle
+        fallback for the failures). Bitwise the oracle's output, up to
+        float-tie id ordering (module docstring)."""
+        q = np.ascontiguousarray(queries, np.float32)
+        n = q.shape[0]
+        k = self.config.k
+        if k > self.index.n_s:
+            raise ValueError(f"k={k} > |S|={self.index.n_s}")
+        if n == 0:
+            return (np.zeros((0, k), np.float32),
+                    np.full((0, k), -1, np.int64))
+        lb, pos, ids = self.coarse_shortlist(q)
+        payload = self._payload[1]
+        if stats is not None:
+            stats.n_segments = len(payload.seg_meta)
+            stats.n_tombstones = int(np.asarray(payload.dead_total))
+            stats.pivot_pairs_computed += n * sum(
+                m for m, _, _ in payload.seg_meta)
+        rows_host = self._struct[1]["rows_host"]
+        neigh = rows_host[np.clip(pos, 0, rows_host.shape[0] - 1)]
+        d_all, ids_all = canonical_topk(q, ids, neigh, self.config.metric)
+        out_d = np.ascontiguousarray(d_all[:, :k])
+        out_i = np.ascontiguousarray(ids_all[:, :k])
+        # certification: excluded coarse candidates all carry lb ≥ the
+        # run's last (largest) slot; +inf there means nothing was
+        # excluded at all. τ̂ is the exact reported k-th distance.
+        lm = lb[:, -1]                       # +inf when run not filled
+        tau = d_all[:, k - 1]
+        bad = ~(lm >= tau)                   # NaN-safe: fail on weirdness
+        if bad.any():
+            fb_d, fb_i = self._oracle_join(q[bad])
+            out_d[bad] = fb_d
+            out_i[bad] = fb_i
+            if stats is not None:
+                stats.n_quant_fallback += int(bad.sum())
+        return out_d, out_i
+
+    def _oracle_join(self, q: np.ndarray):
+        """The fp32 host-planned oracle for certification failures —
+        reports through the same canonical distance graph, so patched
+        rows are bitwise what a full oracle run would emit."""
+        from repro.core.api import execute_join
+        from repro.core.index import plan_queries
+        from repro.core.segments import MutableIndex
+
+        if isinstance(self.index, MutableIndex):
+            return self.index.join_batch(q, config=self.config)
+        return execute_join(
+            q, self.index, plan_queries(q, self.index, self.config))
+
+    def join_batch_device(self, q_dev, n_valid_dev, *, state=None):
+        raise NotImplementedError(
+            "the quantized tier re-ranks via a host-side shortlist "
+            "gather (its fp32 rows are deliberately not device-resident)"
+            " — use join_batch, or the fp32 MegastepEngine for the "
+            "zero-host-transfer device API")

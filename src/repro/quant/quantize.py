@@ -1,0 +1,122 @@
+"""Symmetric per-tile int8 quantization of the packed S rows, with
+per-row reconstruction-error bounds.
+
+The paper's machinery (Thm 2/3, Cor. 1) prunes with *distance bounds*;
+this module extends the same idea to compression. Each ``bn``-row tile
+of the pivot-sorted packed layout (`SIndex.s_sorted`) is quantized
+symmetrically to int8 — one float32 scale per tile, codes in
+[-127, 127] — and every row carries an upper bound ε on its
+reconstruction error ``‖s − ŝ‖₂`` (ŝ = code · scale). By the triangle
+inequality, for any query q and any metric's true distance d:
+
+    |d(q, ŝ) − d(q, s)| ≤ ‖s − ŝ‖ ≤ ε
+
+so a coarse pass over the int8 codes can prune and shortlist *exactly*:
+``d(q, ŝ) − ε`` is a certified lower bound on the true distance, and no
+true neighbor is ever lost as long as selection keys and θ thresholds
+are inflated by ε (see `repro.quant.engine`). ε is computed in float64
+against the float32 scale actually used at serve time, then rounded
+*up* into float16 storage — the stored bound always dominates the real
+error, never undershoots it.
+
+Tile granularity matches the engines' S-tile size (``JoinConfig.
+tile_s``), so the Pallas coarse kernel rescales once per (query tile,
+S tile) step: int8 dot → int32 accumulate → one float32 rescale.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["QuantizedRows", "quantize_rows", "quantize_queries_np"]
+
+
+@dataclasses.dataclass
+class QuantizedRows:
+    """Int8 codes + per-tile scales + per-row error bounds for one packed
+    row block, padded to a whole number of ``bn``-row tiles (padding rows
+    are exact zeros: code 0, ε 0 — engines mask them via liveness)."""
+
+    q: np.ndarray        # (n_tiles * bn, dim) int8 codes, packed layout
+    scales: np.ndarray   # (n_tiles,) float32 — one symmetric scale per tile
+    eps: np.ndarray      # (n_tiles * bn,) float16 — ‖s − ŝ‖₂ rounded UP
+    bn: int              # rows per tile
+    n_rows: int          # real rows (pre-padding)
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.scales.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.q.shape[1])
+
+    def nbytes(self) -> int:
+        """Resident bytes of the compressed representation (codes +
+        scales + error bounds) — what `SIndex.nbytes_resident` reports
+        for the quantized tier."""
+        return int(self.q.nbytes + self.scales.nbytes + self.eps.nbytes)
+
+    def dequantized(self) -> np.ndarray:
+        """float32 reconstruction ŝ (padded layout) — the rows the
+        coarse pass effectively measures distances to."""
+        s = np.repeat(self.scales, self.bn).astype(np.float32)
+        return self.q.astype(np.float32) * s[:, None]
+
+
+def _round_up_f16(x64: np.ndarray) -> np.ndarray:
+    """float64 → float16, rounded toward +inf so the stored bound can
+    only be looser than the exact one."""
+    x16 = x64.astype(np.float16)
+    lossy = x16.astype(np.float64) < x64
+    return np.where(lossy, np.nextafter(x16, np.float16(np.inf)), x16)
+
+
+def quantize_rows(rows: np.ndarray, bn: int) -> QuantizedRows:
+    """Quantize ``(n, dim)`` float32 rows per ``bn``-row tile.
+
+    Symmetric: scale = amax(|tile|)/127 (1.0 for an all-zero tile, so
+    codes are well-defined), code = round(row / scale) clipped to
+    [-127, 127]. ε per row is the exact float64 ‖s − ŝ‖₂ against the
+    float32 scale, rounded up into float16.
+    """
+    rows = np.ascontiguousarray(rows, np.float32)
+    if bn < 1:
+        raise ValueError("bn must be >= 1")
+    n, dim = rows.shape
+    n_tiles = max(1, -(-n // bn))
+    pad = n_tiles * bn - n
+    r = np.pad(rows, ((0, pad), (0, 0))) if pad else rows
+    tiles = r.reshape(n_tiles, bn, dim)
+    amax = np.abs(tiles).max(axis=(1, 2))
+    scales = np.where(amax > 0, amax / np.float32(127.0),
+                      np.float32(1.0)).astype(np.float32)
+    codes = np.clip(np.rint(tiles / scales[:, None, None]),
+                    -127, 127).astype(np.int8)
+    recon = codes.astype(np.float64) * scales.astype(np.float64)[:, None, None]
+    err = np.sqrt(((tiles.astype(np.float64) - recon) ** 2).sum(axis=2))
+    eps = _round_up_f16(err.reshape(n_tiles * bn)).astype(np.float16)
+    return QuantizedRows(q=np.ascontiguousarray(codes.reshape(-1, dim)),
+                         scales=scales, eps=eps, bn=int(bn), n_rows=int(n))
+
+
+def quantize_queries_np(q: np.ndarray):
+    """Per-row symmetric int8 quantization of a query batch (numpy twin
+    of the in-jit `repro.quant.engine.quantize_queries_jnp`).
+
+    Returns ``(codes int8 (n, dim), scales f32 (n,), eps f32 (n,))``
+    with ε = ‖q − q̂‖₂ computed in float64 and rounded up — the
+    query-side term of the coarse pass's total error budget.
+    """
+    q = np.ascontiguousarray(q, np.float32)
+    amax = np.abs(q).max(axis=1)
+    scales = np.where(amax > 0, amax / np.float32(127.0),
+                      np.float32(1.0)).astype(np.float32)
+    codes = np.clip(np.rint(q / scales[:, None]), -127, 127).astype(np.int8)
+    recon = codes.astype(np.float64) * scales.astype(np.float64)[:, None]
+    err = np.sqrt(((q.astype(np.float64) - recon) ** 2).sum(axis=1))
+    eps32 = err.astype(np.float32)
+    lossy = eps32.astype(np.float64) < err
+    eps32 = np.where(lossy, np.nextafter(eps32, np.float32(np.inf)), eps32)
+    return codes, scales, eps32.astype(np.float32)

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import JoinConfig, MutableIndex, StreamJoinEngine
+from repro.core.index import as_float32_rows
 from repro.core.metrics import to_cmp
 from repro.kernels import distance_topk
 
@@ -59,15 +60,32 @@ class Datastore:
     # and compiled step live here and survive across decode steps
     _engines: dict = dataclasses.field(default_factory=dict, repr=False)
 
+    @property
+    def quantized(self) -> bool:
+        """Whether retrieval serves through the quantized tier
+        (repro.quant): derived from ``config.quantize`` — the single
+        source of truth the segments are built with — so a directly
+        constructed Datastore can never carry int8 codes it then
+        ignores."""
+        return self.config.quantize != "none"
+
     @classmethod
     def build(cls, keys, values, *, k: int = 8, n_pivots: int = 256,
-              n_groups: int = 8, seed: int = 0, seal_threshold: int = 4096):
+              n_groups: int = 8, seed: int = 0, seal_threshold: int = 4096,
+              quantized: bool = False):
         """S-side phase 1, once, over the initial keys: after this,
         serving touches pre-existing keys only through the segments'
-        packed layouts — growth happens in delta segments."""
-        keys = np.ascontiguousarray(keys, np.float32)
+        packed layouts — growth happens in delta segments.
+
+        ``keys`` may be model-emitted bfloat16/float16 hidden states —
+        cast to float32 once here. ``quantized=True`` stamps
+        ``quantize="int8"`` into the config, so every segment (base,
+        sealed deltas, compacted rebuilds) carries its int8 codes and
+        retrieval serves through the quantized tier."""
+        keys = as_float32_rows(keys, what="datastore keys")
         cfg = JoinConfig(k=k, n_pivots=min(n_pivots, keys.shape[0]),
-                         n_groups=n_groups, grouping="geometric", seed=seed)
+                         n_groups=n_groups, grouping="geometric", seed=seed,
+                         quantize="int8" if quantized else "none")
         return cls(keys=keys, values=np.asarray(values, np.int32),
                    index=MutableIndex.build(keys, cfg,
                                             seal_threshold=seal_threshold),
@@ -82,8 +100,11 @@ class Datastore:
         """Ingest new (key, value) pairs mid-decode; returns their global
         ids. Buffered immediately (queryable from the next batch on),
         sealed into a delta segment past the threshold — phase 1 never
-        re-runs on pre-existing segments."""
-        keys = np.ascontiguousarray(keys, np.float32)
+        re-runs on pre-existing segments. Accepts bfloat16/float16
+        hidden states (models emit bf16 — see `launch/serve.py`): cast
+        to float32 once at this boundary, never silently widened to
+        float64; non-float dtypes raise."""
+        keys = as_float32_rows(keys, what="datastore keys")
         values = np.atleast_1d(np.asarray(values, np.int32))
         if keys.shape[0] != values.shape[0]:
             raise ValueError(
@@ -119,7 +140,8 @@ class Datastore:
         if eng is None:
             cfg = self.config if kk == self.config.k \
                 else dataclasses.replace(self.config, k=kk)
-            eng = StreamJoinEngine(self.index, cfg, megastep="auto")
+            eng = StreamJoinEngine(self.index, cfg, megastep="auto",
+                                   quantized=self.quantized)
             self._engines[kk] = eng
         return eng
 

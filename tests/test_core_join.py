@@ -18,6 +18,27 @@ def _data(n, dim, seed, clusters=True):
     return (centers[who] + rng.normal(size=(n, dim))).astype(np.float32)
 
 
+@pytest.mark.parametrize("strategy", ["random", "farthest", "kmeans"])
+def test_build_index_pivot_strategy_kwarg(strategy):
+    """`build_index(pivot_strategy=...)` plumbs §4.1 selection through
+    the public build path (previously the k-means path needed a
+    hand-built config or hand-passed pivots) — each strategy yields a
+    valid, exact index."""
+    from repro.core import build_index
+
+    r = _data(150, 5, 4)
+    s = _data(400, 5, 5)
+    index = build_index(s, JoinConfig(k=6, n_pivots=16, n_groups=4,
+                                      seed=2), pivot_strategy=strategy)
+    assert index.config.pivot_strategy == strategy
+    assert index.pivots.shape == (16, 5)
+    res = knn_join(r, config=index.config, index=index)
+    bd, _ = brute_force_knn(r, s, 6)
+    np.testing.assert_allclose(res.distances, bd, atol=1e-4)
+    with pytest.raises(ValueError):
+        build_index(s, pivot_strategy="voronoi-magic")
+
+
 @pytest.mark.parametrize("grouping", ["geometric", "greedy", "none"])
 @pytest.mark.parametrize("strategy", ["random", "farthest", "kmeans"])
 def test_pgbj_exact_vs_bruteforce(grouping, strategy):

@@ -8,7 +8,8 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
-    JoinConfig, brute_force_knn, knn_join, plan_join)
+    JoinConfig, brute_force_knn, geometric_grouping, knn_join, plan_join,
+    replication_count_exact, replication_count_partitions)
 from repro.core.join import topk_merge
 from repro.data import expand_dataset, forest_like
 
@@ -66,6 +67,52 @@ def test_bounds_are_bounds(inst):
         sel = g_r == gg
         if sel.any():
             assert plan.s_replica_mask(gg)[np.unique(bi[sel])].all()
+
+
+@given(join_instance())
+@settings(max_examples=25, deadline=None)
+def test_replication_approx_upper_bounds_exact(inst):
+    """Grouping cost model: the Eq. 12 partition-level approximation
+    (whole partitions counted once their replication window opens — the
+    quantity greedy grouping minimizes) upper-bounds the Theorem-7 exact
+    replica count per group. Per partition j: if LB ≤ U(P_j) the approx
+    counts |P_j| ≥ the rows actually past LB; otherwise every row sits
+    below LB and both sides count zero."""
+    n_r, n_s, dim, k, m, g, grouping, seed = inst
+    rng = np.random.default_rng(seed + 7)
+    r = rng.normal(size=(n_r, dim)).astype(np.float32) * 2
+    s = rng.normal(size=(n_s, dim)).astype(np.float32) * 2
+    plan = plan_join(r, s, JoinConfig(k=k, n_pivots=m, n_groups=g,
+                                      grouping=grouping, seed=seed))
+    approx = replication_count_partitions(plan.lb_group, plan.t_s)
+    exact = replication_count_exact(plan.lb_group, plan.s_part,
+                                    plan.s_dist)
+    assert (approx >= exact).all()
+    # and the approximation can never promise less than shipping
+    # everything to every group would
+    assert (approx <= plan.t_s.counts.sum()).all()
+
+
+@given(join_instance())
+@settings(max_examples=25, deadline=None)
+def test_geometric_grouping_balance(inst):
+    """Algorithm 4's load balancing: because each step hands the
+    currently-smallest group one partition, a group's final population
+    can exceed the mean by at most one partition's population (the
+    paper's balance factor at partition granularity)."""
+    n_r, n_s, dim, k, m, g, grouping, seed = inst
+    rng = np.random.default_rng(seed + 11)
+    r = rng.normal(size=(n_r, dim)).astype(np.float32)
+    s = rng.normal(size=(n_s, dim)).astype(np.float32)
+    plan = plan_join(r, s, JoinConfig(k=k, n_pivots=m, n_groups=g,
+                                      grouping="geometric", seed=seed))
+    groups = geometric_grouping(plan.pivd, plan.t_r.counts, g)
+    assert groups.shape == (m,) and ((groups >= 0) & (groups < g)).all()
+    pops = np.bincount(groups, weights=plan.t_r.counts,
+                       minlength=g).astype(np.int64)
+    assert pops.sum() == plan.t_r.counts.sum()
+    limit = plan.t_r.counts.sum() / g + plan.t_r.counts.max()
+    assert (pops <= limit).all()
 
 
 @given(st.integers(1, 200), st.integers(1, 50), st.integers(1, 20),

@@ -200,3 +200,47 @@ def test_interpolation_limits():
                                atol=1e-3)
     np.testing.assert_allclose(p1[0] / p1[0].sum(), [0.05, 0.05, 0.9],
                                atol=1e-3)
+
+
+def test_bf16_ingestion_add_seal_query():
+    """Models emit bfloat16 hidden states (launch/serve.py): the
+    datastore boundary casts them to float32 exactly once — bf16 ⊂ f32,
+    so a bf16-fed store is bitwise the f32-fed one through
+    add → seal → query — and rejects non-float dtypes instead of
+    coercing them."""
+    from repro.core import build_index
+
+    rng = np.random.default_rng(3)
+    base = rng.normal(size=(300, 12)).astype(np.float32)
+    vals = rng.integers(0, 40, 300).astype(np.int32)
+    new = rng.normal(size=(180, 12)).astype(np.float32)
+    nv = rng.integers(0, 40, 180).astype(np.int32)
+    new_bf = jnp.asarray(new, jnp.bfloat16)         # lossy: the real input
+    new_f32 = np.asarray(new_bf).astype(np.float32)  # its exact f32 image
+
+    st_bf = Datastore.build(jnp.asarray(base, jnp.bfloat16), vals, k=5,
+                            n_pivots=24, seal_threshold=120)
+    st_f = Datastore.build(np.asarray(
+        jnp.asarray(base, jnp.bfloat16)).astype(np.float32), vals, k=5,
+        n_pivots=24, seal_threshold=120)
+    assert st_bf.keys.dtype == np.float32
+    ids_bf = st_bf.add_entries(new_bf, nv)           # crosses a seal
+    ids_f = st_f.add_entries(new_f32, nv)
+    np.testing.assert_array_equal(ids_bf, ids_f)
+    assert st_bf.index.n_segments >= 2               # delta sealed
+
+    q = rng.normal(size=(6, 12)).astype(np.float32)
+    kcfg = KnnLMConfig(k=5, tau=8.0)
+    np.testing.assert_array_equal(knn_logits(q, st_bf, kcfg, 40),
+                                  knn_logits(q, st_f, kcfg, 40))
+
+    # build_index takes bf16 too; ints are rejected, not coerced
+    idx = build_index(jnp.asarray(base, jnp.bfloat16),
+                      st_bf.config)
+    assert idx.s_sorted.dtype == np.float32
+    import pytest
+    with pytest.raises(TypeError):
+        build_index(base.astype(np.int32), st_bf.config)
+    with pytest.raises(TypeError):
+        st_bf.add_entries(np.ones((2, 12), np.int64),
+                          np.zeros(2, np.int32))
