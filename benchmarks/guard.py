@@ -21,6 +21,11 @@ claims rest on:
   the quantized path must be bitwise the fp32 oracle's output; anything
   but 1.0 fails regardless of the baseline (the bench itself also
   raises on divergence, this guards a silently-edited record).
+* ``kernel_serving_under_load`` — the serving scheduler's overload
+  contract: bounded ``p99_0p8x_s``, non-collapsing
+  ``goodput_2x_rows_s``, ``bitwise_equal`` on the exact path, and the
+  hard-zero ``deadline_violations_dispatched`` invariant (no request is
+  ever dispatched to a device after its deadline).
 
 Baselines: ``BENCH_kernels.json`` records the full-size sweep;
 ``BENCH_kernels_fast.json`` records the ``--fast`` (CI-sized) sweep —
@@ -47,10 +52,23 @@ CHECKS = [
     # fattened the codes/metadata), the coarse pass must not collapse
     ("kernel_quant_coarse_vs_fp32", "bytes_per_row_int8", "lower", 1.0),
     ("kernel_quant_coarse_vs_fp32", "coarse_speedup", "higher", 0.05),
+    # serving runtime (serve.scheduler): p99 at 0.8× saturation must
+    # stay bounded (absolute slack absorbs CI timer noise on a ~10ms
+    # metric), and goodput under 2× overload must not collapse — the
+    # degradation ladder is supposed to shed/degrade, not stall
+    ("kernel_serving_under_load", "p99_0p8x_s", "lower", 0.10),
+    ("kernel_serving_under_load", "goodput_2x_rows_s", "higher", 100.0),
 ]
-HARD_ZERO = [("kernel_megastep_vs_hostplanned", "device_steady_state_syncs")]
+HARD_ZERO = [("kernel_megastep_vs_hostplanned", "device_steady_state_syncs"),
+             # a request whose deadline passed may NEVER reach a device:
+             # the scheduler sheds at batch formation and re-checks
+             # across retry backoff — any nonzero count is a policy bug
+             ("kernel_serving_under_load", "deadline_violations_dispatched")]
 # metrics that must be exactly 1.0 in the current sweep, baseline or not
-HARD_ONE = [("kernel_quant_coarse_vs_fp32", "bitwise_equal")]
+HARD_ONE = [("kernel_quant_coarse_vs_fp32", "bitwise_equal"),
+            # the scheduler's exact (non-degraded) path is the engine
+            # verbatim — bitwise, not approximately
+            ("kernel_serving_under_load", "bitwise_equal")]
 
 
 def _rows(records: list, bench: str) -> list:

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Optional
 
 import jax
@@ -347,6 +348,14 @@ class MegastepEngine:
         self._struct = None        # (skey, struct dict)
         self._payload = None       # (vkey, _Payload)
         self._seg_cache: dict = {}
+        # payload rebuilds read multi-field index state (segments,
+        # tombstones, version); a mutation racing that read could cache
+        # a torn payload under a *valid* version key. Owners that mutate
+        # the index concurrently (serve.Datastore) point this at the
+        # same lock their mutations hold, making rebuild and mutation
+        # mutually exclusive. Reentrant so an owner already holding it
+        # can query.
+        self.refresh_lock: threading.RLock = threading.RLock()
 
     # ---- bucketing
 
@@ -368,29 +377,37 @@ class MegastepEngine:
     def _refresh(self) -> _Payload:
         import jax.numpy as jnp
 
-        segs, tomb, vkey = self._index_parts()
-        if self._payload is not None and self._payload[0] == vkey:
-            return self._payload[1]
-        if not segs:
-            raise ValueError("megastep over an empty index")
-        bn = self.config.tile_s
-        k = self.config.k
-        skey = (tuple(id(si) for si, _ in segs), bn, k)
-        if self._struct is None or self._struct[0] != skey:
-            self._struct = (skey, self._build_struct(segs, bn, k))
-        st = self._struct[1]
-        # liveness + tombstone count change per index version; the rows,
-        # geometry and tile stats above change only with the structure
-        alive = (st["gids"] >= 0) & ~_in_sorted(st["gids"], tomb)
-        payload = _Payload(
-            segs=st["segs_dev"],
-            tiles=dict(st["tiles_dev"],
-                       alive=jnp.asarray(alive.astype(np.float32))),
-            dead_total=jnp.asarray(np.int32(tomb.size)),
-            seg_meta=st["seg_meta"], dim=st["dim"],
-            n_finite_total=st["n_finite_total"], primary=st["primary"])
-        self._payload = (vkey, payload)
-        return payload
+        from repro.serve import faultinject
+
+        with self.refresh_lock:
+            segs, tomb, vkey = self._index_parts()
+            if self._payload is not None and self._payload[0] == vkey:
+                return self._payload[1]
+            if not segs:
+                raise ValueError("megastep over an empty index")
+            # fault hook: a failure here simulates a device OOM on the
+            # payload (re)upload — nothing is cached, the next call
+            # rebuilds from scratch
+            faultinject.fire("megastep.payload_upload")
+            bn = self.config.tile_s
+            k = self.config.k
+            skey = (tuple(id(si) for si, _ in segs), bn, k)
+            if self._struct is None or self._struct[0] != skey:
+                self._struct = (skey, self._build_struct(segs, bn, k))
+            st = self._struct[1]
+            # liveness + tombstone count change per index version; the
+            # rows, geometry and tile stats above change only with the
+            # structure
+            alive = (st["gids"] >= 0) & ~_in_sorted(st["gids"], tomb)
+            payload = _Payload(
+                segs=st["segs_dev"],
+                tiles=dict(st["tiles_dev"],
+                           alive=jnp.asarray(alive.astype(np.float32))),
+                dead_total=jnp.asarray(np.int32(tomb.size)),
+                seg_meta=st["seg_meta"], dim=st["dim"],
+                n_finite_total=st["n_finite_total"], primary=st["primary"])
+            self._payload = (vkey, payload)
+            return payload
 
     def _build_struct(self, segs, bn: int, k: int) -> dict:
         import jax.numpy as jnp
@@ -526,6 +543,8 @@ class MegastepEngine:
                 m for m, _, _ in payload.seg_meta)
         qd, nv = self.enqueue(q)
         d, hi, lo = self.join_batch_device(qd, nv)
+        from repro.serve import faultinject
+        faultinject.fire("megastep.fetch")     # simulated lost fetch
         d = np.asarray(d)[:n]
         ids = ((np.asarray(hi, np.int64) << 32)
                | (np.asarray(lo, np.int64) & np.int64(0xFFFFFFFF)))[:n]

@@ -201,14 +201,31 @@ class StreamJoinEngine:
     ) -> tuple[np.ndarray, np.ndarray]:
         """(dists, ids) for one micro-batch — true distances ascending,
         global S row indices."""
-        from .api import execute_join
-        from .segments import MutableIndex
-
         queries = np.ascontiguousarray(queries, np.float32)
         if stats is not None:
             stats.n_batches += 1
         if self._megastep is not None:
             return self._megastep.join_batch(queries, stats=stats)
+        return self._join_batch_host(queries, stats=stats)
+
+    def join_batch_host(
+        self, queries: np.ndarray, *, stats: Optional[JoinStats] = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """The host-planned oracle path for one micro-batch, regardless
+        of how this engine was constructed. Bitwise the same results as
+        ``join_batch`` (the exactness contract), but it owns no
+        device-resident payload — the serving scheduler retries
+        transiently-failed batches here, where an upload/fetch fault
+        cannot recur."""
+        queries = np.ascontiguousarray(queries, np.float32)
+        if stats is not None:
+            stats.n_batches += 1
+        return self._join_batch_host(queries, stats=stats)
+
+    def _join_batch_host(self, queries, *, stats=None):
+        from .api import execute_join
+        from .segments import MutableIndex
+
         if isinstance(self.index, MutableIndex):
             return self.index.join_batch(queries, config=self.config,
                                          stats=stats)

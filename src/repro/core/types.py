@@ -140,6 +140,13 @@ class JoinStats:
     # (exactness is unconditional; this counts how often the int8
     # shortlist alone could not prove it)
     n_quant_fallback: int = 0
+    # serving degradation (serve.scheduler): queries answered by the
+    # certified-approximate coarse-only path instead of the exact
+    # engine, and the minimum per-query certified recall lower bound
+    # across them (1.0 when nothing degraded — the exact paths always
+    # have recall 1)
+    n_degraded: int = 0
+    recall_bound: float = 1.0
 
     @property
     def selectivity(self) -> float:

@@ -46,11 +46,17 @@ class GroupExecutor:
     """Run per-group work with retries + speculative re-issue."""
 
     def __init__(self, max_retries: int = 2, speculate: bool = True,
-                 speculate_after: float = 0.75, max_workers: int = 4):
+                 speculate_after: float = 0.75, max_workers: int = 4,
+                 attempt_timeout: Optional[float] = None):
         self.max_retries = max_retries
         self.speculate = speculate
         self.speculate_after = speculate_after
         self.max_workers = max_workers
+        # per-attempt wall-clock budget (seconds): an attempt that
+        # exceeds it counts as a failure and is re-issued like any other
+        # — a hung group_fn can no longer stall the pool forever. None
+        # keeps the old block-until-done behavior.
+        self.attempt_timeout = attempt_timeout
 
     def run(self, group_fn: Callable[[int], Any], groups: List[int],
             ) -> Dict[int, GroupRun]:
@@ -61,15 +67,37 @@ class GroupExecutor:
             out = group_fn(g)
             return g, out, time.monotonic() - t0
 
+        def fail(g, r, cause):
+            counts = {gg: rr.attempts for gg, rr in runs.items()}
+            raise RuntimeError(
+                f"group {g} failed after {r.attempts} attempts "
+                f"(per-group attempt counts: {counts})") from cause
+
         pool = ThreadPoolExecutor(max_workers=self.max_workers)
         try:
             fut_group = {pool.submit(attempt, g): g for g in groups}
+            expiry = ({f: time.monotonic() + self.attempt_timeout
+                       for f in fut_group}
+                      if self.attempt_timeout is not None else {})
             pending = set(fut_group)
+
+            def reissue(g):
+                nf = pool.submit(attempt, g)
+                fut_group[nf] = g
+                if self.attempt_timeout is not None:
+                    expiry[nf] = time.monotonic() + self.attempt_timeout
+                pending.add(nf)
+
             speculated = False
             while pending:
                 if all(r.done for r in runs.values()):
                     break   # stragglers' twins won; don't wait for losers
-                done, pending = wait(pending, return_when=FIRST_COMPLETED)
+                budget = None
+                if self.attempt_timeout is not None:
+                    budget = max(0.0, min(expiry[f] for f in pending)
+                                 - time.monotonic())
+                done, pending = wait(pending, timeout=budget,
+                                     return_when=FIRST_COMPLETED)
                 for fut in done:
                     g = fut_group[fut]
                     r = runs[g]
@@ -78,16 +106,29 @@ class GroupExecutor:
                         if r.done:
                             continue  # a speculative twin already finished
                         if r.attempts > self.max_retries:
-                            raise RuntimeError(
-                                f"group {g} failed after {r.attempts} attempts"
-                            ) from fut.exception()
-                        nf = pool.submit(attempt, g)
-                        fut_group[nf] = g
-                        pending.add(nf)
+                            fail(g, r, fut.exception())
+                        reissue(g)
                         continue
                     _, out, secs = fut.result()
                     if not r.done:
                         r.done, r.result, r.seconds = True, out, secs
+                # timed-out attempts count as failures and are re-issued;
+                # the stuck thread is orphaned (threads can't be killed)
+                # and its eventual result, if any, is ignored
+                if self.attempt_timeout is not None:
+                    now = time.monotonic()
+                    for fut in [f for f in pending if expiry[f] <= now]:
+                        pending.discard(fut)
+                        g = fut_group[fut]
+                        r = runs[g]
+                        if r.done:
+                            continue
+                        r.attempts += 1
+                        if r.attempts > self.max_retries:
+                            fail(g, r, TimeoutError(
+                                f"group {g} attempt exceeded "
+                                f"{self.attempt_timeout}s"))
+                        reissue(g)
                 n_done = sum(r.done for r in runs.values())
                 if (self.speculate and not speculated
                         and n_done >= self.speculate_after * len(groups)
@@ -96,9 +137,7 @@ class GroupExecutor:
                     for g, r in runs.items():
                         if not r.done:
                             r.speculated = True
-                            nf = pool.submit(attempt, g)
-                            fut_group[nf] = g
-                            pending.add(nf)
+                            reissue(g)
         finally:
             pool.shutdown(wait=False, cancel_futures=True)
         return runs

@@ -202,8 +202,14 @@ class QuantMegastepEngine(MegastepEngine):
             metric=self.config.metric, dim=payload.dim,
             n_finite_total=payload.n_finite_total,
             seg_meta=payload.seg_meta, primary=payload.primary, impl=impl)
+        from repro.serve import faultinject
+        faultinject.fire("megastep.fetch")     # simulated lost fetch
         lb = np.asarray(lb)[:n]
         pos = np.asarray(pos)[:n]
+        # chaos site: deflating the certified lower bounds is exactly
+        # what inflated ε would do — downstream certification then fails
+        # and the fp32-oracle fallback must keep the output bitwise
+        lb = faultinject.transform_value("quant.eps_inflation", lb)
         gids = self._struct[1]["gids"]
         ids = np.where(pos >= 0,
                        gids[np.clip(pos, 0, gids.shape[0] - 1)], -1)
@@ -224,6 +230,33 @@ class QuantMegastepEngine(MegastepEngine):
         if n == 0:
             return (np.zeros((0, k), np.float32),
                     np.full((0, k), -1, np.int64))
+        out_d, out_i, lm = self._rerank_shortlist(q, stats=stats)
+        # certification: excluded coarse candidates all carry lb ≥ the
+        # run's last (largest) slot; +inf there means nothing was
+        # excluded at all. τ̂ is the exact reported k-th distance.
+        tau = out_d[:, k - 1]
+        bad = ~(lm >= tau)                   # NaN-safe: fail on weirdness
+        if bad.any():
+            fb_d, fb_i = self._oracle_join(q[bad])
+            out_d[bad] = fb_d
+            out_i[bad] = fb_i
+            if stats is not None:
+                stats.n_quant_fallback += int(bad.sum())
+        return out_d, out_i
+
+    def _rerank_shortlist(self, q: np.ndarray, *,
+                          stats: Optional[JoinStats] = None):
+        """Coarse shortlist → host gather → exact canonical re-rank.
+
+        Returns ``(out_d, out_i, lm)``: the exact-re-ranked top-k over
+        the shortlist and the per-query exclusion bound ``lm`` — every
+        row *not* in the shortlist has true distance ≥ ``lm`` (+inf when
+        the shortlist wasn't filled, i.e. nothing was excluded). Shared
+        by the certified-exact :meth:`join_batch` and the
+        certified-approximate :meth:`join_batch_approx`.
+        """
+        k = self.config.k
+        n = q.shape[0]
         lb, pos, ids = self.coarse_shortlist(q)
         payload = self._payload[1]
         if stats is not None:
@@ -236,19 +269,46 @@ class QuantMegastepEngine(MegastepEngine):
         d_all, ids_all = canonical_topk(q, ids, neigh, self.config.metric)
         out_d = np.ascontiguousarray(d_all[:, :k])
         out_i = np.ascontiguousarray(ids_all[:, :k])
-        # certification: excluded coarse candidates all carry lb ≥ the
-        # run's last (largest) slot; +inf there means nothing was
-        # excluded at all. τ̂ is the exact reported k-th distance.
-        lm = lb[:, -1]                       # +inf when run not filled
-        tau = d_all[:, k - 1]
-        bad = ~(lm >= tau)                   # NaN-safe: fail on weirdness
-        if bad.any():
-            fb_d, fb_i = self._oracle_join(q[bad])
-            out_d[bad] = fb_d
-            out_i[bad] = fb_i
-            if stats is not None:
-                stats.n_quant_fallback += int(bad.sum())
-        return out_d, out_i
+        return out_d, out_i, lb[:, -1]
+
+    def join_batch_approx(
+        self, queries: np.ndarray, *, stats: Optional[JoinStats] = None,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Coarse-only certified-*approximate* join — the serving
+        scheduler's degraded rung. Same coarse shortlist + exact re-rank
+        as :meth:`join_batch`, but certification failures do **not**
+        re-run through the fp32 oracle; instead every query reports a
+        *certified recall lower bound* derived from the ε machinery.
+
+        Returns ``(dists, ids, recall_bound)`` with ``recall_bound[i] =
+        #{j : dists[i, j] ≤ lm_i} / k``, where ``lm_i`` bounds every
+        excluded row's true distance from below. A reported neighbor
+        with distance ≤ lm has global rank ≤ its shortlist rank ≤ k, so
+        it provably belongs to the true top-k — the bound counts only
+        such neighbors and is therefore sound, never optimistic. An
+        unfilled shortlist (lm = +inf) excluded nothing: the result is
+        exact and the bound is 1. Reported distances are always exact
+        (the re-rank is fp32-canonical); only *membership* of the true
+        top-k is approximate.
+        """
+        q = np.ascontiguousarray(queries, np.float32)
+        n = q.shape[0]
+        k = self.config.k
+        if k > self.index.n_s:
+            raise ValueError(f"k={k} > |S|={self.index.n_s}")
+        if n == 0:
+            return (np.zeros((0, k), np.float32),
+                    np.full((0, k), -1, np.int64),
+                    np.ones((0,), np.float32))
+        out_d, out_i, lm = self._rerank_shortlist(q, stats=stats)
+        with np.errstate(invalid="ignore"):
+            proven = out_d <= lm[:, None]      # NaN-safe: counts False
+        recall = proven.sum(axis=1).astype(np.float32) / np.float32(k)
+        if stats is not None:
+            stats.n_degraded += n
+            stats.recall_bound = min(stats.recall_bound,
+                                     float(recall.min()))
+        return out_d, out_i, recall
 
     def _oracle_join(self, q: np.ndarray):
         """The fp32 host-planned oracle for certification failures —

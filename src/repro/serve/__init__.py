@@ -1,5 +1,47 @@
-from .serve_step import BatchedServer, ServeConfig, make_serve_step, sample
-from .retrieval import Datastore, KnnLMConfig, interpolate, knn_logits
+"""Serving: batched generation, the kNN-LM datastore, and the
+overload-robust scheduler/fault-injection runtime in front of them.
 
-__all__ = ["BatchedServer", "ServeConfig", "make_serve_step", "sample",
-           "Datastore", "KnnLMConfig", "interpolate", "knn_logits"]
+Lazy (PEP 562) exports: ``core.megastep`` fires `faultinject` hook
+sites, so importing this package must stay light — `serve_step` pulls
+the model stack, and eager imports here would make every core join
+import transformers-sized modules (and a circular import to boot).
+"""
+import importlib
+
+_EXPORTS = {
+    "BatchedServer": "serve_step",
+    "ServeConfig": "serve_step",
+    "make_serve_step": "serve_step",
+    "make_knn_hook": "serve_step",
+    "sample": "serve_step",
+    "Datastore": "retrieval",
+    "KnnLMConfig": "retrieval",
+    "interpolate": "retrieval",
+    "knn_logits": "retrieval",
+    "Arrival": "scheduler",
+    "LoadReport": "scheduler",
+    "Priority": "scheduler",
+    "SchedulerConfig": "scheduler",
+    "SchedulerStats": "scheduler",
+    "ServeScheduler": "scheduler",
+    "Ticket": "scheduler",
+    "VirtualClock": "scheduler",
+    "bursty_times": "scheduler",
+    "poisson_times": "scheduler",
+    "run_open_loop": "scheduler",
+    "FaultPlan": "faultinject",
+    "InjectedFault": "faultinject",
+}
+
+__all__ = sorted(_EXPORTS) + ["faultinject", "scheduler"]
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(f".{mod}", __name__), name)
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,166 @@
+"""Fault-injection hooks for the serving runtime.
+
+``distributed/fault.py`` ports MapReduce's resilience model (idempotent
+re-execution, speculation) to the *offline* join; this module extends
+the same philosophy into the serving loop, where failures are transient
+device-side events — an OOM on payload upload, a failed result fetch, a
+poisoned batch — and the recovery is a capped-backoff retry onto the
+host-planned oracle path (every engine's results are deterministic
+functions of (query rows, index), so re-execution on any path is always
+safe, exactly the §2.2 JobTracker contract).
+
+Production code *fires* named hook sites; tests and chaos drills *arm*
+a :class:`FaultPlan` that decides what happens there. With no plan
+armed (the default), every site is a no-op costing one ``None`` check.
+
+Hook sites wired into this codebase:
+
+* ``megastep.payload_upload`` — fired by ``core.megastep.MegastepEngine
+  ._refresh`` when the device-resident index payload is (re)built and
+  uploaded; failing it simulates a device OOM at upload time.
+* ``megastep.fetch`` — fired just before a device→host result fetch
+  (``MegastepEngine.join_batch`` and the quantized tier's
+  ``coarse_shortlist``); failing it simulates a lost fetch.
+* ``sched.dispatch`` — fired by ``serve.scheduler.ServeScheduler`` just
+  before a formed batch is handed to an engine; failing it simulates a
+  poisoned batch.
+* ``quant.eps_inflation`` — a *transform* site over the quantized
+  tier's certified lower bounds (``QuantMegastepEngine
+  .coarse_shortlist``): shrinking them is exactly what inflated ε
+  errors would do, so a transform here forces certificate failures and
+  exercises the fp32-oracle fallback deliberately
+  (tests/test_quant.py pins that the output stays bitwise-exact).
+
+Usage::
+
+    with FaultPlan().fail("megastep.payload_upload", times=2):
+        scheduler.step()          # first 2 uploads raise InjectedFault
+
+    with FaultPlan().transform("quant.eps_inflation",
+                               lambda lb: lb - 1e9):
+        engine.join_batch(q)      # every certificate fails -> fallback
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+__all__ = ["FaultPlan", "InjectedFault", "fire", "transform_value",
+           "retry_with_backoff"]
+
+
+class InjectedFault(RuntimeError):
+    """Raised by an armed hook site — the serving loop treats it exactly
+    like the real transient failure it stands in for."""
+
+    def __init__(self, site: str, message: Optional[str] = None):
+        super().__init__(message or f"injected fault at {site!r}")
+        self.site = site
+
+
+class FaultPlan:
+    """A per-site schedule of injected failures and value transforms.
+
+    Context-manager armed: sites fire only while the plan is active, and
+    ``fired`` counts every hook crossing (armed or not scheduled), so
+    tests can assert a site was actually reached. Thread-safe — the
+    serving loop fires from worker threads.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._fail: Dict[str, list] = {}        # site -> [remaining, exc]
+        self._transform: Dict[str, Callable] = {}
+        self.fired: Dict[str, int] = {}
+
+    # ---- arming ----------------------------------------------------
+
+    def fail(self, site: str, *, times: int = 1,
+             exc: Optional[Exception] = None) -> "FaultPlan":
+        """The next ``times`` crossings of ``site`` raise (``exc`` or an
+        :class:`InjectedFault`); later crossings pass."""
+        self._fail[site] = [int(times), exc]
+        return self
+
+    def transform(self, site: str, fn: Callable[[Any], Any]) -> "FaultPlan":
+        """Every crossing of the transform site maps its value through
+        ``fn`` (e.g. deflate certified bounds = inflate ε)."""
+        self._transform[site] = fn
+        return self
+
+    # ---- the hook side ---------------------------------------------
+
+    def _fire(self, site: str) -> None:
+        with self._lock:
+            self.fired[site] = self.fired.get(site, 0) + 1
+            ent = self._fail.get(site)
+            if ent is None or ent[0] <= 0:
+                return
+            ent[0] -= 1
+            exc = ent[1]
+        raise exc if exc is not None else InjectedFault(site)
+
+    def _transform_value(self, site: str, value):
+        with self._lock:
+            self.fired[site] = self.fired.get(site, 0) + 1
+            fn = self._transform.get(site)
+        return value if fn is None else fn(value)
+
+    # ---- arming scope ----------------------------------------------
+
+    def __enter__(self) -> "FaultPlan":
+        global _PLAN
+        if _PLAN is not None:
+            raise RuntimeError("a FaultPlan is already armed")
+        _PLAN = self
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        global _PLAN
+        _PLAN = None
+        return False
+
+
+_PLAN: Optional[FaultPlan] = None
+
+
+def fire(site: str) -> None:
+    """Production-side hook: raise if an armed plan scheduled a failure
+    here; free (one None check) otherwise."""
+    plan = _PLAN
+    if plan is not None:
+        plan._fire(site)
+
+
+def transform_value(site: str, value):
+    """Production-side transform hook: map ``value`` through the armed
+    plan's transform for ``site`` (identity when unarmed)."""
+    plan = _PLAN
+    if plan is None:
+        return value
+    return plan._transform_value(site, value)
+
+
+def retry_with_backoff(fn: Callable[[int], Any], *, max_retries: int,
+                       base_s: float, cap_s: float,
+                       sleep: Callable[[float], None] = time.sleep,
+                       retriable: tuple = (Exception,)):
+    """Capped-exponential-backoff retry driver — the serving-loop
+    analogue of ``distributed.fault.GroupExecutor``'s bounded re-issue.
+
+    Calls ``fn(attempt)`` (attempt 0 = first try); on a retriable
+    failure sleeps ``min(base_s * 2**attempt, cap_s)`` and re-calls
+    with the next attempt number — the callee routes later attempts
+    onto a safer path (the host-planned oracle). Raises the last error
+    after ``max_retries`` retries.
+    """
+    attempt = 0
+    while True:
+        try:
+            return fn(attempt)
+        except retriable:
+            if attempt >= max_retries:
+                raise
+            sleep(min(base_s * (2.0 ** attempt), cap_s))
+            attempt += 1

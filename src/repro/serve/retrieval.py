@@ -38,6 +38,7 @@ degrades to the log-floor distribution rather than NaN.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Optional
 
 import jax
@@ -59,6 +60,14 @@ class Datastore:
     # one resident engine per k: the megastep's uploaded index payload
     # and compiled step live here and survive across decode steps
     _engines: dict = dataclasses.field(default_factory=dict, repr=False)
+    # guards every mutation (add/remove/compact), the engine cache, and
+    # — via each engine's ``refresh_lock`` — the megastep payload
+    # rebuild, so a mutation racing a query can never tear the
+    # (segments, tombstones, version) read a payload is built from.
+    # Queries themselves run lock-free with an optimistic version check
+    # (``retrieve``): they hold the lock only for snapshot/recheck.
+    _lock: object = dataclasses.field(default_factory=threading.RLock,
+                                      repr=False)
 
     @property
     def quantized(self) -> bool:
@@ -109,24 +118,27 @@ class Datastore:
         if keys.shape[0] != values.shape[0]:
             raise ValueError(
                 f"{keys.shape[0]} keys but {values.shape[0]} values")
-        ids = self.index.insert(keys)
-        self.keys = np.concatenate([self.keys, keys], axis=0)
-        self.values = np.concatenate([self.values, values])
+        with self._lock:
+            ids = self.index.insert(keys)
+            self.keys = np.concatenate([self.keys, keys], axis=0)
+            self.values = np.concatenate([self.values, values])
         return ids
 
     def remove_entries(self, ids) -> None:
         """Tombstone entries by global id — O(|ids|), no segment touched;
         the rows stop being retrievable from the next batch on."""
-        self.index.delete(ids)
+        with self._lock:
+            self.index.delete(ids)
 
     def compact(self) -> np.ndarray:
         """Fold segments + tombstones into one rebuilt base (between
         decode steps); re-bases ids to ``0..n_live-1`` and remaps the
         row-aligned keys/values tables. Returns the old ids in new-id
         order."""
-        old_ids = self.index.compact()
-        self.keys = np.ascontiguousarray(self.keys[old_ids])
-        self.values = np.ascontiguousarray(self.values[old_ids])
+        with self._lock:
+            old_ids = self.index.compact()
+            self.keys = np.ascontiguousarray(self.keys[old_ids])
+            self.values = np.ascontiguousarray(self.values[old_ids])
         return old_ids
 
     def engine(self, k: Optional[int] = None) -> StreamJoinEngine:
@@ -134,16 +146,66 @@ class Datastore:
         count), created once and cached: repeat decode steps reuse the
         megastep's device-resident payload and compiled step instead of
         re-padding and re-planning. Mutations are picked up through the
-        index version — no engine invalidation needed."""
+        index version — no engine invalidation needed (the engine's
+        payload rebuild shares this store's lock, so it can never cache
+        a half-swapped snapshot under a valid version key)."""
         kk = self.config.k if k is None else int(k)
-        eng = self._engines.get(kk)
-        if eng is None:
-            cfg = self.config if kk == self.config.k \
-                else dataclasses.replace(self.config, k=kk)
-            eng = StreamJoinEngine(self.index, cfg, megastep="auto",
-                                   quantized=self.quantized)
-            self._engines[kk] = eng
+        with self._lock:
+            eng = self._engines.get(kk)
+            if eng is None:
+                cfg = self.config if kk == self.config.k \
+                    else dataclasses.replace(self.config, k=kk)
+                eng = StreamJoinEngine(self.index, cfg, megastep="auto",
+                                       quantized=self.quantized)
+                me = eng.megastep_engine
+                if me is not None:
+                    me.refresh_lock = self._lock
+                self._engines[kk] = eng
         return eng
+
+    def retrieve(self, queries: np.ndarray, k: Optional[int] = None, *,
+                 stats=None, max_retries: int = 8):
+        """Join one batch against the live index with a *consistent*
+        snapshot: returns ``(dists, ids, values)`` where ``values`` is
+        the value table matching exactly the index version the results
+        came from — a mutation racing the query can never yield a mixed
+        answer (ids from one version looked up in another's table).
+
+        Optimistic concurrency: snapshot (version, values, engine) under
+        the lock, join lock-free, recheck the version; on a concurrent
+        mutation retry, and after ``max_retries`` collisions finish the
+        join while *holding* the lock (writers block briefly — bounded
+        starvation instead of unbounded retries)."""
+        queries = np.ascontiguousarray(queries, np.float32)
+        for _ in range(max_retries):
+            with self._lock:
+                v0 = self.index.version
+                values = self.values
+                eng = self.engine(k)
+            try:
+                d, idx = eng.join_batch(queries, stats=stats)
+            except Exception:
+                with self._lock:
+                    if self.index.version != v0:
+                        continue     # mutated mid-join; retry, not a fault
+                raise
+            with self._lock:
+                if self.index.version == v0:
+                    return d, idx, values
+        with self._lock:             # write-heavy: serialize this one
+            d, idx = self.engine(k).join_batch(queries, stats=stats)
+            return d, idx, self.values
+
+    def lookup_tokens(self, ids: np.ndarray,
+                      values: Optional[np.ndarray] = None) -> np.ndarray:
+        """Map global ids → tokens against ``values`` (a snapshot from
+        :meth:`retrieve`) or the current table; padding ids (−1) map to
+        token 0 — callers mask their weight anyway."""
+        if values is None:
+            with self._lock:
+                values = self.values
+        toks = values[np.clip(ids, 0, values.shape[0] - 1)]
+        return np.where(ids >= 0, toks, 0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,7 +219,9 @@ _LOG_FLOOR = np.float32(np.log(1e-9))
 
 
 def knn_logits(queries: np.ndarray, store: Datastore, kcfg: KnnLMConfig,
-               vocab: int, *, use_kernel: bool = False) -> np.ndarray:
+               vocab: int, *, use_kernel: bool = False,
+               scheduler=None, deadline_s: Optional[float] = None,
+               ) -> np.ndarray:
     """Retrieval distribution per query, (B, vocab) log-space.
 
     ``use_kernel=False`` (default) runs the batch through the
@@ -171,13 +235,27 @@ def knn_logits(queries: np.ndarray, store: Datastore, kcfg: KnnLMConfig,
     are excluded from the softmax, and a query with zero finite
     neighbors gets the flat log-floor row (never NaN, never a wraparound
     read of ``values[-1]``).
+
+    ``scheduler`` (a ``serve.scheduler.ServeScheduler``) routes the
+    batch through admission control instead of calling the engine
+    directly: under overload the result may be certified-approximate,
+    and a shed/rejected batch degrades to the log-floor rows — the
+    interpolation then falls back to the LM distribution alone, which
+    is the graceful failure mode for retrieval under pressure.
+    ``deadline_s`` bounds the retrieval's staleness in that path.
     """
     queries = np.ascontiguousarray(queries, np.float32)
     nq = queries.shape[0]
     k_eff = min(kcfg.k, store.index.n_s)
     if k_eff == 0:
         return np.full((nq, vocab), _LOG_FLOOR, np.float32)
-    if use_kernel:
+    values = None
+    if scheduler is not None:
+        t = scheduler.join_now(queries, deadline_s=deadline_s)
+        if not t.done:               # shed/rejected: LM-only this step
+            return np.full((nq, vocab), _LOG_FLOOR, np.float32)
+        d, idx = t.distances, t.indices
+    elif use_kernel:
         rows_dev, gids = store.index.live_device_rows()
         d, local = distance_topk(jnp.asarray(queries), rows_dev, k_eff)
         d = np.asarray(d)
@@ -185,7 +263,7 @@ def knn_logits(queries: np.ndarray, store: Datastore, kcfg: KnnLMConfig,
         idx = np.where(local >= 0,
                        gids[np.clip(local, 0, gids.shape[0] - 1)], -1)
     else:
-        d, idx = store.engine(k_eff).join_batch(queries)
+        d, idx, values = store.retrieve(queries, k_eff)
     valid = (idx >= 0) & np.isfinite(d)
     x = np.where(valid, -to_cmp(d, store.config.metric) / kcfg.tau,
                  -np.inf).astype(np.float32)
@@ -196,8 +274,7 @@ def knn_logits(queries: np.ndarray, store: Datastore, kcfg: KnnLMConfig,
     e = np.where(valid, np.exp(x - m), np.float32(0.0)).astype(np.float32)
     z = e.sum(axis=1, keepdims=True)
     w = e / np.maximum(z, np.float32(1e-30))
-    toks = store.values[np.clip(idx, 0, store.values.shape[0] - 1)]  # (B,k)
-    toks = np.where(idx >= 0, toks, 0)          # masked: w is 0 anyway
+    toks = store.lookup_tokens(idx, values)     # (B, k); masked: w is 0
     probs = np.zeros((nq, vocab), np.float32)
     np.add.at(probs, (np.arange(nq)[:, None], toks), w)
     return np.log(np.maximum(probs, 1e-9))

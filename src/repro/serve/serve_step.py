@@ -44,6 +44,38 @@ def make_serve_step(cfg: ArchConfig, scfg: ServeConfig,
     return prefill_step, decode_step
 
 
+def make_knn_hook(store, kcfg, vocab: int, *, scheduler=None,
+                  deadline_s: Optional[float] = None,
+                  query_fn: Optional[Callable] = None) -> Callable:
+    """Build a ``logits_hook`` for :class:`BatchedServer` that
+    interpolates each decode step's logits with kNN-LM retrieval from
+    ``store`` (a ``serve.Datastore``) — optionally *through* a
+    ``serve.scheduler.ServeScheduler``, which is how a deployment puts
+    admission control, deadlines and graceful degradation in front of
+    the retrieval join: an overloaded or past-deadline step falls back
+    to the LM distribution alone instead of stalling the decode lane.
+
+    ``query_fn(logits, cache) -> (B, D) float32`` maps the decode state
+    to retrieval queries; the default uses the leading logit slice the
+    launch example uses (stand-in for the pre-softmax hidden state).
+    """
+    from .retrieval import interpolate, knn_logits
+
+    if query_fn is None:
+        dim = store.keys.shape[1]
+
+        def query_fn(logits, cache):
+            return np.asarray(logits)[:, :dim].astype(np.float32)
+
+    def hook(logits, cache):
+        q = query_fn(logits, cache)
+        lg = knn_logits(q, store, kcfg, vocab, scheduler=scheduler,
+                        deadline_s=deadline_s)
+        return interpolate(logits, lg, kcfg.lam)
+
+    return hook
+
+
 def sample(logits: jnp.ndarray, temperature: float, key) -> jnp.ndarray:
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)

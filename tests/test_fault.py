@@ -101,3 +101,76 @@ def test_regroup_noop():
     r = rng.normal(size=(100, 3)).astype(np.float32)
     plan = plan_join(r, r, JoinConfig(k=3, n_pivots=8, n_groups=4))
     assert regroup(plan, 4) is plan
+
+
+def test_attempt_timeout_reissues_hung_group():
+    """A hung group_fn attempt times out, counts as a failure, and is
+    re-issued — the pool no longer blocks forever on one wedged task."""
+    hung_once = threading.Event()
+    release = threading.Event()     # set at test end: frees the zombie
+                                    # thread so pytest exit isn't delayed
+
+    def group_fn(g):
+        if g == 1 and not hung_once.is_set():
+            hung_once.set()
+            release.wait(30.0)      # "forever" — well past the timeout
+        return g * 10
+
+    try:
+        ex = GroupExecutor(max_retries=2, speculate=False, max_workers=4,
+                           attempt_timeout=0.3)
+        t0 = time.monotonic()
+        runs = ex.run(group_fn, list(range(4)))
+        elapsed = time.monotonic() - t0
+    finally:
+        release.set()
+    assert all(r.done for r in runs.values())
+    assert runs[1].result == 10 and runs[1].attempts >= 2
+    assert elapsed < 5.0, "the hung attempt must not be waited out"
+
+
+def test_attempt_timeout_exhausted_raises_with_attempt_counts():
+    """Every attempt of one group hangs: the run fails with a TimeoutError
+    cause and the error message reports per-group attempt counts."""
+    release = threading.Event()
+
+    def group_fn(g):
+        if g == 0:
+            release.wait(30.0)
+            raise RuntimeError("released before completing")
+        return g
+
+    try:
+        ex = GroupExecutor(max_retries=1, speculate=False, max_workers=4,
+                           attempt_timeout=0.2)
+        with pytest.raises(RuntimeError, match="attempt counts") as ei:
+            ex.run(group_fn, [0, 1])
+    finally:
+        release.set()
+    assert "group 0 failed after 2 attempts" in str(ei.value)
+    assert isinstance(ei.value.__cause__, TimeoutError)
+
+
+def test_attempt_timeout_none_keeps_blocking_semantics():
+    """Default attempt_timeout=None: slow-but-finite work completes
+    normally (no spurious re-issues)."""
+    def group_fn(g):
+        time.sleep(0.05)
+        return g
+
+    ex = GroupExecutor(max_retries=0, speculate=False, max_workers=2)
+    runs = ex.run(group_fn, list(range(4)))
+    assert all(r.done and r.attempts == 1 for r in runs.values())
+
+
+def test_failure_message_includes_attempt_counts():
+    """The exception-path RuntimeError also carries the per-group
+    attempt counts (the satellite's observability ask)."""
+    def group_fn(g):
+        if g == 2:
+            raise RuntimeError("dead node")
+        return g
+
+    ex = GroupExecutor(max_retries=1, speculate=False, max_workers=2)
+    with pytest.raises(RuntimeError, match="attempt counts"):
+        ex.run(group_fn, list(range(4)))

@@ -349,3 +349,82 @@ def test_build_index_quantize_kwarg():
     assert bool(index._quant)
     with pytest.raises(ValueError):
         build_index(s, JoinConfig(k=5), quantize="int4")
+
+
+def test_quant_forced_cert_failure_via_fault_hook():
+    """Satellite of the serving-runtime PR: *force* certificate failures
+    through the ``quant.eps_inflation`` fault hook (deflating the
+    certified lower bounds is what inflated ε would do) and pin that the
+    fallback engages (``n_quant_fallback``) while the output stays
+    bitwise the oracle's — the fallback branch exercised deliberately,
+    not incidentally."""
+    from repro.serve import FaultPlan
+
+    r = _data(60, 8, 20)
+    s = _data(500, 8, 21)
+    cfg = JoinConfig(k=5, n_pivots=16, n_groups=4, seed=1)
+    index = build_index(s, cfg)
+    host = knn_join(r, config=cfg, index=index)
+    eng = QuantMegastepEngine(index, cfg)
+
+    stats = JoinStats()
+    with FaultPlan().transform("quant.eps_inflation",
+                               lambda lb: lb - np.float32(1e9)) as plan:
+        lb, _, _ = eng.coarse_shortlist(r)
+        d, i = eng.join_batch(r, stats=stats)
+    assert plan.fired["quant.eps_inflation"] == 2
+    # every filled shortlist must fail its certificate (an *unfilled*
+    # shortlist excluded nothing — lm stays +inf and certifies soundly
+    # no matter how far the bounds are deflated)
+    expected = int(np.isfinite(lb[:, -1]).sum())
+    assert 0 < expected == stats.n_quant_fallback
+    np.testing.assert_array_equal(d, host.distances)
+    np.testing.assert_array_equal(i, host.indices)
+
+    # hook disarmed: certification recovers, fallback back to rare
+    stats2 = JoinStats()
+    d2, i2 = eng.join_batch(r, stats=stats2)
+    assert stats2.n_quant_fallback < r.shape[0]
+    np.testing.assert_array_equal(d2, host.distances)
+
+
+def test_quant_degraded_mode_recall_bound_sound():
+    """join_batch_approx (the scheduler's degraded rung): distances are
+    exact per reported neighbor and the certified recall bound never
+    exceeds the true recall — including under adversarially shrunk
+    shortlists and fault-deflated bounds (bound collapses toward 0,
+    never lies)."""
+    from repro.serve import FaultPlan
+
+    r = _data(80, 8, 30)
+    s = _data(600, 8, 31)
+    cfg = JoinConfig(k=6, n_pivots=16, n_groups=4, seed=2)
+    index = build_index(s, cfg)
+    host = knn_join(r, config=cfg, index=index)
+
+    for slack, plan_fn in [(0, None), (64, None),
+                           (64, lambda: FaultPlan().transform(
+                               "quant.eps_inflation",
+                               lambda lb: lb * np.float32(0.5)))]:
+        eng = QuantMegastepEngine(index, cfg, slack=slack)
+        stats = JoinStats()
+        if plan_fn is None:
+            d, i, rb = eng.join_batch_approx(r, stats=stats)
+        else:
+            with plan_fn():
+                d, i, rb = eng.join_batch_approx(r, stats=stats)
+        assert rb.shape == (r.shape[0],)
+        assert (rb >= 0).all() and (rb <= 1).all()
+        assert stats.n_degraded == r.shape[0]
+        assert stats.recall_bound == pytest.approx(float(rb.min()))
+        for q in range(r.shape[0]):
+            true_set = set(host.indices[q].tolist())
+            got = set(x for x in i[q].tolist() if x >= 0)
+            true_recall = len(true_set & got) / cfg.k
+            assert true_recall >= float(rb[q]) - 1e-6
+            # reported distances are exact for the reported ids
+            alive = i[q] >= 0
+            np.testing.assert_allclose(
+                d[q][alive],
+                np.linalg.norm(r[q][None, :] - s[i[q][alive]], axis=1),
+                rtol=1e-5, atol=1e-5)
