@@ -1,0 +1,77 @@
+"""Regenerate the quantized tier's tuning table (`repro.quant.autotune`).
+
+Sweeps fp32-vs-int8 (and the int8 shortlist size ``mp``) at the corpus
+shapes the benches and the serving bench actually hit, and writes the
+winners to the committed table (``src/repro/quant/TUNE_quant.json`` by
+default, override with ``REPRO_QUANT_TUNE_TABLE``). CI never sweeps —
+it ships this artifact; rerun this module when the kernels, the
+hardware, or the bench shapes change:
+
+    PYTHONPATH=src python -m benchmarks.tune_quant [--out PATH] [--fast]
+
+The table is keyed on ``(backend, dim, pow2-bucketed n_rows, k)``, so
+one run on a CPU host and one on a TPU host can share a file — entries
+for other backends are preserved, only the current backend's cells are
+refreshed.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+# (dim, n_rows, k) cells to sweep: the kernel_quant_coarse_vs_fp32 bench
+# shape (full + --fast size) and the serving_under_load bench shape.
+SHAPES = [
+    (32, 20000, 10),   # quant bench, full sweep
+    (32, 3000, 10),    # quant bench, --fast (CI) sweep
+    (16, 20000, 8),    # serving bench, full sweep
+    (16, 3000, 8),     # serving bench, --fast (CI) sweep
+]
+
+
+def main() -> None:
+    import jax
+
+    from repro.core import JoinConfig, build_index
+    from repro.data import clustered_like
+    from repro.quant import autotune
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="table path (default: the committed "
+                         "src/repro/quant/TUNE_quant.json)")
+    ap.add_argument("--fast", action="store_true",
+                    help="sweep only the CI-sized (n=3000) cells")
+    ap.add_argument("--iters", type=int, default=3,
+                    help="timing iterations per candidate (best-of)")
+    args = ap.parse_args()
+
+    path = args.out or autotune.default_table_path()
+    backend = jax.default_backend()
+    table = (autotune.TuningTable.load(path) if os.path.exists(path)
+             else autotune.TuningTable())
+
+    shapes = [s for s in SHAPES if not args.fast or s[1] <= 4096]
+    for dim, n_rows, k in shapes:
+        cfg = JoinConfig(k=k, n_pivots=64, n_groups=8, seed=3)
+        s = clustered_like(n_rows, dim, seed=0)
+        index = build_index(s, cfg)
+        t0 = time.perf_counter()
+        tuned = autotune.sweep_config(index, cfg, iters=args.iters)
+        dt = time.perf_counter() - t0
+        key = autotune.table_key(dim, n_rows, k, backend)
+        table.entries[key] = tuned
+        print(f"{key}: mode={tuned.mode} mp={tuned.mp or '-'} "
+              f"int8={tuned.int8_batch_s * 1e3:.2f}ms "
+              f"fp32={tuned.fp32_batch_s * 1e3:.2f}ms "
+              f"(swept in {dt:.1f}s)")
+
+    table.save(path)
+    autotune.reset_default_table()
+    print(f"wrote {len(table.entries)} entries to {path}")
+
+
+if __name__ == "__main__":
+    main()

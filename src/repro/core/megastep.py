@@ -54,7 +54,7 @@ from .metrics import canonical_gathered
 from .schedule import compact_visits_jnp, visit_mask_jnp
 from .types import JoinConfig, JoinStats
 
-__all__ = ["MegastepEngine", "trace_count"]
+__all__ = ["MegastepEngine", "JoinHandle", "trace_count"]
 
 _TRACE_COUNT = 0
 
@@ -63,6 +63,14 @@ def trace_count() -> int:
     """Number of megastep traces (== jit cache misses) this process has
     paid. Steady-state serving must not grow this — pinned by tests."""
     return _TRACE_COUNT
+
+
+def _bump_trace() -> None:
+    """Called from inside a jitted megastep body: runs at trace time only,
+    so every execution after the first is invisible to `trace_count`.
+    Shared with the quantized tier's fused megastep (repro.quant.engine)."""
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
 
 
 def _next_pow2(n: int) -> int:
@@ -170,8 +178,7 @@ def _megastep(q, n_valid, dead_total, segs, tiles, state, *,
     part of the jit cache key, so a changed segment structure retraces
     while steady-state batches hit the cache.
     """
-    global _TRACE_COUNT
-    _TRACE_COUNT += 1          # runs at trace time only == jit cache miss
+    _bump_trace()              # runs at trace time only == jit cache miss
 
     import jax.numpy as jnp
 
@@ -297,6 +304,28 @@ class _Payload:
     primary: int
 
 
+@dataclasses.dataclass
+class JoinHandle:
+    """An in-flight batch: device futures from :meth:`MegastepEngine.
+    dispatch`, redeemed by :meth:`MegastepEngine.finalize`.
+
+    JAX dispatches jitted calls asynchronously (on CPU too), so the
+    arrays in ``dev`` are futures — the device computes while the host
+    does other work (the serving scheduler's double-buffered dispatch
+    overlaps batch N's finalize with batch N+1's dispatch through exactly
+    this split). ``kind`` routes finalize: the fp32 megastep ("mega"),
+    the quantized tier's fused resident path ("quant_resident") and its
+    low-memory host-gather fallback ("quant_host"); ``q`` keeps the
+    original query rows only where finalize may need a host-side
+    fallback re-run (the quantized certification paths).
+    """
+
+    kind: str
+    n: int
+    dev: tuple = ()
+    q: Optional[np.ndarray] = None
+
+
 def _in_sorted(ids: np.ndarray, sorted_ids: np.ndarray) -> np.ndarray:
     if sorted_ids.size == 0:
         return np.zeros(ids.shape, bool)
@@ -326,6 +355,11 @@ class MegastepEngine:
     refresh — the steady state between mutations transfers nothing.
     """
 
+    # the join_batch path splits into an async dispatch() + finalize()
+    # pair — what StreamJoinEngine.can_dispatch and the serving
+    # scheduler's double-buffered mode key on
+    can_dispatch = True
+
     def __init__(self, index, config: Optional[JoinConfig] = None, *,
                  bucket_min: int = 16, impl: Optional[str] = None):
         self.index = index
@@ -339,6 +373,11 @@ class MegastepEngine:
             raise ValueError(f"unknown megastep impl {impl!r}")
         self.impl = impl           # None = auto (pallas on TPU, ref here)
         self.bucket_min = max(1, int(bucket_min))
+        # tile shapes actually used on device. Defaults follow the config;
+        # the quantized tier overrides them from its measured tuning table
+        # (repro.quant.autotune) after super().__init__.
+        self._bn = int(self.config.tile_s)
+        self._bm_cap = 1 << (int(self.config.tile_r).bit_length() - 1)
         # the quantized subclass (repro.quant.engine) keeps the fp32 rows
         # host-side and uploads int8 codes instead — 4× less HBM resident
         # — and resolves global ids host-side, so it skips the (hi, lo)
@@ -389,7 +428,7 @@ class MegastepEngine:
             # payload (re)upload — nothing is cached, the next call
             # rebuilds from scratch
             faultinject.fire("megastep.payload_upload")
-            bn = self.config.tile_s
+            bn = self._bn
             k = self.config.k
             skey = (tuple(id(si) for si, _ in segs), bn, k)
             if self._struct is None or self._struct[0] != skey:
@@ -510,31 +549,35 @@ class MegastepEngine:
         payload = self._refresh()
         bucket = int(q_dev.shape[0])
         # largest power of two <= tile_r, so pow2 buckets always reshape
-        bm = min(bucket, 1 << (int(self.config.tile_r).bit_length() - 1))
+        bm = min(bucket, self._bm_cap)
         impl = self.impl or ("pallas" if ops.use_pallas() else "ref")
         return _megastep(
             q_dev, n_valid_dev, payload.dead_total, payload.segs,
             payload.tiles, state,
-            k=self.config.k, bm=bm, bn=self.config.tile_s,
+            k=self.config.k, bm=bm, bn=self._bn,
             metric=self.config.metric, dim=payload.dim,
             n_finite_total=payload.n_finite_total,
             seg_meta=payload.seg_meta, primary=payload.primary,
             impl=impl)
 
-    def join_batch(
-        self, queries: np.ndarray, *, stats: Optional[JoinStats] = None,
-    ) -> tuple[np.ndarray, np.ndarray]:
-        """(dists, int64 global ids) for one micro-batch — numpy in/out.
-        enqueue → one fused device pass → fetch; bitwise-identical to the
-        host-planned path over the same index."""
+    def _validated_queries(self, queries: np.ndarray):
         q = np.ascontiguousarray(queries, np.float32)
+        if self.config.k > self.index.n_s:
+            raise ValueError(f"k={self.config.k} > |S|={self.index.n_s}")
+        return q
+
+    def dispatch(self, queries: np.ndarray, *,
+                 stats: Optional[JoinStats] = None) -> JoinHandle:
+        """The async half of :meth:`join_batch`: validate → refresh the
+        resident payload → enqueue → launch the jitted megastep. Returns
+        a :class:`JoinHandle` without blocking on the device result —
+        redeem it with :meth:`finalize`. The serving scheduler uses this
+        split to overlap batch N's fetch/split with batch N+1's device
+        pass (double-buffered dispatch)."""
+        q = self._validated_queries(queries)
         n = q.shape[0]
-        k = self.config.k
-        if k > self.index.n_s:
-            raise ValueError(f"k={k} > |S|={self.index.n_s}")
         if n == 0:
-            return (np.zeros((0, k), np.float32),
-                    np.full((0, k), -1, np.int64))
+            return JoinHandle(kind="empty", n=0)
         payload = self._refresh()
         if stats is not None:
             stats.n_segments = len(payload.seg_meta)
@@ -543,9 +586,34 @@ class MegastepEngine:
                 m for m, _, _ in payload.seg_meta)
         qd, nv = self.enqueue(q)
         d, hi, lo = self.join_batch_device(qd, nv)
+        return JoinHandle(kind="mega", n=n, dev=(d, hi, lo))
+
+    def finalize(self, handle: JoinHandle, *,
+                 stats: Optional[JoinStats] = None
+                 ) -> tuple[np.ndarray, np.ndarray]:
+        """Block on a dispatched batch and return ``(dists, int64 ids)``
+        — the synchronous tail of :meth:`join_batch`."""
+        k = self.config.k
+        if handle.kind == "empty":
+            return (np.zeros((0, k), np.float32),
+                    np.full((0, k), -1, np.int64))
+        if handle.kind != "mega":
+            raise ValueError(f"cannot finalize handle kind {handle.kind!r}")
         from repro.serve import faultinject
         faultinject.fire("megastep.fetch")     # simulated lost fetch
+        n = handle.n
+        d, hi, lo = handle.dev
         d = np.asarray(d)[:n]
         ids = ((np.asarray(hi, np.int64) << 32)
                | (np.asarray(lo, np.int64) & np.int64(0xFFFFFFFF)))[:n]
         return np.ascontiguousarray(d), np.ascontiguousarray(ids)
+
+    def join_batch(
+        self, queries: np.ndarray, *, stats: Optional[JoinStats] = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """(dists, int64 global ids) for one micro-batch — numpy in/out.
+        enqueue → one fused device pass → fetch; bitwise-identical to the
+        host-planned path over the same index. Exactly ``finalize(
+        dispatch(q))`` — the scheduler calls the halves separately."""
+        return self.finalize(self.dispatch(queries, stats=stats),
+                             stats=stats)

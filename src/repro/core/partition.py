@@ -118,11 +118,46 @@ def build_summary(
     )
 
 
+@partial(jax.jit, static_argnames=("block", "m", "k", "order"))
+def _assign_summarize(data, pivots, *, block, m, k, order):
+    """Assignment + summary (+ the packing lexsort) as ONE jitted call.
+
+    The seal path used to pay three separate device round-trips per
+    sealed segment (assign fetch, summary fetch, host lexsort); fusing
+    them means one dispatch and one coherent fetch — the summary's own
+    internal lexsort and the packing order share one sort via CSE."""
+    pid, dist = _assign_blocked(data, pivots, block=block)
+    counts, lower, upper, knn = _summarize(pid, dist, m=m, k=k)
+    so = jnp.lexsort((dist, pid)) if order else None
+    return pid, dist, counts, lower, upper, knn, so
+
+
 def assign_and_summarize(
     data: np.ndarray, pivots: np.ndarray, *, k: int | None = None,
-    metric: str = "l2",
-) -> Tuple[np.ndarray, np.ndarray, SummaryTable]:
-    """Fused phase-1 for one dataset: (part_ids, dists, summary table)."""
+    metric: str = "l2", return_order: bool = False,
+):
+    """Fused phase-1 for one dataset: (part_ids, dists, summary table).
+
+    ``return_order=True`` appends the packed-layout sort order
+    (``np.lexsort((dists, part_ids))``, int64) as a fourth element —
+    computed inside the same jitted call on the L2 path, so a segment
+    seal costs one device round-trip total.
+    """
+    m = pivots.shape[0]
+    if metric == "l2" and data.shape[0] > 0:
+        pid, dist, counts, lower, upper, knn, so = _assign_summarize(
+            jnp.asarray(data, jnp.float32), jnp.asarray(pivots, jnp.float32),
+            block=4096, m=m, k=k, order=return_order)
+        table = SummaryTable(
+            counts=np.asarray(counts), lower=np.asarray(lower),
+            upper=np.asarray(upper),
+            knn_dists=None if knn is None else np.asarray(knn))
+        part_ids, dists = np.asarray(pid), np.asarray(dist)
+        if return_order:
+            return part_ids, dists, table, np.asarray(so, np.int64)
+        return part_ids, dists, table
     part_ids, dists = assign_to_pivots(data, pivots, metric=metric)
-    table = build_summary(part_ids, dists, pivots.shape[0], k=k)
+    table = build_summary(part_ids, dists, m, k=k)
+    if return_order:
+        return part_ids, dists, table, np.lexsort((dists, part_ids))
     return part_ids, dists, table

@@ -33,15 +33,21 @@ def _sample(data: np.ndarray, n: int, rng: np.random.Generator) -> np.ndarray:
 
 def _random_selection(data, m, *, n_sets, rng):
     """Paper: draw T random candidate sets, keep the one with max total
-    pairwise distance (a spread heuristic)."""
-    best, best_score = None, -np.inf
-    for _ in range(max(1, n_sets)):
-        cand = _sample(data, m, rng)
-        d2 = np.asarray(pairwise_sqdist(jnp.asarray(cand), jnp.asarray(cand)))
-        score = float(np.sqrt(d2).sum())
-        if score > best_score:
-            best, best_score = cand, score
-    return best
+    pairwise distance (a spread heuristic).
+
+    All T candidate sets are scored in one batched device call (a
+    single (T, m, m) einsum + one fetch) instead of T sequential
+    pairwise-distance round-trips — same rng draw order, same argmax,
+    ~T× fewer host↔device syncs on the build/seal path.
+    """
+    cands = np.stack([_sample(data, m, rng).astype(np.float32)
+                      for _ in range(max(1, n_sets))])        # (T, m, dim)
+    c = jnp.asarray(cands)
+    n2 = jnp.sum(c * c, axis=-1)                              # (T, m)
+    d2 = n2[:, :, None] + n2[:, None, :] \
+        - 2.0 * jnp.einsum("tmd,tnd->tmn", c, c)
+    scores = jnp.sqrt(jnp.maximum(d2, 0.0)).sum(axis=(1, 2))  # (T,)
+    return cands[int(np.argmax(np.asarray(scores)))]
 
 
 def _farthest_selection(data, m, *, sample, rng):

@@ -208,6 +208,38 @@ class StreamJoinEngine:
             return self._megastep.join_batch(queries, stats=stats)
         return self._join_batch_host(queries, stats=stats)
 
+    @property
+    def can_dispatch(self) -> bool:
+        """True when this engine can split a batch into an async
+        ``dispatch`` + ``finalize`` pair (megastep-backed paths only) —
+        what the serving scheduler's double-buffered mode keys on."""
+        return self._megastep is not None
+
+    def dispatch(self, queries: np.ndarray, *,
+                 stats: Optional[JoinStats] = None):
+        """Async half of ``join_batch``: enqueue one micro-batch on the
+        fused device path and return an opaque ``JoinHandle`` without
+        blocking on the result. Pair with :meth:`finalize`. Raises
+        ``RuntimeError`` on the host-planned path (no device pipeline
+        to overlap with)."""
+        if self._megastep is None:
+            raise RuntimeError(
+                "dispatch() needs a megastep-backed engine; the "
+                "host-planned path has no async device half "
+                "(use join_batch)")
+        queries = np.ascontiguousarray(queries, np.float32)
+        if stats is not None:
+            stats.n_batches += 1
+        return self._megastep.dispatch(queries, stats=stats)
+
+    def finalize(self, handle, *, stats: Optional[JoinStats] = None
+                 ) -> tuple[np.ndarray, np.ndarray]:
+        """Blocking half of ``join_batch``: fetch + post-process one
+        previously dispatched handle into (dists, ids)."""
+        if self._megastep is None:
+            raise RuntimeError("finalize() needs a megastep-backed engine")
+        return self._megastep.finalize(handle, stats=stats)
+
     def join_batch_host(
         self, queries: np.ndarray, *, stats: Optional[JoinStats] = None,
     ) -> tuple[np.ndarray, np.ndarray]:

@@ -140,6 +140,17 @@ class JoinStats:
     # (exactness is unconditional; this counts how often the int8
     # shortlist alone could not prove it)
     n_quant_fallback: int = 0
+    # quantized-tier routing decisions (repro.quant.engine /
+    # repro.quant.autotune): the mode the engine resolved ("int8" two-tier
+    # or "fp32" tuned fallback; "" when no quant engine ran), whether a
+    # tuning-table entry drove it, the shortlist size in force, and how
+    # many queries each exact-re-rank variant handled — the fused
+    # device-resident gather vs the low-memory host-gather round-trip
+    quant_mode: str = ""
+    quant_autotuned: bool = False
+    quant_mp: int = 0
+    n_resident_rerank: int = 0
+    n_host_rerank: int = 0
     # serving degradation (serve.scheduler): queries answered by the
     # certified-approximate coarse-only path instead of the exact
     # engine, and the minimum per-query certified recall lower bound

@@ -54,7 +54,8 @@ NUM_DELTA_REL = 2e-6
 NUM_TOL_ABS = 1e-7
 
 
-def coarse_lb_tile(qi, qscale, qeps, si, sscale, seps):
+def coarse_lb_tile(qi, qscale, qeps, si, sscale, seps, *,
+                   f32_dot: bool = False):
     """Certified per-pair lower bounds for one (query, S) code tile.
 
     qi (bm, dim) int8, qscale/qeps (bm,) f32; si (bn, dim) int8,
@@ -64,13 +65,32 @@ def coarse_lb_tile(qi, qscale, qeps, si, sscale, seps):
     ``max(d_coarse − ε_total, 0)`` — shared verbatim by the Pallas body,
     the dense jnp oracle and the engine's scan twin, so every impl keys
     its shortlist on the same certified bound.
+
+    ``f32_dot`` computes the int8 contraction in float32 instead of
+    int32. This is **exact, bit-for-bit the int32 path**, whenever
+    ``dim · 127² < 2²⁴`` (every partial sum is an integer below the f32
+    exact-integer ceiling, under any accumulation order) — the CPU refs
+    use it because XLA lowers a float32 matmul to the fast BLAS gemm
+    while an int8→int32 dot falls back to a naive loop. The Pallas TPU
+    body keeps the int32 form: there the int8 MXU dot *is* the fast
+    path. Callers asking for f32 beyond the exactness ceiling get the
+    int32 form back silently (correctness over speed).
     """
-    c = jax.lax.dot_general(qi, si, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.int32)
-    a = jnp.sum(jnp.square(qi.astype(jnp.int32)), axis=1)      # (bm,)
-    b = jnp.sum(jnp.square(si.astype(jnp.int32)), axis=1)      # (bn,)
-    af = a.astype(jnp.float32)
-    bf = b.astype(jnp.float32)
+    dim = qi.shape[1]
+    if f32_dot and dim * 127 * 127 < 2 ** 24:
+        qf = qi.astype(jnp.float32)
+        sf = si.astype(jnp.float32)
+        c = jax.lax.dot_general(qf, sf, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        af = jnp.sum(jnp.square(qf), axis=1)                   # (bm,)
+        bf = jnp.sum(jnp.square(sf), axis=1)                   # (bn,)
+    else:
+        c = jax.lax.dot_general(qi, si, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.int32)
+        a = jnp.sum(jnp.square(qi.astype(jnp.int32)), axis=1)  # (bm,)
+        b = jnp.sum(jnp.square(si.astype(jnp.int32)), axis=1)  # (bn,)
+        af = a.astype(jnp.float32)
+        bf = b.astype(jnp.float32)
     q2 = (qscale * qscale) * af                                # ‖q̂‖²
     s2 = (sscale * sscale) * bf                                # ‖ŝ‖²  (bn,)
     d2 = (q2[:, None] + s2[None, :]

@@ -78,11 +78,13 @@ def quant_coarse_topk_ref(
 
     # the kernel's exact bound formula over all tiles fused into one
     # call: coarse_lb_tile takes the per-tile scales as a per-row
-    # vector, so the int8 contraction stays a single matmul
+    # vector, so the int8 contraction stays a single matmul. f32_dot:
+    # bit-identical to the int32 form (exact-integer f32 sums) but hits
+    # the BLAS gemm on CPU instead of a scalar int32 loop
     lb = coarse_lb_tile(
         qi, qscale, qeps, si,
         jnp.repeat(sscale.astype(jnp.float32), bn),
-        seps.astype(jnp.float32))
+        seps.astype(jnp.float32), f32_dot=True)
     keep = (alive.astype(jnp.float32) > 0.0)[None, :] \
         & (lb <= theta[:, None])
     lb = jnp.where(keep, lb, jnp.inf)
@@ -123,7 +125,9 @@ def quant_coarse_sched_ref(
     s3 = si.reshape(ns_tiles, bn, dim)
     seps3 = seps.astype(jnp.float32).reshape(ns_tiles, bn)
     alive3 = alive.astype(jnp.float32).reshape(ns_tiles, bn)
-    lb_of_tile = jax.vmap(coarse_lb_tile)
+    lb_of_tile = jax.vmap(
+        lambda a, b, c, d, e, f: coarse_lb_tile(a, b, c, d, e, f,
+                                                f32_dot=True))
 
     def body(carry, xs):
         cd, ci = carry

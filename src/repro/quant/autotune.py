@@ -1,0 +1,227 @@
+"""Measured tuning table for the quantized tier (ROADMAP: "autotune block
+shapes/`mp` shortlist per (dim, n, k) with a cached tuning table").
+
+The int8 coarse pass only pays off when the shortlist `mp`, the tile
+shapes, and — most importantly — the *choice to use int8 at all* match
+the hardware. On a TPU the int8 MXU dot plus the ~3.7× DMA reduction is
+a wall-clock win; on CPU the coarse pass's extra elementwise ε/bound
+work can cost more than the fp32 scan it replaces. Rather than hardcode
+either answer, we measure: :func:`sweep_config` times the fp32 megastep
+against the forced-int8 engine across candidate shortlist sizes and
+records the winner as a :class:`TunedConfig` in a JSON
+:class:`TuningTable` keyed on ``(backend, dim, n_rows, k)``.
+
+The table is persisted to disk (``TUNE_quant.json`` next to this module
+by default; override with ``REPRO_QUANT_TUNE_TABLE``) so CI and serving
+never run a sweep in the hot path — `QuantMegastepEngine` just looks up
+its shape at construction time and either runs int8 with the tuned
+``mp``/tile shapes or falls back to the exact fp32 megastep. An explicit
+``quant_slack`` (or a forced ``impl=``) always wins over the table: it
+pins classic int8 behavior for tests and for operators who know better.
+
+Regenerate with ``python -m benchmarks.tune_quant``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import Dict, Optional
+
+__all__ = [
+    "TunedConfig", "TuningTable", "table_key", "default_table",
+    "default_table_path", "lookup", "sweep_config", "reset_default_table",
+]
+
+_ENV_TABLE = "REPRO_QUANT_TUNE_TABLE"
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    """One measured decision for one (backend, dim, n-bucket, k) cell.
+
+    ``mode`` is the headline: ``"int8"`` means the coarse int8 scan +
+    exact re-rank beat the fp32 megastep on this shape; ``"fp32"`` means
+    it lost and the engine should run the plain fp32 scan (still exact,
+    trivially certified). ``mp``/``bm``/``bn`` only apply in int8 mode;
+    zeros mean "keep the engine default". The timing fields document the
+    measurement that justified the decision.
+    """
+
+    mode: str                      # "int8" | "fp32"
+    mp: int = 0                    # shortlist size (pow2); 0 = default
+    bm: int = 0                    # query-tile rows cap; 0 = default
+    bn: int = 0                    # S-tile rows; 0 = config.tile_s
+    int8_batch_s: float = math.nan
+    fp32_batch_s: float = math.nan
+
+    def __post_init__(self):
+        if self.mode not in ("int8", "fp32"):
+            raise ValueError(f"mode must be int8|fp32, got {self.mode!r}")
+        for name in ("mp", "bm", "bn"):
+            v = getattr(self, name)
+            if v and v != _next_pow2(v):
+                raise ValueError(f"{name} must be a power of two, got {v}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TunedConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+def table_key(dim: int, n_rows: int, k: int, backend: str) -> str:
+    """Cells bucket ``n_rows`` to the next power of two — the engine pads
+    payloads anyway, and it keeps nearby corpus sizes sharing one sweep."""
+    return f"{backend}|d{int(dim)}|n{_next_pow2(max(1, int(n_rows)))}|k{int(k)}"
+
+
+class TuningTable:
+    """A {key: TunedConfig} map with JSON round-trip."""
+
+    def __init__(self, entries: Optional[Dict[str, TunedConfig]] = None):
+        self.entries: Dict[str, TunedConfig] = dict(entries or {})
+
+    def get(self, dim: int, n_rows: int, k: int,
+            backend: str) -> Optional[TunedConfig]:
+        return self.entries.get(table_key(dim, n_rows, k, backend))
+
+    def put(self, dim: int, n_rows: int, k: int, backend: str,
+            cfg: TunedConfig) -> None:
+        self.entries[table_key(dim, n_rows, k, backend)] = cfg
+
+    def to_json(self) -> str:
+        body = {k: v.to_dict() for k, v in sorted(self.entries.items())}
+        return json.dumps({"version": 1, "entries": body}, indent=2) + "\n"
+
+    @classmethod
+    def from_json(cls, text: str) -> "TuningTable":
+        doc = json.loads(text)
+        ents = {k: TunedConfig.from_dict(v)
+                for k, v in doc.get("entries", {}).items()}
+        return cls(ents)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as fh:
+            fh.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "TuningTable":
+        with open(path) as fh:
+            return cls.from_json(fh.read())
+
+
+def default_table_path() -> str:
+    env = os.environ.get(_ENV_TABLE)
+    if env:
+        return env
+    return os.path.join(os.path.dirname(__file__), "TUNE_quant.json")
+
+
+_DEFAULT: Optional[TuningTable] = None
+_DEFAULT_PATH: Optional[str] = None
+
+
+def default_table() -> TuningTable:
+    """The process-wide table, loaded once from :func:`default_table_path`
+    (empty if the file is missing or unreadable — the engine then uses
+    its classic int8 heuristics)."""
+    global _DEFAULT, _DEFAULT_PATH
+    path = default_table_path()
+    if _DEFAULT is None or path != _DEFAULT_PATH:
+        try:
+            _DEFAULT = TuningTable.load(path)
+        except (OSError, ValueError, KeyError):
+            _DEFAULT = TuningTable()
+        _DEFAULT_PATH = path
+    return _DEFAULT
+
+
+def reset_default_table() -> None:
+    """Drop the cached table (tests that point ``REPRO_QUANT_TUNE_TABLE``
+    somewhere else mid-process call this)."""
+    global _DEFAULT, _DEFAULT_PATH
+    _DEFAULT = None
+    _DEFAULT_PATH = None
+
+
+def lookup(dim: int, n_rows: int, k: int,
+           backend: Optional[str] = None) -> Optional[TunedConfig]:
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    return default_table().get(dim, n_rows, k, backend)
+
+
+# ---------------------------------------------------------------------------
+# the sweep
+
+
+def _time_join(engine, q, *, iters: int) -> float:
+    best = math.inf
+    engine.join_batch(q)                      # warm: traces + payload upload
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        engine.join_batch(q)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def sweep_config(index, config=None, *, batch: int = 256, iters: int = 3,
+                 mps=None, bns=None, impl=None) -> TunedConfig:
+    """Measure fp32-vs-int8 for ``index``'s shape and return the winner.
+
+    Times the exact fp32 ``MegastepEngine`` and a forced-int8
+    ``QuantMegastepEngine`` (resident re-rank, ``tune=False`` so the
+    table being regenerated can't influence its own sweep) for each
+    candidate ``mp`` (and optionally each S-tile size ``bn``), on a
+    deterministic query batch drawn from the indexed rows themselves.
+    int8 wins only if its best configuration is strictly faster
+    end-to-end — including any certification-failure fallbacks, which
+    naturally penalize too-small shortlists.
+    """
+    import numpy as np
+
+    from repro.core.megastep import MegastepEngine
+    from repro.quant.engine import QuantMegastepEngine
+
+    cfg = config if config is not None else index.config
+    k = cfg.k
+    if mps is None:
+        lo = _next_pow2(max(2 * k, 16))
+        mps = sorted({lo, _next_pow2(4 * k), max(_next_pow2(4 * k), 128)})
+    if bns is None:
+        bns = (0,)
+
+    rng = np.random.default_rng(0)
+    rows = getattr(index, "s_sorted", None)
+    if rows is None or len(rows) == 0:
+        raise ValueError("sweep_config needs a built SIndex (s_sorted)")
+    sel = rng.integers(0, rows.shape[0], size=min(batch, rows.shape[0]))
+    q = np.ascontiguousarray(rows[sel], dtype=np.float32)
+    q = q + rng.normal(0, 1e-3, q.shape).astype(np.float32)
+
+    fp32_s = _time_join(MegastepEngine(index, cfg), q, iters=iters)
+
+    best_s, best_mp, best_bn = math.inf, 0, 0
+    for bn in bns:
+        for mp in mps:
+            slack = max(int(mp) - k, 0)
+            eng = QuantMegastepEngine(index, cfg, slack=slack, impl=impl,
+                                      tune=False, tune_bn=int(bn) or None)
+            t = _time_join(eng, q, iters=iters)
+            if t < best_s:
+                best_s, best_mp, best_bn = t, int(mp), int(bn)
+
+    mode = "int8" if best_s < fp32_s else "fp32"
+    return TunedConfig(mode=mode, mp=best_mp if mode == "int8" else 0,
+                       bn=best_bn if mode == "int8" else 0,
+                       int8_batch_s=best_s, fp32_batch_s=fp32_s)

@@ -29,7 +29,18 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["QuantizedRows", "quantize_rows", "quantize_queries_np"]
+__all__ = ["QuantizedRows", "quantize_rows", "quantize_queries_np",
+           "resident_extra_bytes"]
+
+
+def resident_extra_bytes(n_rows: int, dim: int) -> int:
+    """HBM cost of the device-resident re-rank variant *on top of* the
+    int8 codes: the fp32 packed rows (4·dim B/row) plus the (hi, lo)
+    int32 global-id pair (8 B/row) the fused gather resolves ids with.
+    `QuantMegastepEngine` compares this against
+    ``REPRO_QUANT_RESIDENT_MAX_BYTES`` to auto-pick resident vs
+    host-gather."""
+    return int(n_rows) * (4 * int(dim) + 8)
 
 
 @dataclasses.dataclass

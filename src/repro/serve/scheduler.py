@@ -58,6 +58,7 @@ import dataclasses
 import enum
 import threading
 import time
+from collections import deque
 from typing import Callable, List, Optional, Sequence
 
 import numpy as np
@@ -99,10 +100,20 @@ class SchedulerConfig:
     max_retries: int = 3             # transient-fault retries per batch
     backoff_base_s: float = 0.02     # capped exponential backoff
     backoff_cap_s: float = 0.5
+    # double-buffered dispatch: >1 keeps that many megasteps in flight
+    # (dispatch batch N+1 before fetching batch N's results, overlapping
+    # host-side batch formation with device compute). 1 = synchronous
+    # step semantics (dispatch + fetch inside one step). Needs an engine
+    # with the async ``dispatch``/``finalize`` split — the scheduler
+    # silently stays synchronous otherwise. Deadlines are re-checked at
+    # the dispatch instant either way: n_expired_dispatched stays 0.
+    max_inflight: int = 1
 
     def __post_init__(self):
         if self.batch_rows < 1:
             raise ValueError("batch_rows must be >= 1")
+        if self.max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
         if not (self.degrade_queued_rows <= self.shed_queued_rows
                 <= self.max_queued_rows):
             raise ValueError(
@@ -222,6 +233,13 @@ class ServeScheduler:
         self._queued_rows = 0
         self._worker: Optional[threading.Thread] = None
         self._stop = False
+        # double-buffered dispatch (config.max_inflight > 1): batches
+        # handed to the engine's async dispatch() whose results have not
+        # been fetched yet, oldest first. Only the consumer thread
+        # touches this deque.
+        self._inflight: deque = deque()
+        self._pipelined = (self.config.max_inflight > 1
+                           and bool(getattr(engine, "can_dispatch", False)))
 
     @classmethod
     def for_datastore(cls, store, k: Optional[int] = None, **kw
@@ -283,7 +301,12 @@ class ServeScheduler:
 
     @property
     def has_work(self) -> bool:
-        return self._queued_rows > 0
+        return self._queued_rows > 0 or bool(self._inflight)
+
+    @property
+    def inflight_batches(self) -> int:
+        """Dispatched-but-unfetched megasteps (0 on the sync path)."""
+        return len(self._inflight)
 
     # ---- batch formation (lock held) --------------------------------
 
@@ -337,18 +360,39 @@ class ServeScheduler:
 
     def step(self) -> int:
         """Form one coalesced batch and execute it (with degradation
-        and fault retries). Returns the number of query rows resolved
-        (completed or shed); 0 when the queue was empty."""
+        and fault retries). Returns the number of query rows processed
+        (completed, shed, or — in double-buffered mode — dispatched);
+        0 when there was nothing to do.
+
+        With ``max_inflight > 1`` and a dispatch-capable engine, the
+        batch is *dispatched* (device work starts) and the oldest
+        previously dispatched batch is fetched only once the in-flight
+        window is full — batch N's device pass overlaps batch N+1's
+        formation + dispatch. An empty queue drains the window.
+        """
         now = self._clock()
         with self._lock:
             pressure = self._queued_rows
             batch = self._form_batch_locked(now)
-        if not batch:
-            return 0
         degraded = (self.degraded_engine is not None
                     and pressure > self.config.degrade_queued_rows)
+        if self._pipelined and not degraded:
+            n = self._dispatch_pipelined(batch) if batch else 0
+            # keep up to max_inflight-1 megasteps in flight across
+            # steps while new work keeps arriving; drain when idle
+            keep = (self.config.max_inflight - 1) if batch else 0
+            while len(self._inflight) > keep:
+                n += self._finalize_oldest()
+            return n
+        # sync path (or the degraded rung, which is a blocking engine
+        # call): flush any in-flight work first so results stay FIFO
+        n = 0
+        while self._inflight:
+            n += self._finalize_oldest()
+        if not batch:
+            return n
         self._execute(batch, degraded)
-        return sum(t.n for t in batch)
+        return n + sum(t.n for t in batch)
 
     def drain(self) -> None:
         """Step until no queued work remains (tests / shutdown flush)."""
@@ -364,12 +408,92 @@ class ServeScheduler:
             self.step()
         return t
 
-    def _execute(self, batch: List[Ticket], degraded: bool) -> None:
+    # ---- double-buffered dispatch (consumer thread only) ------------
+
+    def _dispatch_pipelined(self, batch: List[Ticket]) -> int:
+        """Hand one coalesced batch to the engine's async ``dispatch``
+        and park the handle in the in-flight window. Deadlines are
+        re-checked at the dispatch instant (the clock may have advanced
+        since batch formation), so the n_expired_dispatched == 0
+        invariant holds on this path exactly as on the sync one. A
+        dispatch fault falls back to the synchronous retry ladder
+        (host-planned oracle) for this batch alone."""
+        now = self._clock()
+        live, dead = [], []
+        for t in batch:
+            (live if t.deadline >= now else dead).append(t)
+        if dead:
+            with self._lock:
+                for t in dead:
+                    self._mark_shed_locked(t, "deadline")
+        if not live:
+            return sum(t.n for t in dead)
+        q = live[0].rows if len(live) == 1 else \
+            np.concatenate([t.rows for t in live], axis=0)
+        dispatch_at = self._clock()
+        n_exp = sum(1 for t in live if t.deadline < dispatch_at)
+        with self._lock:
+            self.stats.n_dispatches += 1
+            self.stats.n_expired_dispatched += n_exp
+        for t in live:
+            t.dispatched_at = dispatch_at
+            t.attempts += 1
+        try:
+            faultinject.fire("sched.dispatch")
+            handle = self.engine.dispatch(q, stats=self.stats.join)
+        except Exception:    # noqa: BLE001 — transient-fault ladder
+            self._execute(live, False, first_attempt=1)
+            return sum(t.n for t in batch)
+        self._inflight.append((handle, live))
+        return sum(t.n for t in batch)
+
+    def _finalize_oldest(self) -> int:
+        """Fetch + complete the oldest in-flight batch. A finalize
+        fault (failed fetch, poisoned result) re-runs the batch's
+        tickets through the synchronous retry ladder."""
+        handle, live = self._inflight.popleft()
+        try:
+            d, i = self.engine.finalize(handle, stats=self.stats.join)
+        except Exception:    # noqa: BLE001 — transient-fault ladder
+            self._execute(live, False, first_attempt=1)
+            return sum(t.n for t in live)
+        self._complete(live, d, i, None)
+        return sum(t.n for t in live)
+
+    # ---- synchronous execution with retries -------------------------
+
+    def _complete(self, live: List[Ticket], d, i, rb) -> None:
+        done_at = self._clock()
+        lo = 0
+        with self._lock:
+            for t in live:
+                t.distances = d[lo:lo + t.n]
+                t.indices = i[lo:lo + t.n]
+                t.recall_bound = (rb[lo:lo + t.n] if rb is not None
+                                  else np.ones(t.n, np.float32))
+                t.degraded = rb is not None
+                t.status = "done"
+                t.completed_at = done_at
+                lo += t.n
+                self.stats.n_completed += 1
+                self.stats.rows_completed += t.n
+                if t.degraded:
+                    self.stats.n_degraded_requests += 1
+
+    def _execute(self, batch: List[Ticket], degraded: bool, *,
+                 first_attempt: int = 0) -> None:
+        """Blocking execute with the capped-backoff retry ladder.
+        ``first_attempt > 0`` enters the ladder at that rung — the
+        double-buffered path uses it to route a batch whose async
+        dispatch/finalize faulted straight onto the host-planned oracle
+        (its rung-0 engine call is what just failed), with the retry
+        budget reduced accordingly."""
         cfg = self.config
         live = list(batch)
 
         def attempt_fn(attempt: int):
             nonlocal live, degraded
+            attempt += first_attempt
             now = self._clock()
             still, dead = [], []
             for t in live:
@@ -410,7 +534,8 @@ class ServeScheduler:
 
         try:
             out = faultinject.retry_with_backoff(
-                attempt_fn, max_retries=cfg.max_retries,
+                attempt_fn,
+                max_retries=max(0, cfg.max_retries - first_attempt),
                 base_s=cfg.backoff_base_s, cap_s=cfg.backoff_cap_s,
                 sleep=self._sleep)
         except Exception as e:   # noqa: BLE001 — overload robustness:
@@ -424,22 +549,7 @@ class ServeScheduler:
         if out is None:
             return                      # everything expired pre-dispatch
         d, i, rb = out
-        done_at = self._clock()
-        lo = 0
-        with self._lock:
-            for t in live:
-                t.distances = d[lo:lo + t.n]
-                t.indices = i[lo:lo + t.n]
-                t.recall_bound = (rb[lo:lo + t.n] if rb is not None
-                                  else np.ones(t.n, np.float32))
-                t.degraded = rb is not None
-                t.status = "done"
-                t.completed_at = done_at
-                lo += t.n
-                self.stats.n_completed += 1
-                self.stats.rows_completed += t.n
-                if t.degraded:
-                    self.stats.n_degraded_requests += 1
+        self._complete(live, d, i, rb)
 
     # ---- background worker ------------------------------------------
 
@@ -454,7 +564,10 @@ class ServeScheduler:
         def loop():
             while True:
                 with self._work:
-                    while not self._queued_rows and not self._stop:
+                    # _inflight is consumer-thread-only state: reading
+                    # it here (the consumer) needs no extra locking
+                    while not self._queued_rows and not self._inflight \
+                            and not self._stop:
                         self._work.wait(timeout=0.1)
                     if self._stop:
                         return

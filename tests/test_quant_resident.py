@@ -1,0 +1,201 @@
+"""Device-resident re-rank + autotuned quant configs (repro.quant):
+the fused shortlist-gather/re-rank megastep is bitwise the oracle across
+impls and index kinds, performs zero steady-state host syncs, and never
+recompiles across repeating ragged batches under a cached tuning
+config; plus the tuning table's persistence/lookup/override semantics
+(repro.quant.autotune)."""
+import numpy as np
+import pytest
+
+import repro.core.megastep as M
+from repro.core import (
+    JoinConfig, JoinStats, MutableIndex, build_index, knn_join)
+from repro.quant import QuantMegastepEngine
+from repro.quant import autotune
+from repro.quant.autotune import TunedConfig, TuningTable, table_key
+
+
+def _data(n, dim, seed, scale=3.0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, dim)).astype(np.float32) * scale
+
+
+def _mutable_with_history(dim=5, seed=0, k=6):
+    """base + sealed delta + unsealed buffer + more-than-k tombstones."""
+    rng = np.random.default_rng(seed)
+    cfg = JoinConfig(k=k, n_pivots=16, n_groups=4, seed=seed)
+    mi = MutableIndex.build(_data(700, dim, seed + 1), cfg,
+                            seal_threshold=300)
+    mi.insert(_data(340, dim, seed + 2))
+    mi.insert(_data(90, dim, seed + 3))
+    mi.delete(rng.choice(700, 3 * k + 20, replace=False))
+    return mi, cfg
+
+
+# ---------------------------------------------------------------------------
+# resident re-rank: bitwise matrix
+
+
+@pytest.mark.parametrize("impl", ["ref", "ref_sched", "pallas_interpret"])
+@pytest.mark.parametrize("kind", ["sindex", "mutable"])
+def test_resident_bitwise_matrix(impl, kind):
+    """The fused device re-rank (shortlist gather + canonical distances
+    + stable top-k, all inside one jit) must be bitwise the oracle on
+    every impl and over both index kinds — tombstones included."""
+    if kind == "sindex":
+        cfg = JoinConfig(k=6, n_pivots=16, n_groups=4, seed=1)
+        s = _data(900, 5, 11)
+        idx = build_index(s, cfg)
+        oracle = lambda q: knn_join(q, s, k=cfg.k, config=cfg)  # noqa: E731
+    else:
+        idx, cfg = _mutable_with_history(seed=7)
+        oracle = None
+    eng = QuantMegastepEngine(idx, cfg, impl=impl, resident=True)
+    assert eng.mode == "int8" and eng.resident
+    q = _data(90, 5, 40)
+    stats = JoinStats()
+    d, i = eng.join_batch(q, stats=stats)
+    assert stats.n_resident_rerank == q.shape[0]
+    if kind == "sindex":
+        ref = oracle(q)
+        np.testing.assert_array_equal(d, ref.distances)
+        np.testing.assert_array_equal(i, ref.indices)
+    else:
+        hd, hi = idx.join_batch(q, config=cfg)
+        np.testing.assert_array_equal(d, hd)
+        np.testing.assert_array_equal(i, hi)
+
+
+def test_host_gather_matches_resident_bitwise():
+    """resident=False keeps the low-memory host-gather re-rank; both
+    variants are the same exact join, bit for bit."""
+    cfg = JoinConfig(k=5, n_pivots=16, n_groups=4, seed=2)
+    idx = build_index(_data(800, 6, 3), cfg)
+    q = _data(70, 6, 4)
+    st_r, st_h = JoinStats(), JoinStats()
+    dr, ir = QuantMegastepEngine(idx, cfg, resident=True,
+                                 tune=False).join_batch(q, stats=st_r)
+    dh, ih = QuantMegastepEngine(idx, cfg, resident=False,
+                                 tune=False).join_batch(q, stats=st_h)
+    np.testing.assert_array_equal(dr, dh)
+    np.testing.assert_array_equal(ir, ih)
+    assert st_r.n_resident_rerank == q.shape[0] and st_r.n_host_rerank == 0
+    assert st_h.n_host_rerank == q.shape[0] and st_h.n_resident_rerank == 0
+
+
+def test_resident_zero_steady_state_syncs():
+    """The device-level resident call transfers nothing host↔device in
+    steady state — the fp32 megastep's invariant, restored for int8."""
+    import jax
+
+    cfg = JoinConfig(k=4, n_pivots=16, n_groups=4, seed=5)
+    idx = build_index(_data(600, 6, 6), cfg)
+    eng = QuantMegastepEngine(idx, cfg, resident=True, tune=False)
+    q = _data(48, 6, 7)
+    eng.join_batch(q)                       # warm: traces + payload upload
+    qd, nv = eng.enqueue(q)
+    jax.block_until_ready(eng.join_batch_device(qd, nv))
+    with jax.transfer_guard("disallow"):
+        jax.block_until_ready(eng.join_batch_device(qd, nv))
+
+
+def test_trace_count_stable_with_tuned_config_over_ragged_batches():
+    """A cached TunedConfig pins mp/tile shapes, so repeating ragged
+    batch sizes reuse the compiled fused step — zero recompiles."""
+    cfg = JoinConfig(k=4, n_pivots=16, n_groups=4, seed=8)
+    idx = build_index(_data(500, 5, 9), cfg)
+    tuned = TunedConfig(mode="int8", mp=32)
+    eng = QuantMegastepEngine(idx, cfg, tune=tuned, resident=True)
+    assert eng.mp == 32 and eng.mode == "int8"
+    for n in (17, 23, 9):                    # warm buckets 32 and 16
+        eng.join_batch(_data(n, 5, 100 + n))
+    c0 = M.trace_count()
+    for n in (23, 17, 9, 31, 10, 16):        # same buckets, ragged sizes
+        eng.join_batch(_data(n, 5, 200 + n))
+    assert M.trace_count() == c0, "ragged batch sizes re-traced"
+
+
+# ---------------------------------------------------------------------------
+# autotune: table semantics + engine wiring
+
+
+def test_tuned_config_validation():
+    with pytest.raises(ValueError):
+        TunedConfig(mode="int4")
+    with pytest.raises(ValueError):
+        TunedConfig(mode="int8", mp=48)          # not a power of two
+    assert TunedConfig(mode="fp32").mp == 0
+
+
+def test_table_roundtrip_and_key_bucketing(tmp_path):
+    t = TuningTable()
+    cfg = TunedConfig(mode="int8", mp=64, bn=256,
+                      int8_batch_s=1e-3, fp32_batch_s=2e-3)
+    t.put(32, 20000, 10, "cpu", cfg)
+    p = tmp_path / "tune.json"
+    t.save(str(p))
+    t2 = TuningTable.load(str(p))
+    # n_rows buckets to the next pow2: 20000 and 17000 share a cell
+    assert t2.get(32, 17000, 10, "cpu") == cfg
+    assert t2.get(32, 20000, 10, "cpu") == cfg
+    assert t2.get(32, 40000, 10, "cpu") is None    # different bucket
+    assert t2.get(32, 20000, 5, "cpu") is None     # different k
+    assert t2.get(32, 20000, 10, "tpu") is None    # different backend
+    assert table_key(32, 20000, 10, "cpu") == "cpu|d32|n32768|k10"
+
+
+def test_env_override_routes_engine_to_fp32(tmp_path, monkeypatch):
+    """A table entry saying fp32-wins makes a default-constructed engine
+    run the plain megastep (still exact); an explicit slack pins int8
+    regardless — operators and tests always win over the tuner."""
+    import jax
+
+    cfg = JoinConfig(k=4, n_pivots=16, n_groups=4, seed=12)
+    s = _data(700, 7, 13)
+    idx = build_index(s, cfg)
+    backend = jax.default_backend()
+    t = TuningTable()
+    t.put(7, idx.n_s, 4, backend, TunedConfig(mode="fp32"))
+    p = tmp_path / "tune_fp32.json"
+    t.save(str(p))
+    monkeypatch.setenv("REPRO_QUANT_TUNE_TABLE", str(p))
+    autotune.reset_default_table()
+    try:
+        eng = QuantMegastepEngine(idx, cfg)
+        assert eng.mode == "fp32" and eng.autotuned and not eng.resident
+        with pytest.raises(RuntimeError):
+            eng.coarse_shortlist(_data(8, 7, 14))
+        q = _data(60, 7, 15)
+        stats = JoinStats()
+        d, i = eng.join_batch(q, stats=stats)
+        assert stats.quant_mode == "fp32" and stats.quant_autotuned
+        ref = knn_join(q, s, k=cfg.k, config=cfg)
+        np.testing.assert_array_equal(d, ref.distances)
+        np.testing.assert_array_equal(i, ref.indices)
+        # explicit slack overrides the table's verdict
+        forced = QuantMegastepEngine(idx, cfg, slack=28)
+        assert forced.mode == "int8" and forced.mp == 32
+        fd, fi = forced.join_batch(q)
+        np.testing.assert_array_equal(fd, ref.distances)
+        np.testing.assert_array_equal(fi, ref.indices)
+    finally:
+        monkeypatch.delenv("REPRO_QUANT_TUNE_TABLE")
+        autotune.reset_default_table()
+
+
+def test_sweep_config_smoke():
+    """The sweep returns a measured verdict and an engine built from it
+    stays exact (whatever mode won)."""
+    cfg = JoinConfig(k=4, n_pivots=8, n_groups=2, seed=20)
+    s = _data(400, 6, 21)
+    idx = build_index(s, cfg)
+    tuned = autotune.sweep_config(idx, cfg, batch=64, iters=1)
+    assert tuned.mode in ("int8", "fp32")
+    assert np.isfinite(tuned.int8_batch_s) and np.isfinite(
+        tuned.fp32_batch_s)
+    eng = QuantMegastepEngine(idx, cfg, tune=tuned)
+    q = _data(32, 6, 22)
+    d, i = eng.join_batch(q)
+    ref = knn_join(q, s, k=cfg.k, config=cfg)
+    np.testing.assert_array_equal(d, ref.distances)
+    np.testing.assert_array_equal(i, ref.indices)
