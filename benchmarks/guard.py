@@ -14,6 +14,12 @@ claims rest on:
 * ``kernel_megastep_vs_hostplanned`` / ``device_steady_state_syncs`` —
   hard invariant: the device-level steady state performs **zero** host
   syncs, any nonzero value fails regardless of the baseline.
+* ``kernel_sharded_vs_single`` / ``bitwise_equal`` and
+  ``sharded_steady_state_syncs`` — the sharded megastep's contract:
+  shard count never changes the output (bitwise, HARD_ONE) and the
+  mesh-partitioned steady state moves zero bytes per shard (HARD_ZERO);
+  ``shard_speedup`` is guarded loosely (simulated-mesh timing is
+  noise).
 * ``kernel_quant_coarse_vs_fp32`` / ``bytes_per_row_int8``,
   ``coarse_speedup`` and ``endtoend_speedup`` — the quantized tier's
   memory, coarse-pass and tuned end-to-end contracts (repro.quant);
@@ -55,6 +61,11 @@ CHECKS = [
     ("kernel_streaming_vs_oneshot", "streaming_s", "lower", 0.05),
     ("kernel_index_build_amortization", "plan_frac_of_batch", "lower", 0.05),
     ("kernel_megastep_vs_hostplanned", "speedup", "higher", 2.0),
+    # sharded megastep vs single-device: the speedup on a simulated mesh
+    # is thread-oversubscribed noise (the real gates are the bitwise and
+    # hard-zero rows below), so the slack is generous — this row only
+    # catches a wholesale collapse of the sharded dispatch path
+    ("kernel_sharded_vs_single", "shard_speedup", "higher", 1.0),
     # quantized tier: resident bytes/row must not bloat (>2× = someone
     # fattened the codes/metadata), the coarse pass must not collapse,
     # and the tuned engine's end-to-end path must never lose to the
@@ -80,6 +91,9 @@ HARD_ZERO = [("kernel_megastep_vs_hostplanned", "device_steady_state_syncs"),
              # the int8 tier's device-resident re-rank restores the same
              # invariant: zero host syncs between enqueue and fetch
              ("kernel_quant_coarse_vs_fp32", "resident_steady_state_syncs"),
+             # ...and the sharded megastep keeps it per shard: the whole
+             # mesh-partitioned payload is committed at enqueue/refresh
+             ("kernel_sharded_vs_single", "sharded_steady_state_syncs"),
              # a request whose deadline passed may NEVER reach a device:
              # the scheduler sheds at batch formation and re-checks
              # across retry backoff — any nonzero count is a policy bug
@@ -88,7 +102,10 @@ HARD_ZERO = [("kernel_megastep_vs_hostplanned", "device_steady_state_syncs"),
 HARD_ONE = [("kernel_quant_coarse_vs_fp32", "bitwise_equal"),
             # the scheduler's exact (non-degraded) path is the engine
             # verbatim — bitwise, not approximately
-            ("kernel_serving_under_load", "bitwise_equal")]
+            ("kernel_serving_under_load", "bitwise_equal"),
+            # shard count must never change the output — the sharded
+            # megastep's whole contract (core.sharded module docstring)
+            ("kernel_sharded_vs_single", "bitwise_equal")]
 
 
 def _rows(records: list, bench: str) -> list:

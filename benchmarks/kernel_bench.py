@@ -416,6 +416,94 @@ def megastep_vs_hostplanned_bench(n: int = 20000,
     ]
 
 
+def sharded_vs_single_bench(n: int = 20000, batches: int = 8) -> List[Row]:
+    """Sharded megastep (core.sharded) against the single-device megastep
+    on the same index: per-batch latency, speedup, the per-shard vs
+    whole-index resident bytes (what the mesh buys in HBM), the
+    cross-shard merge overhead (sharded-over-N vs sharded-over-1 — the
+    all-gather + tree-merge cost isolated from the shard_map machinery),
+    and two guarded invariants: **bitwise equality** with the
+    single-device engine on every batch (HARD_ONE) and **zero host
+    syncs** in the transfer-guarded steady state (HARD_ZERO).
+
+    The shard count is whatever the process sees (1 on a plain CPU run —
+    speedup ≈ 1, overhead 0; the CI mesh step re-runs this with 8 forced
+    host devices). Simulated-mesh wall-clock oversubscribes host threads,
+    so the timing rows are informational there; the bitwise and sync
+    rows are the real gates.
+    """
+    import jax
+
+    from repro.core import JoinConfig, build_index
+    from repro.core.megastep import MegastepEngine
+    from repro.core.sharded import ShardedMegastepEngine
+
+    n_s, dim, k = n, 8, 10
+    batch = max(64, n // 40)
+    n_sh = len(jax.devices())
+    s = _clustered(n_s, dim, seed=0)
+    cfg = JoinConfig(k=k, n_pivots=64, n_groups=8, seed=3)
+    index = build_index(s, cfg)
+    single = MegastepEngine(index, cfg)
+    sharded = ShardedMegastepEngine(index, cfg, n_shards=n_sh)
+    one = (sharded if n_sh == 1
+           else ShardedMegastepEngine(index, cfg, n_shards=1))
+    qs = [_clustered(batch, dim, seed=10 + i) for i in range(batches)]
+
+    # the bitwise gate covers every batch and both shard counts
+    for q in qs:
+        sd_, si_ = single.join_batch(q)
+        dd, di = sharded.join_batch(q)
+        d1, i1 = one.join_batch(q)
+        if not (np.array_equal(dd, sd_) and np.array_equal(di, si_)
+                and np.array_equal(d1, sd_) and np.array_equal(i1, si_)):
+            raise AssertionError(
+                f"sharded megastep ({n_sh} shards) diverged bitwise from "
+                f"the single-device engine")
+
+    t0 = time.perf_counter()
+    for q in qs:
+        single.join_batch(q)
+    t_single = (time.perf_counter() - t0) / batches
+    t0 = time.perf_counter()
+    for q in qs:
+        sharded.join_batch(q)
+    t_sharded = (time.perf_counter() - t0) / batches
+    t0 = time.perf_counter()
+    for q in qs:
+        one.join_batch(q)
+    t_one = (time.perf_counter() - t0) / batches
+
+    # steady state: everything is mesh-committed at enqueue/refresh, so
+    # the jitted call moves zero bytes — counter AND transfer guard
+    qd, nv = sharded.enqueue(qs[0])
+    jax.block_until_ready(sharded.join_batch_device(qd, nv))
+    with _fetch_counter() as fc, jax.transfer_guard("disallow"):
+        jax.block_until_ready(sharded.join_batch_device(qd, nv))
+    if fc.count:
+        raise AssertionError(
+            f"sharded steady state fetched {fc.count} arrays")
+
+    per_shard = sharded.nbytes_per_shard()
+    whole = index.nbytes_resident()
+    return [
+        Row("kernel_sharded_vs_single",
+            f"ns={n_s}x{dim},k={k},batch={batch},shards={n_sh}", t_sharded,
+            {"n_shards": float(n_sh),
+             "single_batch_s": t_single,
+             "sharded_batch_s": t_sharded,
+             "shard_speedup": t_single / t_sharded,
+             "merge_overhead_frac": (max(t_sharded / t_one - 1.0, 0.0)
+                                     if n_sh > 1 else 0.0),
+             "per_shard_bytes": float(per_shard.max()),
+             "whole_bytes": float(whole),
+             "shard_balance": float(per_shard.min() / max(per_shard.max(),
+                                                          1)),
+             "sharded_steady_state_syncs": float(fc.count),
+             "bitwise_equal": 1.0}),
+    ]
+
+
 def quant_coarse_vs_fp32_bench(n: int = 20000, batches: int = 8) -> List[Row]:
     """Quantized tier (repro.quant) vs the fp32 megastep on the same
     index: resident bytes/row (the 4× claim `SIndex.nbytes_resident`
@@ -732,6 +820,7 @@ def serving_under_load_bench(n: int = 20000, batches: int = 8
 
 ALL = [distance_topk_bench, distance_topk_gather_bench,
        index_build_vs_batch_plan_bench, streaming_vs_oneshot_bench,
-       megastep_vs_hostplanned_bench, mutable_index_bench,
+       megastep_vs_hostplanned_bench, sharded_vs_single_bench,
+       mutable_index_bench,
        quant_coarse_vs_fp32_bench, serving_under_load_bench,
        pack_send_buffers_bench, assign_bench, flash_attention_bench]

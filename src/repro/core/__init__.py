@@ -10,11 +10,13 @@ from .grouping import (
     geometric_grouping, greedy_grouping, group_partitions,
     replication_count_exact, replication_count_partitions)
 from .index import (
-    SIndex, QueryPlan, build_index, plan_queries, as_float32_rows)
+    SIndex, QueryPlan, ShardPacking, build_index, plan_queries,
+    as_float32_rows)
 from .api import knn_join, plan_join, execute_join, JoinPlan
 from .stream import StreamJoinEngine, StreamJoinState, knn_join_batched
 from .segments import MutableIndex, Segment
 from .megastep import MegastepEngine
+from .sharded import ShardedMegastepEngine
 from .schedule import (
     TileSchedule, build_tile_schedule, compact_visit_mask,
     segment_tile_stats, visit_mask_jnp, compact_visits_jnp)
@@ -29,11 +31,11 @@ __all__ = [
     "hyperplane_distances", "ring_bounds",
     "geometric_grouping", "greedy_grouping", "group_partitions",
     "replication_count_exact", "replication_count_partitions",
-    "SIndex", "QueryPlan", "build_index", "plan_queries",
+    "SIndex", "QueryPlan", "ShardPacking", "build_index", "plan_queries",
     "as_float32_rows",
     "knn_join", "plan_join", "execute_join", "JoinPlan",
     "StreamJoinEngine", "StreamJoinState", "knn_join_batched",
-    "MutableIndex", "Segment", "MegastepEngine",
+    "MutableIndex", "Segment", "MegastepEngine", "ShardedMegastepEngine",
     "TileSchedule", "build_tile_schedule", "compact_visit_mask",
     "segment_tile_stats", "visit_mask_jnp", "compact_visits_jnp",
     "pairwise_dist",

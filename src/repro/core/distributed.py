@@ -22,19 +22,24 @@ Stage layout (DESIGN.md §2):
                      ``lb_group`` repeats), R re-packed per batch — so
                      received tiles stay partition-coherent and the
                      schedules bite.
-  phase 2b (SPMD)  — per-device reducer: schedule-driven top-k join over
-                     the received buffers (paper's job-2 reduce) keeping
-                     the running top-k as a *sorted run*
-                     (kernels.sorted_merge), as a two-level ``lax.scan``
-                     everywhere and the scalar-prefetch Pallas gather
-                     kernel on TPU — pruned tiles are never touched.
+  phase 2b (SPMD)  — per-device reducer: dense top-k join over the
+                     received buffers (paper's job-2 reduce) keeping the
+                     running top-k as a *sorted run*
+                     (kernels.sorted_merge) in a two-level ``lax.scan``.
+
+The schedule-pruned resident reducer that used to live here was subsumed
+by the **sharded megastep** (``core.sharded``): it partitions the index
+payload across the mesh instead of shuffling rows per batch, runs the
+Cor. 1 / Thm 2 compacted schedules per shard, and all-gathers only the
+final k-runs. ``distributed_knn_join(reducer="sharded")`` (the default
+for L2) routes there; this module keeps the explicit Theorem-6-routed
+``all_to_all`` shuffle + dense scan as the any-metric reference mapping
+of the paper's job 2.
 
 Static-shape contract: MapReduce shuffles ragged lists; XLA cannot. The
 capacities are derived *before* the shuffle from LB/T_S — this is exactly
 the paper's replication cost model (Eq. 10) made load-bearing. Padding
-rows carry ``valid=False`` and are masked in the join; schedule rows are
-padded by repeating their last entry so dead steps re-touch a resident
-tile instead of streaming a new one.
+rows carry ``valid=False`` and are masked in the join.
 """
 from __future__ import annotations
 
@@ -52,7 +57,6 @@ from .api import JoinPlan
 from .index import QueryPlan, SIndex
 from .jax_compat import pvary, shard_map
 from .metrics import canonical_topk
-from .schedule import build_tile_schedule
 from .types import JoinResult, JoinStats
 
 __all__ = ["DistributedJoinSpec", "DistributedJoinEngine",
@@ -142,44 +146,16 @@ def _pack_send_buffers(rows, aux, dest, src_of_row, n_src, n_dst, cap):
     return buf, nbuf, valid
 
 
-def _device_schedules(index, qplan, r_buf, r_valid, r_part_pk, s_part_pk,
-                      s_dist_pk, s_valid, k, bm, bn, stats):
-    """Per-device pruned schedules on the post-shuffle buffer layout.
-
-    The shuffle is deterministic given the plan, so the host knows every
-    device's received layout before any data moves: device g gets the
-    concatenation over sources of bucket (src, g). Schedules are padded
-    to one static width across devices.
-    """
-    n_dev = r_buf.shape[0]
-    scheds = []
-    for g in range(n_dev):
-        rr = r_buf[:, g].reshape(-1, r_buf.shape[-1])
-        rp = np.where(r_valid[:, g].reshape(-1),
-                      r_part_pk[:, g].reshape(-1), -1)
-        sp = np.where(s_valid[:, g].reshape(-1),
-                      s_part_pk[:, g].reshape(-1), -1)
-        sd = s_dist_pk[:, g].reshape(-1)
-        scheds.append(build_tile_schedule(
-            rr, rp, sp, sd, index.pivots, index.pivd, qplan.theta,
-            bm=bm, bn=bn, metric=qplan.config.metric,
-            knn_dists=index.t_s.knn_dists, k=k, stats=stats))
-    width = max(s.schedule.shape[1] for s in scheds)
-    scheds = [s.padded_to(width) for s in scheds]
-    schedule = np.stack([s.schedule for s in scheds])   # (n_dev, nr_t, V)
-    counts = np.stack([s.counts for s in scheds])       # (n_dev, nr_t)
-    return schedule, counts, scheds
-
-
 def _reducer_join(r_buf, r_valid, s_buf, s_valid, s_ids, k, tile_s,
-                  axis_names=(), schedule=None, counts=None, tile_r=128):
-    """Per-device join: exact top-k of valid R rows over valid S.
+                  axis_names=(), tile_r=128):
+    """Per-device dense join: exact top-k of valid R rows over valid S.
 
     The running top-k is a sorted run merged with each tile's sorted
     candidates (kernels.sorted_merge) — the same primitive the Pallas
-    kernels use. With ``schedule``/``counts`` (per R tile of ``tile_r``
-    rows) only the scheduled S tiles are sliced and scanned; steps past a
-    row's count re-touch its last tile and are masked to +inf.
+    kernels use. Every received S tile is visited: Theorem 6 already
+    pruned at shuffle time, and the tile-granular Cor. 1 / Thm 2 pruning
+    lives in the sharded megastep (core.sharded), which subsumed the
+    host-planned scheduled reducer that used to sit here.
     """
     nq = r_buf.shape[0]
     ns = s_buf.shape[0]
@@ -193,12 +169,6 @@ def _reducer_join(r_buf, r_valid, s_buf, s_valid, s_ids, k, tile_s,
     nr_tiles = -(-nq // tile_r)
     r_pad = jnp.pad(r_buf, ((0, nr_tiles * tile_r - nq), (0, 0)))
 
-    if schedule is None:
-        schedule = jnp.broadcast_to(jnp.arange(n_tiles, dtype=jnp.int32),
-                                    (nr_tiles, n_tiles))
-        counts = jnp.full((nr_tiles,), n_tiles, jnp.int32)
-    max_v = schedule.shape[1]
-
     init_d = jnp.full((tile_r, kp), jnp.inf, jnp.float32)
     init_i = jnp.full((tile_r, kp), -1, jnp.int32)
     if axis_names:
@@ -207,32 +177,27 @@ def _reducer_join(r_buf, r_valid, s_buf, s_valid, s_ids, k, tile_s,
         init_d = pvary(init_d, axis_names)
         init_i = pvary(init_i, axis_names)
 
-    def one_r_tile(_, xs):
-        rt, sched_row, cnt = xs
+    def one_r_tile(_, rt):
         r2 = jnp.sum(rt * rt, axis=-1)
 
-        def visit(carry, step_tile):
+        def visit(carry, t_idx):
             bd, bi = carry
-            step, t_idx = step_tile
             st = jax.lax.dynamic_slice_in_dim(s_pad, t_idx * tile_s, tile_s)
             sv = jax.lax.dynamic_slice_in_dim(sv_pad, t_idx * tile_s, tile_s)
             si = jax.lax.dynamic_slice_in_dim(si_pad, t_idx * tile_s, tile_s)
             d2 = (r2[:, None] + jnp.sum(st * st, axis=-1)[None, :]
                   - 2.0 * (rt @ st.T))
-            live = sv[None, :] & (step < cnt)
-            d2 = jnp.where(live, jnp.maximum(d2, 0.0), jnp.inf)
+            d2 = jnp.where(sv[None, :], jnp.maximum(d2, 0.0), jnp.inf)
             td, ti = tile_topk(d2, jnp.broadcast_to(si[None, :], d2.shape),
                                kp)
             return merge_sorted_runs(bd, bi, td, ti), None
 
-        (bd, bi), _ = jax.lax.scan(
-            visit, (init_d, init_i),
-            (jnp.arange(max_v, dtype=jnp.int32), sched_row))
+        (bd, bi), _ = jax.lax.scan(visit, (init_d, init_i),
+                                   jnp.arange(n_tiles, dtype=jnp.int32))
         return None, (bd, bi)
 
-    xs = (r_pad.reshape(nr_tiles, tile_r, -1),
-          schedule.astype(jnp.int32), counts.astype(jnp.int32))
-    _, (best_d, best_i) = jax.lax.scan(one_r_tile, None, xs)
+    _, (best_d, best_i) = jax.lax.scan(
+        one_r_tile, None, r_pad.reshape(nr_tiles, tile_r, -1))
     best_d = best_d.reshape(nr_tiles * tile_r, kp)[:nq, :k]
     best_i = best_i.reshape(nr_tiles * tile_r, kp)[:nq, :k]
     best_d = jnp.where(r_valid[:, None], jnp.sqrt(best_d), jnp.inf)
@@ -260,7 +225,6 @@ class DistributedJoinEngine:
         axis: str | Tuple[str, ...] = "data",
         tile_s: int = 512,
         tile_r: int = 128,
-        use_schedule: bool = True,
     ):
         self.index = index
         self.mesh = mesh
@@ -268,7 +232,6 @@ class DistributedJoinEngine:
         self.n_dev = int(np.prod([mesh.shape[a] for a in self.axes]))
         self.tile_s = tile_s
         self.tile_r = tile_r
-        self.use_schedule = use_schedule
         # home device of each packed S row (by original row id, the shard
         # the row lived on before any query arrived) — static forever
         self._src_s_sorted = ((index.s_order.astype(np.int64) * self.n_dev)
@@ -313,13 +276,12 @@ class DistributedJoinEngine:
         if k in self._job2_cache:
             return self._job2_cache[k]
         axes, tile_r, tile_s = self.axes, self.tile_r, self.tile_s
-        use_schedule = self.use_schedule
         pspec = P(axes if len(axes) > 1 else axes[0])
 
         @partial(shard_map, mesh=self.mesh,
-                 in_specs=(pspec,) * (6 + (2 if use_schedule else 0)),
+                 in_specs=(pspec,) * 6,
                  out_specs=(pspec, pspec, pspec, pspec))
-        def job2(r_buf, r_valid, r_id, s_buf, s_valid, s_id, *sched_args):
+        def job2(r_buf, r_valid, r_id, s_buf, s_valid, s_id):
             # collapse the leading sharded axis (size 1 per device)
             r_buf, r_valid, r_id = r_buf[0], r_valid[0], r_id[0]
             s_buf, s_valid, s_id = s_buf[0], s_valid[0], s_id[0]
@@ -329,19 +291,15 @@ class DistributedJoinEngine:
                           split_axis=0, concat_axis=0, tiled=True)
             r_buf, r_valid, r_id = a2a(r_buf), a2a(r_valid), a2a(r_id)
             s_buf, s_valid, s_id = a2a(s_buf), a2a(s_valid), a2a(s_id)
-            # ---- the reducer: flatten received buffers, scheduled join
+            # ---- the reducer: flatten received buffers, dense join
             rb = r_buf.reshape(-1, r_buf.shape[-1])
             rv = r_valid.reshape(-1)
             ri = r_id.reshape(-1)
             sb = s_buf.reshape(-1, s_buf.shape[-1])
             sv = s_valid.reshape(-1)
             si = s_id.reshape(-1)
-            sched = cnts = None
-            if sched_args:
-                sched, cnts = sched_args[0][0], sched_args[1][0]
             bd, bi = _reducer_join(rb, rv, sb, sv, si, k, tile_s,
-                                   axis_names=axes, schedule=sched,
-                                   counts=cnts, tile_r=tile_r)
+                                   axis_names=axes, tile_r=tile_r)
             return (bd[None], bi[None], ri[None], rv[None])
 
         self._job2_cache[k] = jax.jit(job2)
@@ -354,9 +312,10 @@ class DistributedJoinEngine:
         per device along ``axis``).
 
         The shuffle is a genuine ``jax.lax.all_to_all`` on (n_dev, n_dev,
-        cap) send buffers; the reducers never see rows the bounds did not
-        ship, and with ``use_schedule`` they never even slice tiles the
-        bounds pruned.
+        cap) send buffers; the reducers never see rows the Theorem-6
+        bounds did not ship. (Tile-granular pruning beyond that lives in
+        the sharded megastep — ``distributed_knn_join`` routes L2 joins
+        there by default.)
         """
         index, n_dev = self.index, self.n_dev
         tile_r, tile_s = self.tile_r, self.tile_s
@@ -372,8 +331,8 @@ class DistributedJoinEngine:
         # sort/scatter on a real pod — see DESIGN.md §2.1 ragged-shuffle
         # note). Rows are pre-sorted by (partition, pivot distance):
         # bucket packing is order-preserving, so every received run is
-        # partition-coherent and the tile schedules stay tight. The S
-        # side comes pre-sorted from the index packing.
+        # partition-coherent. The S side comes pre-sorted from the
+        # index packing.
         g_r = qplan.group_of_r()
         src_r = (np.arange(n_r) * n_dev) // max(n_r, 1)
         cap_r = max(1, _route_counts(g_r, n_dev, qplan.n_groups, src_r))
@@ -398,29 +357,17 @@ class DistributedJoinEngine:
         ns_dev = n_dev * cap_s
         nr_tiles = -(-nq_dev // tile_r)
         ns_tiles = -(-ns_dev // tile_s)
-        if self.use_schedule:
-            schedule, counts, scheds = _device_schedules(
-                index, qplan, r_buf, r_valid, r_aux["part"], s_aux["part"],
-                s_aux["pdist"], s_valid, k, tile_r, tile_s, stats)
-            stats.tiles_total = n_dev * nr_tiles * ns_tiles
-            stats.tiles_visited = int(sum(sc.n_visits for sc in scheds))
-            stats.pairs_computed = stats.tiles_visited * tile_r * tile_s
-        else:
-            schedule = counts = None
-            stats.tiles_total = stats.tiles_visited = (
-                n_dev * nr_tiles * ns_tiles)
-            stats.pairs_computed = int(
-                (r_valid.sum(axis=(0, 2))[None, :]
-                 * s_valid.sum(axis=(0, 2))[:, None]).trace())
+        stats.tiles_total = stats.tiles_visited = (
+            n_dev * nr_tiles * ns_tiles)
+        stats.pairs_computed = int(
+            (r_valid.sum(axis=(0, 2))[None, :]
+             * s_valid.sum(axis=(0, 2))[:, None]).trace())
 
         pspec = P(axes if len(axes) > 1 else axes[0])
-        use_schedule = self.use_schedule
 
         with self.mesh:
             sh = NamedSharding(self.mesh, pspec)
             args = [r_buf, r_valid, r_aux["id"], s_buf, s_valid, s_aux["id"]]
-            if use_schedule:
-                args += [schedule, counts]
             args = [jax.device_put(x, sh) for x in args]
             bd, bi, ri, rv = self._job2(k)(*args)
 
@@ -447,19 +394,64 @@ def distributed_knn_join(
     axis: str | Tuple[str, ...] = "data",
     tile_s: int = 512,
     tile_r: int = 128,
-    use_schedule: bool = True,
+    reducer: str = "auto",
 ) -> JoinResult:
-    """One-shot wrapper: one ``DistributedJoinEngine`` batch from a
-    composite plan (callers that stream batches should hold the engine
-    and call ``join_batch`` per micro-batch instead). ``s`` must be the
-    dataset the plan's index was built from (its rows are served from
-    the index's packed copy)."""
+    """One-shot multi-device join from a composite plan (callers that
+    stream batches should hold an engine and call its per-batch entry
+    point instead). ``s`` must be the dataset the plan's index was built
+    from (its rows are served from the index's packed copy).
+
+    ``reducer`` picks the SPMD execution:
+
+    * ``"sharded"`` — the sharded megastep (``core.sharded``): the
+      plan's index payload is partitioned across the mesh devices once
+      (pivot groups → shards via the §5 geometric grouping), θ stays
+      global, every shard runs its own compacted Cor. 1 / Thm 2
+      schedule, and only the final k-runs are all-gathered. This
+      subsumed the old host-planned per-device scheduled reducer; its
+      output is bitwise the single-device megastep's. L2 only.
+    * ``"shuffle"`` — the explicit MapReduce mapping kept in this
+      module: Theorem-6-routed ``all_to_all`` shuffle + dense
+      per-device scan reduce (any metric; groups must equal the mesh
+      extent along ``axis``).
+    * ``"auto"`` (default) — ``"sharded"`` for L2, else ``"shuffle"``.
+    """
     if s is not None and s.shape[0] != plan.index.n_s:
         raise ValueError(f"s has {s.shape[0]} rows but the plan's index "
                          f"holds {plan.index.n_s}")
+    if reducer == "auto":
+        reducer = ("sharded" if plan.query.config.metric == "l2"
+                   else "shuffle")
+    if reducer == "sharded":
+        from .sharded import ShardedMegastepEngine
+        if plan.query.config.metric != "l2":
+            raise ValueError(
+                "reducer='sharded' supports metric='l2' only; use "
+                "reducer='shuffle' for other metrics")
+        # the sharded megastep wants a 1-D "shard" mesh; flatten whatever
+        # device grid the caller handed us (the shard count need not
+        # match the plan's group count — exactness is shard-invariant)
+        devs = np.asarray(mesh.devices).reshape(-1)
+        smesh = Mesh(devs, ("shard",))
+        cfg = dataclasses.replace(plan.query.config,
+                                  tile_s=tile_s, tile_r=tile_r)
+        engine = ShardedMegastepEngine(plan.index, cfg,
+                                       n_shards=int(devs.size), mesh=smesh)
+        stats = JoinStats(n_r=r.shape[0], n_s=plan.index.n_s)
+        d, ids = engine.join_batch(np.ascontiguousarray(r, np.float32),
+                                   stats=stats)
+        stats.n_batches = 1
+        # shards partition S disjointly — every row is resident exactly
+        # once, nothing reshuffles per batch
+        stats.replicas_s = plan.index.n_s
+        stats.pivot_pairs_computed = (
+            r.shape[0] * plan.index.n_pivots
+            + plan.index.n_s * plan.index.n_pivots)
+        return JoinResult(indices=ids, distances=d, stats=stats)
+    if reducer != "shuffle":
+        raise ValueError(f"unknown reducer {reducer!r}")
     engine = DistributedJoinEngine(
-        plan.index, mesh, axis=axis, tile_s=tile_s, tile_r=tile_r,
-        use_schedule=use_schedule)
+        plan.index, mesh, axis=axis, tile_s=tile_s, tile_r=tile_r)
     res = engine.join_batch(r, plan.query)
     # one-shot semantics: this call's plan paid S-side phase 1 too
     res.stats.pivot_pairs_computed += plan.index.n_s * plan.index.n_pivots

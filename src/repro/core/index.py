@@ -41,8 +41,71 @@ from .partition import assign_and_summarize, assign_to_pivots, build_summary
 from .pivots import select_pivots
 from .types import JoinConfig, SummaryTable
 
-__all__ = ["SIndex", "QueryPlan", "build_index", "plan_queries",
-           "as_float32_rows"]
+__all__ = ["SIndex", "QueryPlan", "ShardPacking", "build_index",
+           "plan_queries", "as_float32_rows"]
+
+
+@dataclasses.dataclass
+class ShardPacking:
+    """One segment's packed payload laid out per shard of a device mesh.
+
+    Pivot groups are assigned to shards by the paper's §5 geometric
+    grouping (`core.grouping.geometric_grouping`) balanced by partition
+    population — the same heuristic that balances reducers balances
+    shards. Rows are selected from the pivot-sorted packed layout, so
+    each shard's block stays in (partition, pivot-distance) order and
+    per-shard tiles remain partition-coherent; every shard is padded to
+    the same ``tiles_per_shard`` tile count (rows 0, gids/part −1) so a
+    single SPMD trace serves all shards. Per-shard Thm-2 tile stats are
+    computed over each shard's own pivot subset — absent partitions are
+    simply never ``present``, which is exactly what makes the Cor. 1 /
+    Thm 2 visit schedules compact *per shard* inside the sharded
+    megastep (`core.sharded`).
+    """
+
+    n_shards: int
+    bn: int
+    shard_of_part: np.ndarray   # (M,) int32 — shard owning each partition
+    tiles_per_shard: int        # uniform (max-padded) S-tile count
+    rows: np.ndarray            # (n_shards, tiles*bn, dim) float32
+    gids_local: np.ndarray      # (n_shards, tiles*bn) int64, -1 padding
+    part: np.ndarray            # (n_shards, tiles*bn) int32, -1 padding
+    dist: np.ndarray            # (n_shards, tiles*bn) float32
+    rows_per_shard: np.ndarray  # (n_shards,) int64 — real rows per shard
+    sd_min: np.ndarray          # (n_shards, tiles, M) per-shard Thm-2 stats
+    sd_max: np.ndarray          # (n_shards, tiles, M)
+    present: np.ndarray         # (n_shards, tiles, M) bool
+    _quant: object = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def ensure_quant(self):
+        """Per-shard int8 twins ``(codes, scales, eps)`` of the shard
+        blocks (stacked on a leading shard axis), quantized per ``bn``
+        tile like the single-device payload (`repro.quant.quantize`).
+        Padding rows quantize to exact zeros (code 0, ε 0) and stay
+        masked by liveness, so the per-shard ε bounds are sound for the
+        rows that matter."""
+        if self._quant is None:
+            from repro.quant.quantize import quantize_rows
+            qs = [quantize_rows(self.rows[j], self.bn)
+                  for j in range(self.n_shards)]
+            self._quant = (np.stack([q.q for q in qs]),
+                           np.stack([q.scales for q in qs]),
+                           np.stack([q.eps for q in qs]))
+        return self._quant
+
+    def nbytes_per_shard(self, *, quantized: bool = False) -> np.ndarray:
+        """Resident row-payload bytes each shard holds — real rows (and
+        their real tiles), not the uniform padding — mirroring what
+        `SIndex.nbytes_resident` counts for the single-device payload.
+        The spread across shards is the balance signal benches report."""
+        dim = int(self.rows.shape[-1])
+        rows = self.rows_per_shard.astype(np.int64)
+        if not quantized:
+            return rows * (4 * dim)
+        tiles = -(-rows // self.bn)
+        # int8 codes + one f32 scale per tile + one f16 ε per row
+        return rows * dim + tiles * 4 + rows * 2
 
 
 def as_float32_rows(x, *, what: str = "rows") -> np.ndarray:
@@ -94,6 +157,8 @@ class SIndex:
         default_factory=dict, repr=False, compare=False)
     _quant: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
+    _shards: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def n_s(self) -> int:
@@ -141,7 +206,61 @@ class SIndex:
             self._quant[bn] = quantize_rows(self.s_sorted, bn)
         return self._quant[bn]
 
-    def nbytes_resident(self, *, quantized: Optional[bool] = None) -> int:
+    def shard_packing(self, n_shards: int,
+                      bn: Optional[int] = None) -> ShardPacking:
+        """This segment's payload re-laid-out across ``n_shards`` mesh
+        shards at tile size ``bn`` (default ``config.tile_s``): pivot
+        groups → shards via §5 geometric grouping balanced by partition
+        population, rows/ids/tile-stats per shard (see `ShardPacking`).
+        Cached per ``(n_shards, bn)`` for the index's lifetime, like
+        `tile_stats` / `ensure_quant` — segments are immutable."""
+        bn = int(self.config.tile_s if bn is None else bn)
+        n_shards = int(n_shards)
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        key = (n_shards, bn)
+        if key not in self._shards:
+            m = self.n_pivots
+            # geometric_grouping rejects more groups than partitions —
+            # clamp; surplus shards simply hold no partitions (their
+            # tiles are never `present`, so schedules skip them)
+            eff = min(n_shards, m)
+            if eff == 1:
+                shard_of_part = np.zeros((m,), np.int32)
+            else:
+                shard_of_part = np.ascontiguousarray(
+                    G.geometric_grouping(self.pivd, self.t_s.counts, eff)
+                    .astype(np.int32))
+            shard_of_row = shard_of_part[self.s_part_sorted]
+            counts = np.bincount(shard_of_row, minlength=n_shards)
+            tiles = max(1, int(-(-counts.max() // bn)))
+            rpad = tiles * bn
+            rows = np.zeros((n_shards, rpad, self.dim), np.float32)
+            gids = np.full((n_shards, rpad), -1, np.int64)
+            part = np.full((n_shards, rpad), -1, np.int32)
+            dist = np.zeros((n_shards, rpad), np.float32)
+            for j in range(n_shards):
+                sel = shard_of_row == j
+                nj = int(counts[j])
+                rows[j, :nj] = self.s_sorted[sel]
+                gids[j, :nj] = self.s_ids_sorted[sel]
+                part[j, :nj] = self.s_part_sorted[sel]
+                dist[j, :nj] = self.s_dist_sorted[sel]
+            from .schedule import segment_tile_stats
+            stats = [segment_tile_stats(part[j], dist[j], m, bn)
+                     for j in range(n_shards)]
+            self._shards[key] = ShardPacking(
+                n_shards=n_shards, bn=bn, shard_of_part=shard_of_part,
+                tiles_per_shard=tiles, rows=rows, gids_local=gids,
+                part=part, dist=dist,
+                rows_per_shard=counts.astype(np.int64),
+                sd_min=np.stack([st[0] for st in stats]),
+                sd_max=np.stack([st[1] for st in stats]),
+                present=np.stack([st[2] for st in stats]))
+        return self._shards[key]
+
+    def nbytes_resident(self, *, quantized: Optional[bool] = None,
+                        n_shards: Optional[int] = None) -> int:
         """Device-resident bytes of the index's **row payload**: the
         fp32 packed rows, or — quantized — the int8 codes + per-tile
         scales + per-row ε bounds. Mode-independent per-row metadata
@@ -151,9 +270,17 @@ class SIndex:
         follows ``config.quantize`` alone — a lazily-built quantization
         (an explicit ``quantized=True`` query against an unquantized
         config) never flips what the bare call reports, and a
-        ``MutableIndex`` sum stays single-mode across its segments."""
+        ``MutableIndex`` sum stays single-mode across its segments.
+
+        With ``n_shards`` set, reports what sharding buys instead: the
+        **largest single shard's** row-payload bytes under the
+        `shard_packing` layout — the number that must fit one device's
+        HBM when the index runs sharded across a mesh."""
         if quantized is None:
             quantized = self.config.quantize != "none"
+        if n_shards is not None and int(n_shards) > 0:
+            sp = self.shard_packing(int(n_shards))
+            return int(sp.nbytes_per_shard(quantized=quantized).max())
         if not quantized:
             return int(self.s_sorted.nbytes)
         return int(self.ensure_quant().nbytes())

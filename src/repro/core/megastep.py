@@ -160,43 +160,29 @@ def _assign_bounds_schedule(q, n_valid, dead_total, segs, center, *,
     return qs, qcs, valid_s, perm, inv, th_q, sched, cnt
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("k", "bm", "bn", "metric", "dim", "n_finite_total",
-                     "seg_meta", "primary", "impl"))
-def _megastep(q, n_valid, dead_total, segs, tiles, state, *,
-              k: int, bm: int, bn: int, metric: str, dim: int,
-              n_finite_total: int, seg_meta: tuple, primary: int,
-              impl: str):
-    """assign → bounds → schedule → gather-top-k → merge, one trace.
+def _gather_topk_run(qs, qcs, valid_s, sched, cnt, tiles, *,
+                     k: int, bm: int, bn: int, metric: str, dim: int,
+                     impl: str):
+    """Stage 4 of the megastep: gather-top-kp over the (possibly
+    per-shard) compacted schedule. Factored out of `_megastep` so the
+    sharded engine (`core.sharded`) can run the identical graph inside a
+    ``shard_map`` body against one shard's tiles. The run keeps
+    kp ≥ k candidates so the canonical re-rank resolves the rank-k
+    boundary with exact distances, not the selection metric's fp noise.
 
-    ``q`` (B, dim) bucket-padded queries; ``n_valid`` traced scalar;
-    ``dead_total`` traced tombstone count; ``segs`` a tuple of per-segment
-    device dicts; ``tiles`` the concatenated device S-side; ``state`` an
-    optional carried (d, id_hi, id_lo) device run to dedup-merge into.
-    ``seg_meta`` is the static per-segment (M, kk, ns_tiles) signature —
-    part of the jit cache key, so a changed segment structure retraces
-    while steady-state batches hit the cache.
+    Returns ``(d_run, pos, valid_sel)``: the ascending selection-metric
+    run, packed-row positions (−1 = empty slot) and the validity mask.
     """
-    _bump_trace()              # runs at trace time only == jit cache miss
-
     import jax.numpy as jnp
 
-    from repro.kernels.sorted_merge import merge_sorted_runs, \
-        merge_sorted_runs_unique, next_pow2
+    from repro.kernels.sorted_merge import merge_sorted_runs, next_pow2
 
-    b = q.shape[0]
+    b = qs.shape[0]
     nr_tiles = b // bm
     kp = next_pow2(k)
     center = tiles["center"]
-    qs, qcs, valid_s, perm, inv, th_q, sched, cnt = _assign_bounds_schedule(
-        q, n_valid, dead_total, segs, center, k=k, bm=bm, metric=metric,
-        n_finite_total=n_finite_total, seg_meta=seg_meta, primary=primary)
     t_total = sched.shape[1]
 
-    # ---- 4. gather-top-kp over the concatenated schedule. The run keeps
-    # kp ≥ k candidates so the canonical re-rank below resolves the rank-k
-    # boundary with exact distances, not the selection metric's fp noise.
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels.distance_topk import distance_topk_gather_pallas
         d_run, pos = distance_topk_gather_pallas(
@@ -258,9 +244,18 @@ def _megastep(q, n_valid, dead_total, segs, tiles, state, *,
         neg, pos = jax.lax.top_k(-d2, kp)
         d_run = -neg
         valid_sel = (pos >= 0) & jnp.isfinite(d_run)
+    return d_run, pos, valid_sel
 
-    # ---- 5. canonical distances + global ids + stable re-sort (the
-    # exact re-rank over the kp-run) + optional carried-state merge
+
+def _canonical_runs(qs, tiles, pos, valid_sel, metric: str, take: int):
+    """Stage-5 head of the megastep: canonical distance recompute over
+    the gathered kp-run + global-id mapping + the stable exact re-sort,
+    keeping the best ``take`` columns as an ascending sorted run.
+    ``take=k`` is the single-device output; the sharded engine keeps the
+    full ``take=kp`` run so the in-mesh tree merge sees every column.
+    Returns ``(d_can, hi, lo)`` in schedule-sorted query order."""
+    import jax.numpy as jnp
+
     pos_c = jnp.clip(pos, 0, tiles["s"].shape[0] - 1)
     neigh = tiles["s"][pos_c]                               # (b, kp, dim)
     d_can = canonical_gathered(qs, neigh, metric)
@@ -268,9 +263,50 @@ def _megastep(q, n_valid, dead_total, segs, tiles, state, *,
     hi = jnp.where(valid_sel, tiles["id_hi"][pos_c], -1)
     lo = jnp.where(valid_sel, tiles["id_lo"][pos_c], -1)
     order = jnp.argsort(d_can, axis=1, stable=True)
-    d_can = jnp.take_along_axis(d_can, order, axis=1)[:, :k]
-    hi = jnp.take_along_axis(hi, order, axis=1)[:, :k]
-    lo = jnp.take_along_axis(lo, order, axis=1)[:, :k]
+    d_can = jnp.take_along_axis(d_can, order, axis=1)[:, :take]
+    hi = jnp.take_along_axis(hi, order, axis=1)[:, :take]
+    lo = jnp.take_along_axis(lo, order, axis=1)[:, :take]
+    return d_can, hi, lo
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "bm", "bn", "metric", "dim", "n_finite_total",
+                     "seg_meta", "primary", "impl"))
+def _megastep(q, n_valid, dead_total, segs, tiles, state, *,
+              k: int, bm: int, bn: int, metric: str, dim: int,
+              n_finite_total: int, seg_meta: tuple, primary: int,
+              impl: str):
+    """assign → bounds → schedule → gather-top-k → merge, one trace.
+
+    ``q`` (B, dim) bucket-padded queries; ``n_valid`` traced scalar;
+    ``dead_total`` traced tombstone count; ``segs`` a tuple of per-segment
+    device dicts; ``tiles`` the concatenated device S-side; ``state`` an
+    optional carried (d, id_hi, id_lo) device run to dedup-merge into.
+    ``seg_meta`` is the static per-segment (M, kk, ns_tiles) signature —
+    part of the jit cache key, so a changed segment structure retraces
+    while steady-state batches hit the cache.
+    """
+    _bump_trace()              # runs at trace time only == jit cache miss
+
+    import jax.numpy as jnp
+
+    from repro.kernels.sorted_merge import merge_sorted_runs_unique, \
+        next_pow2
+
+    kp = next_pow2(k)
+    center = tiles["center"]
+    qs, qcs, valid_s, perm, inv, th_q, sched, cnt = _assign_bounds_schedule(
+        q, n_valid, dead_total, segs, center, k=k, bm=bm, metric=metric,
+        n_finite_total=n_finite_total, seg_meta=seg_meta, primary=primary)
+
+    d_run, pos, valid_sel = _gather_topk_run(
+        qs, qcs, valid_s, sched, cnt, tiles, k=k, bm=bm, bn=bn,
+        metric=metric, dim=dim, impl=impl)
+
+    # ---- 5. canonical distances + global ids + stable re-sort (the
+    # exact re-rank over the kp-run) + optional carried-state merge
+    d_can, hi, lo = _canonical_runs(qs, tiles, pos, valid_sel, metric, k)
     d_can, hi, lo = d_can[inv], hi[inv], lo[inv]
 
     if state is not None:
@@ -440,13 +476,24 @@ class MegastepEngine:
             alive = (st["gids"] >= 0) & ~_in_sorted(st["gids"], tomb)
             payload = _Payload(
                 segs=st["segs_dev"],
-                tiles=dict(st["tiles_dev"],
-                           alive=jnp.asarray(alive.astype(np.float32))),
-                dead_total=jnp.asarray(np.int32(tomb.size)),
+                tiles=dict(st["tiles_dev"], alive=self._put_alive(alive)),
+                dead_total=self._put_rep(np.int32(tomb.size)),
                 seg_meta=st["seg_meta"], dim=st["dim"],
                 n_finite_total=st["n_finite_total"], primary=st["primary"])
             self._payload = (vkey, payload)
             return payload
+
+    # device-placement hooks: the single-device engine just uploads; the
+    # sharded engine (core.sharded) overrides these with mesh shardings
+    # so liveness lands shard-partitioned and scalars land replicated
+
+    def _put_alive(self, alive: np.ndarray):
+        import jax.numpy as jnp
+        return jnp.asarray(alive.astype(np.float32))
+
+    def _put_rep(self, x):
+        import jax.numpy as jnp
+        return jnp.asarray(x)
 
     def _build_struct(self, segs, bn: int, k: int) -> dict:
         import jax.numpy as jnp

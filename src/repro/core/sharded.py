@@ -1,0 +1,342 @@
+"""Sharded megastep: one logical datastore across a JAX device mesh.
+
+The fused megastep (`core.megastep`) applies the paper's Cor. 1 / Thm 2
+mapper-side filtering on exactly one device, so the resident payload —
+even ~3.7× smaller via int8 — caps the datastore at one HBM. This module
+re-expresses the paper's shuffle as **mesh partitioning**: pivot groups
+are assigned to shards by the §5 geometric grouping
+(`SIndex.shard_packing`), each shard holds only its groups' packed rows
+(+ int8 twins + ε bounds) and their Thm-2 tile stats, and the whole
+assign → θ → schedule → gather-top-k → exact-re-rank body runs SPMD
+inside ``shard_map`` (via `core.jax_compat`):
+
+* **θ is global, schedules are per shard.** Every shard carries the
+  replicated pivot geometry and T_S pivot-kNN lists of *all* segments,
+  so `megastep._assign_bounds_schedule` computes the identical union-θ
+  on every shard (Thm 3 over the union candidate set — bitwise the
+  single-device value). Its visit masks, though, are evaluated against
+  the shard's own tile stats: partitions a shard doesn't own are never
+  ``present``, so the compacted schedule visits only local tiles — the
+  paper's per-reducer pruning, reborn per shard.
+* **Only final k-runs cross the mesh.** Each shard's gather-top-kp run
+  is exactly re-ranked with canonical distances *locally*, then the
+  (kp-wide) sorted runs are all-gathered and folded through the
+  id-disjoint tree merge (`kernels.sorted_merge.tree_merge_runs`) —
+  never raw candidates, never row payloads. For the quantized tier the
+  per-shard certification lower bound is combined with ``lax.pmin`` so
+  the usual per-query soundness certificate covers rows *any* shard
+  coarse-pruned.
+* **Zero steady-state host syncs, per shard.** Every payload piece —
+  including the tombstone-count scalar and the enqueued queries — is
+  committed to the mesh (replicated or shard-partitioned) at
+  enqueue/refresh time, so the steady state runs entirely under
+  ``jax.transfer_guard("disallow")``, exactly like the single-device
+  engine it is bitwise-equal to.
+
+Exactness under sharding: the merged union of per-shard exact top-kp
+runs contains the true top-k (each true neighbor lives on exactly one
+shard and survives that shard's θ-schedule superset + exact re-rank;
+a row a shard drops at rank > kp has exact distance ≥ that shard's
+k-th ≥ the merged k-th). Shard count therefore never changes the
+output — pinned by the shard-invariance tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import numpy as np
+
+from .jax_compat import make_mesh, shard_map
+from .megastep import (MegastepEngine, _assign_bounds_schedule, _bump_trace,
+                       _canonical_runs, _gather_topk_run)
+from .types import JoinConfig
+
+__all__ = ["ShardedMegastepEngine"]
+
+# per-segment geometry keys that are shard-partitioned (leading shard
+# axis); everything else in a segment dict is replicated
+_SEG_SHARDED = ("sd_min", "sd_max", "present")
+# tile-payload keys that are replicated; everything else (rows, ids,
+# liveness, int8 twins) is shard-partitioned on its leading axis
+_TILES_REP = ("center",)
+
+
+def _mesh_specs(segs, tiles):
+    """PartitionSpecs matching the sharded payload layout: per-shard
+    arrays split on their leading axis over the "shard" mesh axis,
+    geometry/scalars replicated."""
+    from jax.sharding import PartitionSpec as P
+    seg_specs = tuple(
+        {key: (P("shard") if key in _SEG_SHARDED else P())
+         for key in sd}
+        for sd in segs)
+    tile_specs = {key: (P() if key in _TILES_REP else P("shard"))
+                  for key in tiles}
+    return seg_specs, tile_specs
+
+
+def _strip_shard(segs, tiles):
+    """Inside the shard_map body the partitioned arrays arrive with a
+    leading shard axis of extent 1 — strip it so the payload has exactly
+    the single-device shapes the shared megastep stages expect."""
+    segs = tuple(
+        {key: (val[0] if key in _SEG_SHARDED else val)
+         for key, val in sd.items()}
+        for sd in segs)
+    tiles = {key: (val if key in _TILES_REP else val[0])
+             for key, val in tiles.items()}
+    return segs, tiles
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "n_shards", "k", "bm", "bn", "metric", "dim",
+                     "n_finite_total", "seg_meta", "primary", "impl"))
+def _sharded_megastep(q, n_valid, dead_total, segs, tiles, state, *,
+                      mesh, n_shards: int, k: int, bm: int, bn: int,
+                      metric: str, dim: int, n_finite_total: int,
+                      seg_meta: tuple, primary: int, impl: str):
+    """The fp32 megastep under shard_map: per-shard schedule + gather +
+    exact re-rank, all-gather of the final kp-runs, in-mesh tree merge.
+    Bitwise the single-device `megastep._megastep` for any shard count.
+    """
+    _bump_trace()
+
+    import jax.numpy as jnp
+
+    from repro.kernels.sorted_merge import (merge_sorted_runs_unique,
+                                            next_pow2, tree_merge_runs)
+    from jax.sharding import PartitionSpec as P
+
+    kp = next_pow2(k)
+    seg_specs, tile_specs = _mesh_specs(segs, tiles)
+
+    @shard_map(mesh=mesh,
+               in_specs=(P(), P(), P(), seg_specs, tile_specs),
+               # all_gather + tree merge leaves every shard holding the
+               # identical final run — replicated in value, which the
+               # static VMA check can't see (same pattern as
+               # distributed.distributed_phase1)
+               out_specs=(P(), P(), P()), check_vma=False)
+    def body(q, n_valid, dead_total, segs, tiles):
+        segs, tiles = _strip_shard(segs, tiles)
+        # θ below is computed from the replicated union T_S lists —
+        # identical on every shard; the visit masks see only this
+        # shard's tile stats, so the compacted schedule is local
+        qs, qcs, valid_s, _perm, inv, _th, sched, cnt = \
+            _assign_bounds_schedule(
+                q, n_valid, dead_total, segs, tiles["center"], k=k, bm=bm,
+                metric=metric, n_finite_total=n_finite_total,
+                seg_meta=seg_meta, primary=primary)
+        d_run, pos, valid_sel = _gather_topk_run(
+            qs, qcs, valid_s, sched, cnt, tiles, k=k, bm=bm, bn=bn,
+            metric=metric, dim=dim, impl=impl)
+        # keep the full kp run: the cross-shard merge must see every
+        # column to resolve the global rank-k boundary exactly
+        d_can, hi, lo = _canonical_runs(qs, tiles, pos, valid_sel,
+                                        metric, kp)
+        d_can, hi, lo = d_can[inv], hi[inv], lo[inv]
+        if n_shards > 1:
+            gd = jax.lax.all_gather(d_can, "shard")
+            ghi = jax.lax.all_gather(hi, "shard")
+            glo = jax.lax.all_gather(lo, "shard")
+            d_can, (hi, lo) = tree_merge_runs(
+                [(gd[j], (ghi[j], glo[j])) for j in range(n_shards)])
+        return d_can[:, :k], hi[:, :k], lo[:, :k]
+
+    d, hi, lo = body(q, n_valid, dead_total, segs, tiles)
+
+    if state is not None:
+        sd, shi, slo = state
+        pad = ((0, 0), (0, kp - k))
+        md, (mhi, mlo) = merge_sorted_runs_unique(
+            jnp.pad(sd, pad, constant_values=jnp.inf),
+            (jnp.pad(shi, pad, constant_values=-1),
+             jnp.pad(slo, pad, constant_values=-1)),
+            jnp.pad(d, pad, constant_values=jnp.inf),
+            (jnp.pad(hi, pad, constant_values=-1),
+             jnp.pad(lo, pad, constant_values=-1)))
+        d, hi, lo = md[:, :k], mhi[:, :k], mlo[:, :k]
+    return d, hi, lo
+
+
+class _ShardedPayloadMixin:
+    """Shared mesh/payload machinery of the sharded engines: mesh
+    construction, replicated/partitioned device placement, and the
+    shard-laid-out `_build_struct` both the fp32 and quantized sharded
+    engines consume. Mixed in *before* the single-device engine so its
+    placement hooks and payload build win the MRO."""
+
+    def _init_mesh(self, n_shards, mesh) -> None:
+        if mesh is not None:
+            if "shard" not in mesh.axis_names:
+                raise ValueError(
+                    f"sharded megastep needs a mesh with a 'shard' axis, "
+                    f"got axes {mesh.axis_names}")
+            self.mesh = mesh
+            self.n_shards = int(mesh.shape["shard"])
+            if n_shards is not None and int(n_shards) != self.n_shards:
+                raise ValueError(
+                    f"n_shards={n_shards} disagrees with the mesh's "
+                    f"'shard' extent {self.n_shards}")
+            return
+        avail = len(jax.devices())
+        n_shards = avail if n_shards is None else int(n_shards)
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if n_shards > avail:
+            raise ValueError(
+                f"n_shards={n_shards} exceeds the {avail} visible "
+                f"device(s); for a simulated mesh set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{n_shards} before importing jax")
+        self.mesh = make_mesh((n_shards,), ("shard",))
+        self.n_shards = n_shards
+
+    # ---- device placement: commit everything to the mesh so the jit
+    # over sharded args never sees a single-device-committed array (that
+    # raises "incompatible devices") and the steady state never moves a
+    # byte — both replicated and partitioned pieces land at refresh /
+    # enqueue time, outside any transfer guard
+
+    def _put_rep(self, x):
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.device_put(jnp.asarray(x),
+                              NamedSharding(self.mesh, P()))
+
+    def _put_shard(self, x):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.device_put(np.ascontiguousarray(x),
+                              NamedSharding(self.mesh, P("shard")))
+
+    def _put_alive(self, alive: np.ndarray):
+        return self._put_shard(alive.astype(np.float32))
+
+    def enqueue(self, queries: np.ndarray):
+        q = np.ascontiguousarray(queries, np.float32)
+        n = q.shape[0]
+        bucket = self.bucket_for(n)
+        if bucket != n:
+            q = np.pad(q, ((0, bucket - n), (0, 0)))
+        return self._put_rep(q), self._put_rep(np.int32(n))
+
+    def dispatch(self, queries, *, stats=None):
+        if stats is not None:
+            stats.n_shards = self.n_shards
+        return super().dispatch(queries, stats=stats)
+
+    def nbytes_per_shard(self, *,
+                         quantized: Optional[bool] = None) -> np.ndarray:
+        """Resident row-payload bytes per shard, summed over live
+        segments — the per-device HBM figure `SIndex.nbytes_resident(
+        n_shards=...)` reports the max of (see `index.ShardPacking`)."""
+        segs, _, _ = self._index_parts()
+        out = np.zeros((self.n_shards,), np.int64)
+        for si, _ in segs:
+            qz = ((si.config.quantize != "none")
+                  if quantized is None else quantized)
+            sp = si.shard_packing(self.n_shards, self._bn)
+            out += sp.nbytes_per_shard(quantized=qz)
+        return out
+
+    # ---- the shard-laid-out payload
+
+    def _build_struct(self, segs, bn: int, k: int) -> dict:
+        n_sh = self.n_shards
+        live_ids = set(id(si) for si, _ in segs)
+        self._seg_cache = {key: v for key, v in self._seg_cache.items()
+                           if key[0] in live_ids}
+        dim = segs[0][0].dim
+        quant = getattr(self, "mode", "fp32") == "int8"
+        seg_meta = []
+        n_finite_total = 0
+        sizes = []
+        packs = []
+        for si, off in segs:
+            key = (id(si), bn, n_sh)
+            ent = self._seg_cache.get(key)
+            if ent is None:
+                ent = dict(si=si, sp=si.shard_packing(n_sh, bn),
+                           knn_np=si.t_s.knn_dists)
+                self._seg_cache[key] = ent
+            sp = ent["sp"]
+            kk = min(k, ent["knn_np"].shape[1])
+            n_finite_total += int(np.isfinite(ent["knn_np"][:, :kk]).sum())
+            seg_meta.append((si.n_pivots, kk, sp.tiles_per_shard))
+            sizes.append(si.n_s)
+            packs.append((si, off, sp))
+        # the selection center must be bitwise the single-device one:
+        # same rows, same (segment, partition, dist) order, same f64
+        # mean — sharding must not perturb the selection metric
+        all_rows = (np.concatenate([si.s_sorted for si, _, _ in packs])
+                    if sum(sizes) else np.zeros((0, dim), np.float32))
+        center = (all_rows.mean(axis=0, dtype=np.float64)
+                  .astype(np.float32) if all_rows.shape[0] else
+                  np.zeros((dim,), np.float32))
+        segs_dev = []
+        for si, off, sp in packs:
+            segs_dev.append(dict(
+                pivots_c=self._put_rep(si.pivots - center[None, :]),
+                pivd=self._put_rep(si.pivd.astype(np.float32)),
+                knn=self._put_rep(si.t_s.knn_dists.astype(np.float32)),
+                sd_min=self._put_shard(sp.sd_min),
+                sd_max=self._put_shard(sp.sd_max),
+                present=self._put_shard(sp.present)))
+        rows_all = np.concatenate([sp.rows for _, _, sp in packs], axis=1)
+        gids = np.concatenate(
+            [np.where(sp.gids_local >= 0, sp.gids_local + off, -1)
+             for _, off, sp in packs], axis=1)
+        hi = (gids >> 32).astype(np.int32)
+        lo = (gids & np.int64(0xFFFFFFFF)).astype(np.uint32).view(np.int32)
+        tiles_dev = dict(center=self._put_rep(center),
+                         id_hi=self._put_shard(hi),
+                         id_lo=self._put_shard(lo),
+                         s=self._put_shard(rows_all))
+        if quant:
+            sqs, scs, eps = zip(*(sp.ensure_quant()
+                                  for _, _, sp in packs))
+            tiles_dev["sq"] = self._put_shard(np.concatenate(sqs, axis=1))
+            tiles_dev["sscale"] = self._put_shard(
+                np.concatenate(scs, axis=1))
+            tiles_dev["seps"] = self._put_shard(np.concatenate(eps, axis=1))
+        return dict(
+            segs_dev=tuple(segs_dev), tiles_dev=tiles_dev, rows_host=None,
+            gids=gids, seg_meta=tuple(seg_meta), dim=dim,
+            n_finite_total=n_finite_total, primary=int(np.argmax(sizes)))
+
+    def _sharded_fp32_call(self, q_dev, n_valid_dev, state=None):
+        from repro.kernels import ops
+        payload = self._refresh()
+        bucket = int(q_dev.shape[0])
+        bm = min(bucket, self._bm_cap)
+        impl = self.impl or ("pallas" if ops.use_pallas() else "ref")
+        return _sharded_megastep(
+            q_dev, n_valid_dev, payload.dead_total, payload.segs,
+            payload.tiles, state, mesh=self.mesh, n_shards=self.n_shards,
+            k=self.config.k, bm=bm, bn=self._bn,
+            metric=self.config.metric, dim=payload.dim,
+            n_finite_total=payload.n_finite_total,
+            seg_meta=payload.seg_meta, primary=payload.primary, impl=impl)
+
+
+class ShardedMegastepEngine(_ShardedPayloadMixin, MegastepEngine):
+    """`MegastepEngine` over a 1-D "shard" mesh: the same dispatch() /
+    finalize() surface and the same bitwise output, with the index
+    payload partitioned across shards by `SIndex.shard_packing` and the
+    megastep running SPMD (see module docstring).
+
+    ``n_shards=None`` spans every visible device; pass an explicit
+    ``mesh`` (with a "shard" axis) to co-locate with other meshes.
+    """
+
+    def __init__(self, index, config: Optional[JoinConfig] = None, *,
+                 n_shards: Optional[int] = None, mesh=None,
+                 bucket_min: int = 16, impl: Optional[str] = None):
+        self._init_mesh(n_shards, mesh)
+        super().__init__(index, config, bucket_min=bucket_min, impl=impl)
+
+    def join_batch_device(self, q_dev, n_valid_dev, *, state=None):
+        return self._sharded_fp32_call(q_dev, n_valid_dev, state)

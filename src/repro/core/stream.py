@@ -172,10 +172,17 @@ class StreamJoinEngine:
     bitwise the oracle's results. Takes precedence over ``megastep``
     (it *is* a megastep-mode engine). Default ``None`` follows
     ``config.quantize``.
+
+    ``n_shards``: partition the resident payload across a mesh of that
+    many devices and run the fused pass SPMD (`core.sharded` — bitwise
+    the single-device engines, zero steady-state host syncs per shard).
+    Requires a megastep-mode path (the host-planned engines have no
+    mesh payload); ``n_shards=None`` stays single-device.
     """
 
     def __init__(self, index, config: Optional[JoinConfig] = None, *,
-                 megastep: object = False, quantized: Optional[bool] = None):
+                 megastep: object = False, quantized: Optional[bool] = None,
+                 n_shards: Optional[int] = None):
         self.index = index
         self.config = config or index.config
         if quantized is None:
@@ -184,11 +191,26 @@ class StreamJoinEngine:
             megastep = self.config.metric == "l2"
         self._megastep = None
         if quantized:
-            from repro.quant.engine import QuantMegastepEngine
-            self._megastep = QuantMegastepEngine(index, self.config)
+            if n_shards is not None:
+                from repro.quant.engine import ShardedQuantMegastepEngine
+                self._megastep = ShardedQuantMegastepEngine(
+                    index, self.config, n_shards=n_shards)
+            else:
+                from repro.quant.engine import QuantMegastepEngine
+                self._megastep = QuantMegastepEngine(index, self.config)
         elif megastep:
-            from .megastep import MegastepEngine
-            self._megastep = MegastepEngine(index, self.config)
+            if n_shards is not None:
+                from .sharded import ShardedMegastepEngine
+                self._megastep = ShardedMegastepEngine(
+                    index, self.config, n_shards=n_shards)
+            else:
+                from .megastep import MegastepEngine
+                self._megastep = MegastepEngine(index, self.config)
+        elif n_shards is not None:
+            raise ValueError(
+                "n_shards requires a megastep-mode engine (megastep=True/"
+                "'auto' or quantized=True) — the host-planned path has "
+                "no mesh-resident payload to shard")
 
     @property
     def megastep_engine(self):
@@ -286,6 +308,7 @@ def knn_join_batched(
     batch_size: int = 0,
     megastep: object = False,
     quantized: Optional[bool] = None,
+    n_shards: Optional[int] = None,
 ) -> JoinResult:
     """Streaming PGBJ join: R in micro-batches against a build-once index.
 
@@ -299,7 +322,9 @@ def knn_join_batched(
     fused device-resident megastep instead of the host-planned path —
     identical results, one jitted pass per batch. ``quantized=True``
     runs each batch through the two-tier int8 engine (`repro.quant`) —
-    identical results again, 4× smaller resident index.
+    identical results again, 4× smaller resident index. ``n_shards=N``
+    shards either megastep-mode payload across an N-device mesh
+    (`core.sharded`) — identical results once more, N× the HBM.
 
     Exactness: equals one-shot ``knn_join`` against the same index for
     any batch split. Results are ordered by arrival: row ``j`` of the
@@ -333,7 +358,7 @@ def knn_join_batched(
     batch_size = max(1, batch_size)   # |R| = 0 must not zero the stride
 
     engine = StreamJoinEngine(index, config, megastep=megastep,
-                              quantized=quantized)
+                              quantized=quantized, n_shards=n_shards)
     stats = JoinStats(n_s=index.n_s)
     if built_here:   # a reused index's S phase 1 was paid at build time
         stats.pivot_pairs_computed += index.n_s * index.n_pivots

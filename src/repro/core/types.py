@@ -129,6 +129,9 @@ class JoinStats:
     tiles_visited: int = 0
     # streaming engine: planned+joined R micro-batches (0 = one-shot path)
     n_batches: int = 0
+    # sharded megastep (core.sharded): mesh shards the batch fanned over
+    # (0 = single-device path)
+    n_shards: int = 0
     # mutable segmented index (core.segments): live segments fanned over
     # at query time (sealed deltas + write buffer), tombstoned rows
     # masked during the merge, and total time spent in compact()

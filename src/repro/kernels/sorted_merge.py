@@ -43,7 +43,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["next_pow2", "bitonic_sort", "tile_topk", "merge_sorted_runs",
-           "mask_duplicate_ids", "merge_sorted_runs_unique"]
+           "mask_duplicate_ids", "merge_sorted_runs_unique",
+           "tree_merge_runs"]
 
 
 def next_pow2(n: int) -> int:
@@ -194,3 +195,30 @@ def merge_sorted_runs_unique(ad, ai, bd, bi):
     d, i = bitonic_sort(d, i)
     return d[..., :kp], _like(ai, tuple(
         x[..., :kp] for x in _as_tuple(i)))
+
+
+def tree_merge_runs(runs, *, unique: bool = False):
+    """Fold N ascending ``(d, ids)`` runs into one through a balanced
+    pairwise merge tree — ⌈log2 N⌉ rounds of `merge_sorted_runs`.
+
+    This is the sharded megastep's reduction (`core.sharded`): each mesh
+    shard contributes its exact per-shard top-kp run, and because rows
+    live on exactly one shard the runs are id-disjoint, so the cheap
+    odd-even merge suffices — padding lanes (+inf, id −1) just sink to
+    the tail. Pass ``unique=True`` when the runs may overlap (carried
+    stream states); that routes each fold through the dedup merge
+    instead. All runs must share the same pow2 width; ids may be single
+    arrays or lockstep tuples.
+    """
+    assert runs, "tree_merge_runs needs at least one run"
+    fold = merge_sorted_runs_unique if unique else merge_sorted_runs
+    runs = list(runs)
+    while len(runs) > 1:
+        nxt = []
+        for a in range(0, len(runs) - 1, 2):
+            (ad, ai), (bd, bi) = runs[a], runs[a + 1]
+            nxt.append(fold(ad, ai, bd, bi))
+        if len(runs) % 2:
+            nxt.append(runs[-1])
+        runs = nxt
+    return runs[0]

@@ -2,7 +2,9 @@
 re-rank (see `repro.quant.quantize` for the representation and
 `repro.quant.engine` for the two-tier execution engine)."""
 from .quantize import QuantizedRows, quantize_rows, quantize_queries_np
-from .engine import QuantMegastepEngine, quantize_queries_jnp
+from .engine import (QuantMegastepEngine, ShardedQuantMegastepEngine,
+                     quantize_queries_jnp)
 
 __all__ = ["QuantizedRows", "quantize_rows", "quantize_queries_np",
-           "QuantMegastepEngine", "quantize_queries_jnp"]
+           "QuantMegastepEngine", "ShardedQuantMegastepEngine",
+           "quantize_queries_jnp"]

@@ -57,6 +57,9 @@ class Datastore:
     values: np.ndarray     # (N_alloc,) int32 token ids, aligned to keys
     index: MutableIndex    # segmented mutable S side (base + deltas)
     config: JoinConfig
+    # shard the resident payload across a mesh of this many devices and
+    # serve through the sharded megastep (core.sharded); 0 = one device
+    n_shards: int = 0
     # one resident engine per k: the megastep's uploaded index payload
     # and compiled step live here and survive across decode steps
     _engines: dict = dataclasses.field(default_factory=dict, repr=False)
@@ -81,7 +84,7 @@ class Datastore:
     @classmethod
     def build(cls, keys, values, *, k: int = 8, n_pivots: int = 256,
               n_groups: int = 8, seed: int = 0, seal_threshold: int = 4096,
-              quantized: bool = False):
+              quantized: bool = False, n_shards: int = 0):
         """S-side phase 1, once, over the initial keys: after this,
         serving touches pre-existing keys only through the segments'
         packed layouts — growth happens in delta segments.
@@ -90,7 +93,9 @@ class Datastore:
         cast to float32 once here. ``quantized=True`` stamps
         ``quantize="int8"`` into the config, so every segment (base,
         sealed deltas, compacted rebuilds) carries its int8 codes and
-        retrieval serves through the quantized tier."""
+        retrieval serves through the quantized tier. ``n_shards=N``
+        partitions the resident payload across an N-device mesh and
+        serves through the sharded megastep — same bits, N× the HBM."""
         keys = as_float32_rows(keys, what="datastore keys")
         cfg = JoinConfig(k=k, n_pivots=min(n_pivots, keys.shape[0]),
                          n_groups=n_groups, grouping="geometric", seed=seed,
@@ -98,7 +103,7 @@ class Datastore:
         return cls(keys=keys, values=np.asarray(values, np.int32),
                    index=MutableIndex.build(keys, cfg,
                                             seal_threshold=seal_threshold),
-                   config=cfg)
+                   config=cfg, n_shards=int(n_shards))
 
     @property
     def n_entries(self) -> int:
@@ -156,7 +161,8 @@ class Datastore:
                 cfg = self.config if kk == self.config.k \
                     else dataclasses.replace(self.config, k=kk)
                 eng = StreamJoinEngine(self.index, cfg, megastep="auto",
-                                       quantized=self.quantized)
+                                       quantized=self.quantized,
+                                       n_shards=self.n_shards or None)
                 me = eng.megastep_engine
                 if me is not None:
                     me.refresh_lock = self._lock

@@ -1,6 +1,12 @@
 """Distributed (shard_map) join — runs in a subprocess with 8 forced host
 devices so the main pytest process keeps the real (1-device) topology.
 
+``distributed_knn_join`` is a compatibility wrapper over two SPMD
+executions: the default ``reducer="sharded"`` routes L2 joins through
+the sharded megastep (core.sharded — payload partitioned once, bitwise
+the single-device megastep), and ``reducer="shuffle"`` keeps the
+explicit Theorem-6-routed all_to_all + dense scan mapping.
+
 Mesh construction goes through ``repro.core.jax_compat.make_mesh``: the
 seed failure here was ``jax.sharding.AxisType`` not existing on the
 installed JAX (it appeared after 0.4.x), not device-count flakiness.
@@ -22,6 +28,7 @@ _SCRIPT = textwrap.dedent("""
     from repro.core import JoinConfig, brute_force_knn, plan_join
     from repro.core.distributed import build_shuffle_spec, distributed_knn_join
     from repro.core.jax_compat import make_mesh
+    from repro.core.megastep import MegastepEngine
     from repro.distributed.fault import regroup
 
     rng = np.random.default_rng(7)
@@ -34,28 +41,53 @@ _SCRIPT = textwrap.dedent("""
     plan = plan_join(R, S, cfg)
     bd, bi = brute_force_knn(R, S, k)
 
+    # default reducer="auto" resolves to the sharded megastep for L2
     mesh = make_mesh((8,), ("data",))
     res = distributed_knn_join(R, S, plan, mesh, axis="data")
-    out["single_axis_exact"] = bool(np.allclose(res.distances, bd, atol=1e-3))
-    out["replicas"] = int(res.stats.replicas_s)
-    # pruned-schedule accounting: the reducers execute exactly the
-    # compacted schedules, never the pruned remainder
-    out["tiles"] = [int(res.stats.tiles_visited), int(res.stats.tiles_total)]
+    out["sharded_exact"] = bool(np.allclose(res.distances, bd, atol=1e-3))
+    out["n_shards"] = int(res.stats.n_shards)
+    out["replicas_sharded"] = int(res.stats.replicas_s)
 
-    # dense (unscheduled) reducer must agree bit-for-bit on distances
+    # pointer test: the wrapper's sharded route is *bitwise* the
+    # single-device megastep over the same index/config — the wrapper
+    # adds no numerics of its own
+    import dataclasses
+    cfg_t = dataclasses.replace(plan.query.config, tile_s=512, tile_r=128)
+    d1, i1 = MegastepEngine(plan.index, cfg_t).join_batch(R)
+    out["sharded_bitwise_single"] = bool(
+        np.array_equal(res.distances, d1)
+        and np.array_equal(res.indices, i1))
+
+    # explicit shuffle reducer: the Theorem-6 all_to_all mapping, dense
+    # per-device scan — must agree on distances
     res_d = distributed_knn_join(R, S, plan, mesh, axis="data",
-                                 use_schedule=False)
-    out["dense_exact"] = bool(np.allclose(res_d.distances, bd, atol=1e-3))
+                                 reducer="shuffle")
+    out["shuffle_exact"] = bool(np.allclose(res_d.distances, bd, atol=1e-3))
+    out["shuffle_n_shards"] = int(res_d.stats.n_shards)
+    out["replicas"] = int(res_d.stats.replicas_s)
+    out["tiles"] = [int(res_d.stats.tiles_visited),
+                    int(res_d.stats.tiles_total)]
 
+    # the sharded route flattens any device grid into a 1-D shard mesh;
+    # the shuffle route runs SPMD over the joint axes
     mesh2 = make_mesh((4, 2), ("data", "model"))
-    res2 = distributed_knn_join(R, S, plan, mesh2, axis=("data", "model"))
+    res2 = distributed_knn_join(R, S, plan, mesh2, axis=("data", "model"),
+                                reducer="shuffle")
     out["two_axis_exact"] = bool(np.allclose(res2.distances, bd, atol=1e-3))
+    res2s = distributed_knn_join(R, S, plan, mesh2, axis=("data", "model"))
+    out["two_axis_sharded_bitwise"] = bool(
+        np.array_equal(res2s.distances, d1))
 
-    # elastic: shrink to 4 groups, run on a 4-device submesh
+    # elastic: shrink to 4 groups, run on a 4-device submesh (sharded is
+    # group-count-invariant; shuffle needs groups == mesh extent)
     plan4 = regroup(plan, 4)
     mesh4 = make_mesh((4,), ("data",))
     res4 = distributed_knn_join(R, S, plan4, mesh4, axis="data")
     out["shrunk_exact"] = bool(np.allclose(res4.distances, bd, atol=1e-3))
+    res4s = distributed_knn_join(R, S, plan4, mesh4, axis="data",
+                                 reducer="shuffle")
+    out["shrunk_shuffle_exact"] = bool(
+        np.allclose(res4s.distances, bd, atol=1e-3))
 
     # capacity model must bound actual packing (Thm 7 load-bearing)
     spec = build_shuffle_spec(plan, 8)
@@ -84,11 +116,20 @@ def test_distributed_join_subprocess():
                           capture_output=True, text=True, timeout=560)
     assert proc.returncode == 0, proc.stderr[-3000:]
     out = json.loads(proc.stdout.strip().splitlines()[-1])
-    assert out["single_axis_exact"]
-    assert out["dense_exact"]
+    assert out["sharded_exact"]
+    assert out["sharded_bitwise_single"]
+    assert out["n_shards"] == 8
+    assert out["shuffle_exact"]
+    assert out["shuffle_n_shards"] == 0  # shuffle path: single-device stats
     assert out["two_axis_exact"]
+    assert out["two_axis_sharded_bitwise"]
     assert out["shrunk_exact"]
+    assert out["shrunk_shuffle_exact"]
     assert out["phase1_exact"]
     assert out["caps"][0] >= 1 and out["caps"][1] >= 1
-    assert out["replicas"] >= 700  # self+replication ≥ |S| shipped once
-    assert 0 < out["tiles"][0] <= out["tiles"][1]
+    # shuffle ships self+replication ≥ |S| once; sharded is resident —
+    # every row lives on exactly one shard
+    assert out["replicas"] >= 700
+    assert out["replicas_sharded"] == 700
+    # dense reducer accounting: every received tile is visited
+    assert out["tiles"][0] == out["tiles"][1] > 0
