@@ -34,6 +34,12 @@ claims rest on:
   ``goodput_2x_rows_s``, ``bitwise_equal`` on the exact path, and the
   hard-zero ``deadline_violations_dispatched`` invariant (no request is
   ever dispatched to a device after its deadline).
+* ``kernel_shard_failover`` — the fault-tolerance contract
+  (mesh runs only; the row is absent on a 1-device sweep):
+  ``failover_bitwise_equal`` (HARD_ONE — losing a shard with a live
+  replica never changes a bit, through failover, degraded-view serving
+  and recovery) and ``n_expired_dispatched_failover`` (HARD_ZERO — the
+  deadline re-check at the failover instant holds).
 
 Baselines: ``BENCH_kernels.json`` records the full-size sweep;
 ``BENCH_kernels_fast.json`` records the ``--fast`` (CI-sized) sweep —
@@ -97,7 +103,12 @@ HARD_ZERO = [("kernel_megastep_vs_hostplanned", "device_steady_state_syncs"),
              # a request whose deadline passed may NEVER reach a device:
              # the scheduler sheds at batch formation and re-checks
              # across retry backoff — any nonzero count is a policy bug
-             ("kernel_serving_under_load", "deadline_violations_dispatched")]
+             ("kernel_serving_under_load", "deadline_violations_dispatched"),
+             # the same invariant across shard failover: the scheduler
+             # re-checks deadlines at the failover instant, so a request
+             # whose deadline passed during the failure window is shed,
+             # never re-dispatched (kernel_bench.shard_failover_bench)
+             ("kernel_shard_failover", "n_expired_dispatched_failover")]
 # metrics that must be exactly 1.0 in the current sweep, baseline or not
 HARD_ONE = [("kernel_quant_coarse_vs_fp32", "bitwise_equal"),
             # the scheduler's exact (non-degraded) path is the engine
@@ -105,15 +116,28 @@ HARD_ONE = [("kernel_quant_coarse_vs_fp32", "bitwise_equal"),
             ("kernel_serving_under_load", "bitwise_equal"),
             # shard count must never change the output — the sharded
             # megastep's whole contract (core.sharded module docstring)
-            ("kernel_sharded_vs_single", "bitwise_equal")]
+            ("kernel_sharded_vs_single", "bitwise_equal"),
+            # ...and neither may losing a shard while a live replica
+            # remains: r=2 failover, post-failover serving, and
+            # post-recovery serving are all bitwise the single-device
+            # engine (shard_failover_bench folds every gate into this)
+            ("kernel_shard_failover", "failover_bitwise_equal")]
 
 
 def _rows(records: list, bench: str) -> list:
     return [r for r in records if r.get("bench") == bench]
 
 
-def check(baseline: list, current: list) -> list[str]:
-    """Returns a list of human-readable failure messages (empty = pass)."""
+def check(baseline: list, current: list, *,
+          subset: bool = False) -> list[str]:
+    """Returns a list of human-readable failure messages (empty = pass).
+
+    ``subset=True`` is for guarding a ``--only``-filtered sweep (the CI
+    mesh steps): benches absent from the current record are simply not
+    compared instead of counting as crashed — the ratio CHECKS still
+    apply to rows that are present, and the HARD_ZERO / HARD_ONE
+    invariants always apply to every current row.
+    """
     failures = []
     for bench, metric, direction, slack in CHECKS:
         base_rows = _rows(baseline, bench)
@@ -121,9 +145,10 @@ def check(baseline: list, current: list) -> list[str]:
         if not base_rows:
             continue   # metric not in the committed baseline yet
         if not cur_rows:
-            failures.append(
-                f"{bench}: row missing from the current sweep (the bench "
-                f"crashed or was removed) — baseline has it")
+            if not subset:
+                failures.append(
+                    f"{bench}: row missing from the current sweep (the "
+                    f"bench crashed or was removed) — baseline has it")
             continue
         if metric not in base_rows[0]:
             continue   # metric newer than the committed baseline
@@ -167,8 +192,8 @@ def check(baseline: list, current: list) -> list[str]:
             if float(row.get(metric, 0.0)) != 1.0:
                 failures.append(
                     f"{bench}.{metric} = {row.get(metric, '<missing>')} — "
-                    f"the quantized path's contract is bitwise equality "
-                    f"with the fp32 oracle; an inexact (or unreported) "
+                    f"this row's contract is bitwise equality with the "
+                    f"exact oracle path; an inexact (or unreported) "
                     f"result is a correctness bug, not a perf regression.")
     return failures
 
@@ -180,12 +205,15 @@ def main() -> None:
                          "BENCH_kernels_fast.json for --fast runs)")
     ap.add_argument("--current", required=True,
                     help="fresh benchmarks.run --json output")
+    ap.add_argument("--subset", action="store_true",
+                    help="the current record is an --only-filtered sweep: "
+                         "don't treat benches it never ran as crashed")
     args = ap.parse_args()
     with open(args.baseline) as fh:
         baseline = json.load(fh)
     with open(args.current) as fh:
         current = json.load(fh)
-    failures = check(baseline, current)
+    failures = check(baseline, current, subset=args.subset)
     if failures:
         print("benchmark regression guard FAILED:", file=sys.stderr)
         for f in failures:

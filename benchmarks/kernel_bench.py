@@ -653,6 +653,159 @@ def _pack_send_buffers_loop(rows, aux, dest, src_of_row, n_src, n_dst, cap):
     return buf, nbuf, valid
 
 
+def shard_failover_bench(n: int = 20000, batches: int = 6) -> List[Row]:
+    """Shard fault tolerance (core.sharded + serve.scheduler): what a
+    mid-stream shard loss costs and what it is allowed to change.
+
+    Three arms on one clustered index (kmeans pivots — the regime where
+    the degraded-coverage certificate is non-vacuous):
+
+    * **r=2 failover** — warm replicated engine, one shard killed
+      mid-stream via an armed :class:`ShardFault`; the internal
+      failover retry, every post-failover batch, and the post-
+      ``recover()`` batches must all stay **bitwise** the single-device
+      engine (``failover_bitwise_equal``, HARD_ONE — replica placement
+      serves each pivot group exactly once, so the shard-invariance
+      argument applies verbatim). Reports failover/recovery latency
+      and the r× HBM cost of replication.
+    * **r=1 degraded coverage** — the same loss with no replica left:
+      the surviving shards answer with per-query certified recall
+      lower bounds, checked *sound* here against the brute-force
+      oracle (the bench raises on any violation).
+    * **scheduler failover** — a double-buffered scheduler hits the
+      shard failure at finalize; the batch re-enters the engine rung
+      and completes bitwise, and ``n_expired_dispatched_failover``
+      (HARD_ZERO) pins that the deadline re-check at the failover
+      instant never lets an expired request reach a device.
+
+    Empty on <2 devices (plain CPU run) — the CI mesh step re-runs it
+    under 8 forced host devices, like the sharded bench above.
+    """
+    import jax
+
+    from repro.core import JoinConfig, StreamJoinEngine, build_index
+    from repro.core.megastep import MegastepEngine
+    from repro.core.sharded import ShardedMegastepEngine
+    from repro.serve.faultinject import FaultPlan, ShardFault
+    from repro.serve.scheduler import SchedulerConfig, ServeScheduler
+
+    n_sh = len(jax.devices())
+    if n_sh < 2:
+        return []
+
+    n_s, dim, k = n, 8, 10
+    batch = max(64, n // 40)
+    s = _clustered(n_s, dim, seed=0)
+    cfg = JoinConfig(k=k, n_pivots=64, n_groups=8, seed=3,
+                     pivot_strategy="kmeans")
+    index = build_index(s, cfg)
+    single = MegastepEngine(index, cfg)
+    qs = [_clustered(batch, dim, seed=10 + i) for i in range(batches)]
+    oracle = [single.join_batch(q) for q in qs]
+
+    def _bitwise(got, want) -> float:
+        return float(np.array_equal(got[0], want[0])
+                     and np.array_equal(got[1], want[1]))
+
+    # ---- arm 1: r=2 replicated engine, mid-stream shard loss --------
+    eng = ShardedMegastepEngine(index, cfg, n_shards=n_sh, replication=2)
+    eng.join_batch(qs[0])                                   # warm
+    t0 = time.perf_counter()
+    for q in qs:
+        eng.join_batch(q)
+    t_healthy = (time.perf_counter() - t0) / batches
+
+    victim = n_sh // 2
+    bitwise = 1.0
+    with FaultPlan().fail(
+            "sharded.shard_compute", times=1,
+            exc=ShardFault("sharded.shard_compute", shard=victim)):
+        t0 = time.perf_counter()
+        out = eng.join_batch(qs[0])
+        t_failover = time.perf_counter() - t0
+    bitwise *= _bitwise(out, oracle[0])
+    if eng.health.failed != frozenset({victim}):
+        raise AssertionError(
+            f"failover did not mark shard {victim}: {eng.health.failed}")
+    if eng.coverage_degraded:
+        raise AssertionError(
+            "r=2 lost one shard but reported degraded coverage — "
+            "replica placement must keep every pivot group covered")
+    t0 = time.perf_counter()
+    for q, want in zip(qs, oracle):          # steady failed-over serving
+        bitwise *= _bitwise(eng.join_batch(q), want)
+    t_failed_over = (time.perf_counter() - t0) / batches
+
+    t0 = time.perf_counter()
+    eng.recover(wait=True)
+    t_recover = time.perf_counter() - t0
+    if eng.health.failed:
+        raise AssertionError("recover(wait=True) left shards failed")
+    bitwise *= _bitwise(eng.join_batch(qs[1]), oracle[1])
+
+    per_shard_r2 = eng.nbytes_per_shard()
+    per_shard_r1 = index.shard_packing(n_sh).nbytes_per_shard()
+
+    # ---- arm 2: r=1, certified degraded coverage --------------------
+    e1 = ShardedMegastepEngine(index, cfg, n_shards=n_sh, replication=1)
+    with FaultPlan().fail(
+            "sharded.shard_compute", times=1,
+            exc=ShardFault("sharded.shard_compute", shard=victim)):
+        d1, i1, rb = e1.join_batch_covered(qs[0])
+    coverage = e1.coverage_fraction()
+    q0 = qs[0].astype(np.float64)
+    s64 = s.astype(np.float64)
+    dmat = np.sqrt(np.maximum(
+        (q0 * q0).sum(1)[:, None] + (s64 * s64).sum(1)[None, :]
+        - 2.0 * (q0 @ s64.T), 0.0))
+    true_ids = np.argsort(dmat, axis=1, kind="stable")[:, :k]
+    true_recall = np.array([
+        len(set(i1[r].tolist()) & set(true_ids[r].tolist())) / k
+        for r in range(q0.shape[0])])
+    if not (true_recall >= rb - 1e-6).all():
+        worst = int(np.argmin(true_recall - rb))
+        raise AssertionError(
+            f"degraded recall bound unsound: query {worst} certified "
+            f"{rb[worst]:.3f} but true recall {true_recall[worst]:.3f}")
+
+    # ---- arm 3: scheduler failover, deadline invariant --------------
+    sj = StreamJoinEngine(index, cfg, megastep=True, n_shards=n_sh,
+                          replication=2)
+    sched = ServeScheduler(sj, config=SchedulerConfig(max_inflight=2))
+    sched.join_now(qs[0])                                    # warm
+    with FaultPlan().fail(
+            "sharded.collective", times=1,
+            exc=ShardFault("sharded.collective", shard=victim)):
+        t = sched.join_now(qs[1], deadline_s=120.0)
+    if not t.done or t.degraded:
+        raise AssertionError(
+            f"scheduler failover ticket ended {t.status!r} "
+            f"(degraded={t.degraded}) — r=2 failover must stay exact")
+    bitwise *= float(np.array_equal(t.distances, oracle[1][0])
+                     and np.array_equal(t.indices, oracle[1][1]))
+
+    return [
+        Row("kernel_shard_failover",
+            f"ns={n_s}x{dim},k={k},batch={batch},shards={n_sh},r=2",
+            t_failover,
+            {"n_shards": float(n_sh),
+             "healthy_batch_s": t_healthy,
+             "failover_s": t_failover,
+             "failed_over_batch_s": t_failed_over,
+             "recover_s": t_recover,
+             "replication_hbm_ratio": float(per_shard_r2.sum())
+             / float(max(per_shard_r1.sum(), 1)),
+             "degraded_coverage_frac": float(coverage),
+             "recall_bound_min": float(rb.min()),
+             "recall_bound_mean": float(rb.mean()),
+             "frac_fully_certified": float((rb == 1.0).mean()),
+             "scheduler_failovers": float(sched.stats.n_failovers),
+             "n_expired_dispatched_failover":
+                 float(sched.stats.n_expired_dispatched),
+             "failover_bitwise_equal": bitwise}),
+    ]
+
+
 def pack_send_buffers_bench(n: int = 100_000) -> List[Row]:
     """Shuffle-packing throughput: vectorized lexsort+scatter vs the
     per-row loop, at n shuffled rows (dim=8, 8×8 device edges)."""
@@ -821,6 +974,6 @@ def serving_under_load_bench(n: int = 20000, batches: int = 8
 ALL = [distance_topk_bench, distance_topk_gather_bench,
        index_build_vs_batch_plan_bench, streaming_vs_oneshot_bench,
        megastep_vs_hostplanned_bench, sharded_vs_single_bench,
-       mutable_index_bench,
+       shard_failover_bench, mutable_index_bench,
        quant_coarse_vs_fp32_bench, serving_under_load_bench,
        pack_send_buffers_bench, assign_bench, flash_attention_bench]

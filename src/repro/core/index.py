@@ -61,11 +61,19 @@ class ShardPacking:
     simply never ``present``, which is exactly what makes the Cor. 1 /
     Thm 2 visit schedules compact *per shard* inside the sharded
     megastep (`core.sharded`).
+
+    With replication factor ``r > 1`` each pivot group additionally
+    lands on ``r−1`` backup shards (the paper's reducer replication,
+    Cor. 2, turned into fault tolerance): every replica holds the same
+    pivot-sorted packed slice of its partitions, so any *serving view*
+    — a choice of one live owner per partition, see :meth:`owner_view`
+    — presents exactly the single-device row set and the sharded
+    megastep stays bitwise-exact across failovers.
     """
 
     n_shards: int
     bn: int
-    shard_of_part: np.ndarray   # (M,) int32 — shard owning each partition
+    shard_of_part: np.ndarray   # (M,) int32 — primary shard per partition
     tiles_per_shard: int        # uniform (max-padded) S-tile count
     rows: np.ndarray            # (n_shards, tiles*bn, dim) float32
     gids_local: np.ndarray      # (n_shards, tiles*bn) int64, -1 padding
@@ -75,8 +83,75 @@ class ShardPacking:
     sd_min: np.ndarray          # (n_shards, tiles, M) per-shard Thm-2 stats
     sd_max: np.ndarray          # (n_shards, tiles, M)
     present: np.ndarray         # (n_shards, tiles, M) bool
+    # replication factor and the (r, M) replica table: row 0 is the
+    # primary (== shard_of_part), rows 1..r−1 the backup shards, all
+    # distinct per partition
+    r: int = 1
+    replicas_of_part: Optional[np.ndarray] = None
     _quant: object = dataclasses.field(
         default=None, repr=False, compare=False)
+
+    # ---- failover serving views (core.sharded health tracking) ------
+
+    def owner_view(self, failed=()) -> np.ndarray:
+        """(M,) int32 — the shard that *serves* each partition under a
+        set of failed shards: the primary while it lives, else the
+        first live backup (replica order is deterministic, so every
+        caller derives the identical view), else −1: an **uncovered**
+        pivot group. ``owner_view(())`` is ``shard_of_part`` itself."""
+        failed = frozenset(int(f) for f in failed)
+        if not failed:
+            return self.shard_of_part
+        reps = (self.replicas_of_part if self.replicas_of_part is not None
+                else self.shard_of_part[None, :])
+        bad = np.asarray(sorted(failed), np.int32)
+        owner = np.full((reps.shape[1],), -1, np.int32)
+        for c in range(reps.shape[0]):
+            cand = reps[c]
+            take = (owner < 0) & ~np.isin(cand, bad)
+            owner[take] = cand[take]
+        return owner
+
+    def serve_mask(self, owner: np.ndarray) -> np.ndarray:
+        """(n_shards, tiles*bn) bool — which held rows each shard serves
+        under a per-partition ``owner`` view. Exactly one shard serves
+        each row of a covered partition (padding and non-owned replica
+        copies are False): the union of served rows over shards equals
+        the single-device row set minus uncovered partitions — what
+        keeps any failover view bitwise on the covered set."""
+        safe = np.clip(self.part, 0, owner.shape[0] - 1)
+        return ((self.part >= 0)
+                & (owner[safe] == np.arange(self.n_shards,
+                                            dtype=np.int32)[:, None]))
+
+    def present_view(self, owner: np.ndarray) -> np.ndarray:
+        """(n_shards, tiles, M) bool — Thm-2 ``present`` gated to the
+        partitions each shard currently *serves*, so per-shard visit
+        schedules skip standby replica tiles entirely."""
+        gate = (owner[None, :] == np.arange(self.n_shards,
+                                            dtype=np.int32)[:, None])
+        return self.present & gate[:, None, :]
+
+    def partition_counts(self) -> np.ndarray:
+        """(M,) int64 — real rows per partition, each row counted once
+        (every populated partition holds exactly ``r`` replica copies)."""
+        m = self.shard_of_part.shape[0]
+        flat = self.part[self.part >= 0]
+        cnt = np.bincount(flat.ravel(), minlength=m)
+        return (cnt // max(1, self.r)).astype(np.int64)
+
+    def uncovered_parts(self, owner: np.ndarray) -> np.ndarray:
+        """(M,) bool — populated partitions no live shard serves."""
+        return (owner < 0) & (self.partition_counts() > 0)
+
+    def coverage_fraction(self, owner: np.ndarray) -> float:
+        """Fraction of the segment's real rows that live in covered
+        (owner ≥ 0) partitions under this view — 1.0 when healthy."""
+        cnt = self.partition_counts()
+        tot = int(cnt.sum())
+        if tot == 0:
+            return 1.0
+        return float(cnt[owner >= 0].sum()) / tot
 
     def ensure_quant(self):
         """Per-shard int8 twins ``(codes, scales, eps)`` of the shard
@@ -206,19 +281,29 @@ class SIndex:
             self._quant[bn] = quantize_rows(self.s_sorted, bn)
         return self._quant[bn]
 
-    def shard_packing(self, n_shards: int,
-                      bn: Optional[int] = None) -> ShardPacking:
+    def shard_packing(self, n_shards: int, bn: Optional[int] = None, *,
+                      r: int = 1) -> ShardPacking:
         """This segment's payload re-laid-out across ``n_shards`` mesh
         shards at tile size ``bn`` (default ``config.tile_s``): pivot
         groups → shards via §5 geometric grouping balanced by partition
         population, rows/ids/tile-stats per shard (see `ShardPacking`).
-        Cached per ``(n_shards, bn)`` for the index's lifetime, like
+        With replication ``r > 1`` each pivot group additionally lands
+        on ``r−1`` backup shards (clamped at ``n_shards``), placed
+        heaviest-partition-first on the least-loaded shard not already
+        holding it — the same balance-aware greedy shape as the §5
+        grouping, bounded by Cor. 2's ``r·|S|`` total replicated rows.
+        ``r=1`` is byte-identical to the unreplicated layout. Cached per
+        ``(n_shards, bn, r)`` for the index's lifetime, like
         `tile_stats` / `ensure_quant` — segments are immutable."""
         bn = int(self.config.tile_s if bn is None else bn)
         n_shards = int(n_shards)
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
-        key = (n_shards, bn)
+        r = int(r)
+        if r < 1:
+            raise ValueError(f"replication factor r must be >= 1, got {r}")
+        r = min(r, n_shards)
+        key = (n_shards, bn, r)
         if key not in self._shards:
             m = self.n_pivots
             # geometric_grouping rejects more groups than partitions —
@@ -231,8 +316,28 @@ class SIndex:
                 shard_of_part = np.ascontiguousarray(
                     G.geometric_grouping(self.pivd, self.t_s.counts, eff)
                     .astype(np.int32))
-            shard_of_row = shard_of_part[self.s_part_sorted]
-            counts = np.bincount(shard_of_row, minlength=n_shards)
+            replicas = np.zeros((r, m), np.int32)
+            replicas[0] = shard_of_part
+            if r > 1:
+                pcount = self.t_s.counts.astype(np.int64)
+                load = np.bincount(shard_of_part, weights=pcount,
+                                   minlength=n_shards).astype(np.int64)
+                order = np.argsort(-pcount, kind="stable")
+                for c in range(1, r):
+                    for p in order:
+                        held = {int(x) for x in replicas[:c, p]}
+                        j = min((s for s in range(n_shards)
+                                 if s not in held),
+                                key=lambda s: (load[s], s))
+                        replicas[c, p] = j
+                        load[j] += pcount[p]
+            # shard j holds every copy of its partitions; boolean
+            # selection keeps each block in (partition, dist) packed
+            # order, so every replica is the same pivot-sorted slice
+            holds = np.zeros((n_shards, m), bool)
+            holds[replicas, np.arange(m)[None, :]] = True
+            held_rows = holds[:, self.s_part_sorted]   # (n_shards, n_s)
+            counts = held_rows.sum(axis=1)
             tiles = max(1, int(-(-counts.max() // bn)))
             rpad = tiles * bn
             rows = np.zeros((n_shards, rpad, self.dim), np.float32)
@@ -240,7 +345,7 @@ class SIndex:
             part = np.full((n_shards, rpad), -1, np.int32)
             dist = np.zeros((n_shards, rpad), np.float32)
             for j in range(n_shards):
-                sel = shard_of_row == j
+                sel = held_rows[j]
                 nj = int(counts[j])
                 rows[j, :nj] = self.s_sorted[sel]
                 gids[j, :nj] = self.s_ids_sorted[sel]
@@ -256,7 +361,8 @@ class SIndex:
                 rows_per_shard=counts.astype(np.int64),
                 sd_min=np.stack([st[0] for st in stats]),
                 sd_max=np.stack([st[1] for st in stats]),
-                present=np.stack([st[2] for st in stats]))
+                present=np.stack([st[2] for st in stats]),
+                r=r, replicas_of_part=replicas)
         return self._shards[key]
 
     def nbytes_resident(self, *, quantized: Optional[bool] = None,

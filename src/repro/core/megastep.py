@@ -456,6 +456,7 @@ class MegastepEngine:
 
         with self.refresh_lock:
             segs, tomb, vkey = self._index_parts()
+            vkey = self._payload_key(vkey)
             if self._payload is not None and self._payload[0] == vkey:
                 return self._payload[1]
             if not segs:
@@ -473,15 +474,29 @@ class MegastepEngine:
             # liveness + tombstone count change per index version; the
             # rows, geometry and tile stats above change only with the
             # structure
-            alive = (st["gids"] >= 0) & ~_in_sorted(st["gids"], tomb)
+            alive = self._alive_mask(st, tomb)
             payload = _Payload(
-                segs=st["segs_dev"],
+                segs=self._segs_for_view(st),
                 tiles=dict(st["tiles_dev"], alive=self._put_alive(alive)),
                 dead_total=self._put_rep(np.int32(tomb.size)),
                 seg_meta=st["seg_meta"], dim=st["dim"],
                 n_finite_total=st["n_finite_total"], primary=st["primary"])
             self._payload = (vkey, payload)
             return payload
+
+    # serving-view hooks: the sharded engines (core.sharded) key the
+    # cached payload on shard health, mask rows not served under the
+    # current owner view, and gate per-shard `present` to owned
+    # partitions. The single-device engine has exactly one view.
+
+    def _payload_key(self, vkey):
+        return vkey
+
+    def _alive_mask(self, st, tomb) -> np.ndarray:
+        return (st["gids"] >= 0) & ~_in_sorted(st["gids"], tomb)
+
+    def _segs_for_view(self, st):
+        return st["segs_dev"]
 
     # device-placement hooks: the single-device engine just uploads; the
     # sharded engine (core.sharded) overrides these with mesh shardings

@@ -178,19 +178,38 @@ class StreamJoinEngine:
     the single-device engines, zero steady-state host syncs per shard).
     Requires a megastep-mode path (the host-planned engines have no
     mesh payload); ``n_shards=None`` stays single-device.
+
+    ``replication``: place every pivot group on that many shards (a
+    primary + r−1 backups) so the sharded fp32 engine survives shard
+    loss bitwise (`core.sharded` failover); ``attempt_timeout`` bounds
+    each sharded device attempt so a hung collective counts as a shard
+    failure. fp32 sharded path only — the quantized sharded engine does
+    not replicate (its HBM budget is the point of int8).
     """
 
     def __init__(self, index, config: Optional[JoinConfig] = None, *,
                  megastep: object = False, quantized: Optional[bool] = None,
-                 n_shards: Optional[int] = None):
+                 n_shards: Optional[int] = None, replication: int = 1,
+                 attempt_timeout: Optional[float] = None):
         self.index = index
         self.config = config or index.config
         if quantized is None:
             quantized = self.config.quantize != "none"
         if megastep == "auto":
             megastep = self.config.metric == "l2"
+        if (replication != 1 or attempt_timeout is not None) \
+                and n_shards is None:
+            raise ValueError(
+                "replication/attempt_timeout are sharded-engine knobs — "
+                "pass n_shards too")
         self._megastep = None
         if quantized:
+            if replication != 1:
+                raise ValueError(
+                    "replication > 1 is the fp32 sharded engine's "
+                    "fault-tolerance knob; the quantized sharded engine "
+                    "does not replicate (drop quantized, or accept "
+                    "r=1)")
             if n_shards is not None:
                 from repro.quant.engine import ShardedQuantMegastepEngine
                 self._megastep = ShardedQuantMegastepEngine(
@@ -202,7 +221,9 @@ class StreamJoinEngine:
             if n_shards is not None:
                 from .sharded import ShardedMegastepEngine
                 self._megastep = ShardedMegastepEngine(
-                    index, self.config, n_shards=n_shards)
+                    index, self.config, n_shards=n_shards,
+                    replication=replication,
+                    attempt_timeout=attempt_timeout)
             else:
                 from .megastep import MegastepEngine
                 self._megastep = MegastepEngine(index, self.config)
@@ -309,6 +330,7 @@ def knn_join_batched(
     megastep: object = False,
     quantized: Optional[bool] = None,
     n_shards: Optional[int] = None,
+    replication: int = 1,
 ) -> JoinResult:
     """Streaming PGBJ join: R in micro-batches against a build-once index.
 
@@ -325,6 +347,8 @@ def knn_join_batched(
     identical results again, 4× smaller resident index. ``n_shards=N``
     shards either megastep-mode payload across an N-device mesh
     (`core.sharded`) — identical results once more, N× the HBM.
+    ``replication=r`` (fp32 sharded path) additionally places every
+    pivot group on r shards so the join survives shard loss bitwise.
 
     Exactness: equals one-shot ``knn_join`` against the same index for
     any batch split. Results are ordered by arrival: row ``j`` of the
@@ -358,7 +382,8 @@ def knn_join_batched(
     batch_size = max(1, batch_size)   # |R| = 0 must not zero the stride
 
     engine = StreamJoinEngine(index, config, megastep=megastep,
-                              quantized=quantized, n_shards=n_shards)
+                              quantized=quantized, n_shards=n_shards,
+                              replication=replication)
     stats = JoinStats(n_s=index.n_s)
     if built_here:   # a reused index's S phase 1 was paid at build time
         stats.pivot_pairs_computed += index.n_s * index.n_pivots

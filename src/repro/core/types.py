@@ -161,6 +161,14 @@ class JoinStats:
     # have recall 1)
     n_degraded: int = 0
     recall_bound: float = 1.0
+    # sharded failover (core.sharded): shards the serving view currently
+    # marks failed, and the certified fraction of resident rows still in
+    # covered pivot groups (1.0 = every populated group has a live
+    # replica; < 1.0 only on the no-replica degraded-coverage path, in
+    # which case recall_bound above carries the per-batch minimum of the
+    # sound per-query certificates)
+    n_failed_shards: int = 0
+    coverage_bound: float = 1.0
 
     @property
     def selectivity(self) -> float:

@@ -209,8 +209,18 @@ def tree_merge_runs(runs, *, unique: bool = False):
     stream states); that routes each fold through the dedup merge
     instead. All runs must share the same pow2 width; ids may be single
     arrays or lockstep tuples.
+
+    The fold is subset-stable: merging any non-empty *subset* of
+    id-disjoint runs yields exactly the top-k restricted to that
+    subset's rows (the degraded-coverage serving path merges only the
+    surviving shards' runs — pinned by the property tests).
     """
     assert runs, "tree_merge_runs needs at least one run"
+    widths = {int(d.shape[-1]) for d, _ in runs}
+    if len(widths) != 1:
+        raise ValueError(
+            f"tree_merge_runs needs equal-width runs, got widths "
+            f"{sorted(widths)} — pad every run to one pow2 width first")
     fold = merge_sorted_runs_unique if unique else merge_sorted_runs
     runs = list(runs)
     while len(runs) > 1:

@@ -31,6 +31,8 @@ _EXPORTS = {
     "run_open_loop": "scheduler",
     "FaultPlan": "faultinject",
     "InjectedFault": "faultinject",
+    "ShardFault": "faultinject",
+    "ShardFailedError": "faultinject",
 }
 
 __all__ = sorted(_EXPORTS) + ["faultinject", "scheduler"]

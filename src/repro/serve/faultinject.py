@@ -30,6 +30,23 @@ Hook sites wired into this codebase:
   errors would do, so a transform here forces certificate failures and
   exercises the fp32-oracle fallback deliberately
   (tests/test_quant.py pins that the output stays bitwise-exact).
+* ``sharded.shard_upload`` — fired by the sharded engines'
+  ``_put_shard`` whenever a shard-partitioned payload piece is
+  committed to the mesh; failing it (with a :class:`ShardFault` naming
+  the shard) simulates a device lost during payload upload.
+* ``sharded.shard_compute`` — fired just before the sharded SPMD
+  megastep launch (``ShardedMegastepEngine.dispatch``); a
+  :class:`ShardFault` here simulates a shard dying mid-stream.
+* ``sharded.collective`` — a combined :func:`cross` site over the
+  fetched cross-shard merge result (``ShardedMegastepEngine
+  .finalize``): ``.fail`` simulates a poisoned all-gather, while a
+  sleeping ``.transform`` simulates a *hung* collective — which the
+  engine's bounded ``attempt_timeout`` must convert into a
+  :class:`ShardFailedError` instead of hanging ``serve_forever()``.
+
+All sites compose in one armed plan: a mixed-site ``FaultPlan`` fires
+each site independently, exactly as armed (pinned by
+tests/test_shard_failover.py).
 
 Usage::
 
@@ -46,8 +63,8 @@ import threading
 import time
 from typing import Any, Callable, Dict, Optional
 
-__all__ = ["FaultPlan", "InjectedFault", "fire", "transform_value",
-           "retry_with_backoff"]
+__all__ = ["FaultPlan", "InjectedFault", "ShardFault", "ShardFailedError",
+           "fire", "transform_value", "cross", "retry_with_backoff"]
 
 
 class InjectedFault(RuntimeError):
@@ -57,6 +74,35 @@ class InjectedFault(RuntimeError):
     def __init__(self, site: str, message: Optional[str] = None):
         super().__init__(message or f"injected fault at {site!r}")
         self.site = site
+
+
+class ShardFault(InjectedFault):
+    """An injected fault attributed to one mesh shard (pass as ``exc=``
+    to :meth:`FaultPlan.fail` on a ``sharded.*`` site). The sharded
+    engines convert it into a :class:`ShardFailedError` after marking
+    the shard failed in their health tracker — anonymous
+    :class:`InjectedFault`\\ s on the same sites stay generic transients
+    handled by the retry ladder instead."""
+
+    def __init__(self, site: str, *, shard: Optional[int] = None,
+                 message: Optional[str] = None):
+        super().__init__(site, message
+                         or f"injected shard fault at {site!r} "
+                            f"(shard {shard})")
+        self.shard = shard
+
+
+class ShardFailedError(RuntimeError):
+    """A sharded engine detected a failed/hung shard and updated its
+    serving view (failover). Unlike a generic transient, retrying the
+    *same* engine is the right response: the next attempt runs on the
+    updated owner view (replica failover — still bitwise — or certified
+    degraded coverage), not on the host-oracle path. The scheduler
+    re-checks deadlines at that failover instant."""
+
+    def __init__(self, shard: Optional[int], message: str):
+        super().__init__(message)
+        self.shard = shard
 
 
 class FaultPlan:
@@ -107,6 +153,23 @@ class FaultPlan:
             fn = self._transform.get(site)
         return value if fn is None else fn(value)
 
+    def _cross(self, site: str, value):
+        """fire + transform as ONE counted crossing (see :func:`cross`):
+        a scheduled failure wins; otherwise an armed transform maps the
+        value through (and may sleep — a hang — or raise itself)."""
+        exc = fn = None
+        with self._lock:
+            self.fired[site] = self.fired.get(site, 0) + 1
+            ent = self._fail.get(site)
+            if ent is not None and ent[0] > 0:
+                ent[0] -= 1
+                exc = ent[1] if ent[1] is not None else InjectedFault(site)
+            else:
+                fn = self._transform.get(site)
+        if exc is not None:
+            raise exc
+        return value if fn is None else fn(value)
+
     # ---- arming scope ----------------------------------------------
 
     def __enter__(self) -> "FaultPlan":
@@ -140,6 +203,18 @@ def transform_value(site: str, value):
     if plan is None:
         return value
     return plan._transform_value(site, value)
+
+
+def cross(site: str, value=None):
+    """Combined production-side hook for sites that can both *fail*
+    (``FaultPlan.fail``) and be *value-warped or delayed*
+    (``FaultPlan.transform``) — e.g. ``sharded.collective``, where a
+    fail is a poisoned all-gather and a sleeping transform is a hung
+    one. One counted crossing either way; identity when unarmed."""
+    plan = _PLAN
+    if plan is None:
+        return value
+    return plan._cross(site, value)
 
 
 def retry_with_backoff(fn: Callable[[int], Any], *, max_retries: int,

@@ -60,6 +60,10 @@ class Datastore:
     # shard the resident payload across a mesh of this many devices and
     # serve through the sharded megastep (core.sharded); 0 = one device
     n_shards: int = 0
+    # place every pivot group on this many shards (primary + r−1
+    # backups) so serving survives shard loss bitwise (core.sharded
+    # failover; fp32 sharded path only — ignored single-device)
+    replication: int = 1
     # one resident engine per k: the megastep's uploaded index payload
     # and compiled step live here and survive across decode steps
     _engines: dict = dataclasses.field(default_factory=dict, repr=False)
@@ -84,7 +88,8 @@ class Datastore:
     @classmethod
     def build(cls, keys, values, *, k: int = 8, n_pivots: int = 256,
               n_groups: int = 8, seed: int = 0, seal_threshold: int = 4096,
-              quantized: bool = False, n_shards: int = 0):
+              quantized: bool = False, n_shards: int = 0,
+              replication: int = 1):
         """S-side phase 1, once, over the initial keys: after this,
         serving touches pre-existing keys only through the segments'
         packed layouts — growth happens in delta segments.
@@ -95,7 +100,9 @@ class Datastore:
         sealed deltas, compacted rebuilds) carries its int8 codes and
         retrieval serves through the quantized tier. ``n_shards=N``
         partitions the resident payload across an N-device mesh and
-        serves through the sharded megastep — same bits, N× the HBM."""
+        serves through the sharded megastep — same bits, N× the HBM.
+        ``replication=r`` (fp32 sharded serving) keeps every pivot
+        group on r shards so serving survives shard loss bitwise."""
         keys = as_float32_rows(keys, what="datastore keys")
         cfg = JoinConfig(k=k, n_pivots=min(n_pivots, keys.shape[0]),
                          n_groups=n_groups, grouping="geometric", seed=seed,
@@ -103,7 +110,8 @@ class Datastore:
         return cls(keys=keys, values=np.asarray(values, np.int32),
                    index=MutableIndex.build(keys, cfg,
                                             seal_threshold=seal_threshold),
-                   config=cfg, n_shards=int(n_shards))
+                   config=cfg, n_shards=int(n_shards),
+                   replication=int(replication))
 
     @property
     def n_entries(self) -> int:
@@ -160,14 +168,36 @@ class Datastore:
             if eng is None:
                 cfg = self.config if kk == self.config.k \
                     else dataclasses.replace(self.config, k=kk)
+                rep = self.replication if (self.n_shards
+                                           and not self.quantized) else 1
                 eng = StreamJoinEngine(self.index, cfg, megastep="auto",
                                        quantized=self.quantized,
-                                       n_shards=self.n_shards or None)
+                                       n_shards=self.n_shards or None,
+                                       replication=rep)
                 me = eng.megastep_engine
                 if me is not None:
                     me.refresh_lock = self._lock
                 self._engines[kk] = eng
         return eng
+
+    def recover_shards(self, *, wait: bool = False) -> list:
+        """Re-admit failed shards on every cached sharded engine:
+        rebuild + re-upload the shard-partitioned payloads and reset
+        health (`core.sharded.ShardedMegastepEngine.recover`). With
+        ``wait=False`` (the serving default) recovery runs in daemon
+        threads behind each engine's refresh lock — serving keeps
+        answering on the degraded views meanwhile. Returns the recovery
+        threads (empty when nothing sharded is cached or failed)."""
+        with self._lock:
+            engines = list(self._engines.values())
+        out = []
+        for eng in engines:
+            me = eng.megastep_engine
+            if me is not None and hasattr(me, "recover"):
+                t = me.recover(wait=wait)
+                if t is not None:
+                    out.append(t)
+        return out
 
     def retrieve(self, queries: np.ndarray, k: Optional[int] = None, *,
                  stats=None, max_retries: int = 8):

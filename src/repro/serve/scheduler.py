@@ -42,6 +42,16 @@ provides:
   and therefore cannot re-hit an upload fault. Deadlines keep being
   enforced across backoff: a request that expires while backing off is
   shed, not dispatched.
+* **shard failover, deadline-checked** — a sharded engine that loses a
+  shard raises ``ShardFailedError`` *after* updating its serving view;
+  the scheduler re-enters the engine rung (the next attempt runs on
+  the failed-over view — bitwise while replicas cover every pivot
+  group), re-checking deadlines at that failover instant so
+  ``n_expired_dispatched`` stays 0 across the failure window. Once
+  coverage itself is degraded (a populated pivot group lost its last
+  replica) batches run ``join_batch_covered`` and every response
+  carries the engine's *sound* per-query recall lower bound — the rung
+  between certified-approximate and shed on the degradation ladder.
 
 The scheduler is step-driven and clock-injectable: ``step()`` forms and
 executes one batch, ``drain()`` runs until idle, ``serve_forever()``
@@ -179,6 +189,9 @@ class SchedulerStats:
     n_dispatches: int = 0
     n_retries: int = 0
     n_expired_dispatched: int = 0
+    # batches re-entered after a ShardFailedError (the engine failed
+    # over its serving view; the retry ran on the updated view)
+    n_failovers: int = 0
     rows_submitted: int = 0
     rows_completed: int = 0
     rows_shed: int = 0
@@ -214,11 +227,15 @@ class ServeScheduler:
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep):
         self.engine = engine
+        me = getattr(engine, "megastep_engine", None)
         if degraded_engine == "auto":
-            me = getattr(engine, "megastep_engine", None)
             degraded_engine = me if hasattr(me, "join_batch_approx") \
                 else None
         self.degraded_engine = degraded_engine
+        # the degraded-coverage rung: a sharded engine that certifies
+        # per-query recall bounds once shard loss uncovers pivot groups
+        self._coverage_engine = me if hasattr(me, "join_batch_covered") \
+            else None
         if host_join is None:
             host_join = getattr(engine, "join_batch_host", None) \
                 or engine.join_batch
@@ -376,7 +393,13 @@ class ServeScheduler:
             batch = self._form_batch_locked(now)
         degraded = (self.degraded_engine is not None
                     and pressure > self.config.degrade_queued_rows)
-        if self._pipelined and not degraded:
+        # degraded coverage (shard loss with no live replica) routes
+        # through the blocking covered call so responses carry the
+        # engine's certified recall bounds — skip the pipelined path,
+        # whose finalize drops them
+        covered = (self._coverage_engine is not None
+                   and self._coverage_engine.coverage_degraded)
+        if self._pipelined and not degraded and not covered:
             n = self._dispatch_pipelined(batch) if batch else 0
             # keep up to max_inflight-1 megasteps in flight across
             # steps while new work keeps arriving; drain when idle
@@ -441,6 +464,14 @@ class ServeScheduler:
         try:
             faultinject.fire("sched.dispatch")
             handle = self.engine.dispatch(q, stats=self.stats.join)
+        except faultinject.ShardFailedError:
+            # the engine failed over its serving view: re-enter the
+            # engine rung (not the host oracle) — _execute re-checks
+            # deadlines at this failover instant before dispatching
+            with self._lock:
+                self.stats.n_failovers += 1
+            self._execute(live, False)
+            return sum(t.n for t in batch)
         except Exception:    # noqa: BLE001 — transient-fault ladder
             self._execute(live, False, first_attempt=1)
             return sum(t.n for t in batch)
@@ -454,6 +485,13 @@ class ServeScheduler:
         handle, live = self._inflight.popleft()
         try:
             d, i = self.engine.finalize(handle, stats=self.stats.join)
+        except faultinject.ShardFailedError:
+            # failover: re-run on the engine's updated serving view,
+            # deadlines re-checked at the failover instant
+            with self._lock:
+                self.stats.n_failovers += 1
+            self._execute(live, False)
+            return sum(t.n for t in live)
         except Exception:    # noqa: BLE001 — transient-fault ladder
             self._execute(live, False, first_attempt=1)
             return sum(t.n for t in live)
@@ -524,6 +562,21 @@ class ServeScheduler:
                     d, i, rb = self.degraded_engine.join_batch_approx(
                         q, stats=self.stats.join)
                     return d, i, rb
+                ce = self._coverage_engine
+                if ce is not None:
+                    # engine rung via the covered call: surviving shards
+                    # answer and each response carries a certified
+                    # per-query recall lower bound. The bound is kept
+                    # only when the batch actually ran on a
+                    # degraded-coverage view — a mid-call failover past
+                    # the last replica flips ``coverage_degraded``, and
+                    # the engine's internal retry already computed the
+                    # batch (and its bound) on that updated view.
+                    d, i, rb = ce.join_batch_covered(
+                        q, stats=self.stats.join)
+                    if ce.coverage_degraded:
+                        return d, i, rb
+                    return d, i, None
                 d, i = self.engine.join_batch(q, stats=self.stats.join)
                 return d, i, None
             # retry rung: the host-planned oracle — exact, no resident

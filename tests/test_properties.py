@@ -130,6 +130,81 @@ def test_topk_merge_property(n, t, k, seed):
     assert (np.diff(md, axis=1) >= 0).all()
 
 
+@st.composite
+def shard_runs(draw):
+    """N id-disjoint per-shard sorted top-kp runs plus a non-empty
+    subset of the shards, the way the degraded-coverage path sees them:
+    every global row lives on exactly one shard, each shard reports its
+    exact local top-kp as an ascending +inf/-1-padded pow2 run."""
+    n_shards = draw(st.integers(1, 6))
+    n_q = draw(st.integers(1, 8))
+    kp = 1 << draw(st.integers(0, 4))
+    n_rows = draw(st.integers(1, 60))
+    seed = draw(st.integers(0, 2**16))
+    subset = draw(st.sets(st.integers(0, n_shards - 1), min_size=1,
+                          max_size=n_shards))
+    return n_shards, n_q, kp, n_rows, seed, sorted(subset)
+
+
+@given(shard_runs())
+@settings(max_examples=40, deadline=None)
+def test_tree_merge_subset_stability(inst):
+    """Satellite: the sharded reduction is *subset-stable* — folding any
+    non-empty subset of id-disjoint per-shard runs through
+    ``tree_merge_runs`` yields exactly the single-device top-k
+    restricted to the subset's rows, id-disjoint and ascending. This is
+    the algebraic fact that lets degraded-coverage serving merge only
+    the surviving shards' runs."""
+    import jax.numpy as jnp
+
+    from repro.kernels.sorted_merge import tree_merge_runs
+
+    n_shards, n_q, kp, n_rows, seed, subset = inst
+    rng = np.random.default_rng(seed)
+    # distinct distances -> a unique answer to compare bitwise
+    d_all = rng.permutation(n_q * n_rows).astype(np.float32)
+    d_all = d_all.reshape(n_q, n_rows)
+    owner = rng.integers(0, n_shards, n_rows)
+    runs = []
+    for sh in subset:
+        rows = np.where(owner == sh)[0]
+        dj = np.full((n_q, kp), np.inf, np.float32)
+        ij = np.full((n_q, kp), -1, np.int32)
+        take = rows[np.argsort(d_all[:, rows], axis=1, kind="stable")]
+        m = min(kp, rows.size)
+        if m:
+            srt = np.sort(d_all[:, rows], axis=1)[:, :m]
+            dj[:, :m] = srt
+            ij[:, :m] = take[np.arange(n_q)[:, None],
+                             np.arange(m)[None, :]]
+        runs.append((jnp.asarray(dj), jnp.asarray(ij)))
+    md, mi = tree_merge_runs(runs)
+    md, mi = np.asarray(md), np.asarray(mi)
+    # oracle: top-kp over the union of the subset's rows only
+    cov = np.isin(owner, subset)
+    rows = np.where(cov)[0]
+    ref_d = np.full((n_q, kp), np.inf, np.float32)
+    ref_i = np.full((n_q, kp), -1, np.int32)
+    m = min(kp, rows.size)
+    if m:
+        order = np.argsort(d_all[:, rows], axis=1, kind="stable")[:, :m]
+        ref_d[:, :m] = np.take_along_axis(d_all[:, rows], order, axis=1)
+        ref_i[:, :m] = rows[order]
+    np.testing.assert_array_equal(md, ref_d)
+    np.testing.assert_array_equal(mi, ref_i)
+    # order-canonical and id-disjoint: ascending with padding sunk to
+    # the tail, every real id at most once (diff would NaN on inf pads)
+    assert (md[:, :-1] <= md[:, 1:]).all()
+    for row in mi:
+        real = row[row >= 0].tolist()
+        assert len(real) == len(set(real))
+    # width-mismatch runs are rejected loudly, not silently truncated
+    if kp > 1:
+        bad = (runs[0][0][:, : kp // 2], runs[0][1][:, : kp // 2])
+        with pytest.raises(ValueError, match="equal-width"):
+            tree_merge_runs([runs[0], bad])
+
+
 @given(st.integers(1, 5), st.integers(50, 300), st.integers(2, 8),
        st.integers(0, 100))
 @settings(max_examples=10, deadline=None)

@@ -1,0 +1,546 @@
+"""Shard fault tolerance (core.sharded + serve.faultinject +
+serve.scheduler): replicated pivot-group placement, bitwise failover,
+certified degraded-coverage serving, bounded attempt timeouts, and
+background recovery.
+
+The load-bearing property stack:
+
+* replication ``r`` places every pivot group on r distinct shards, each
+  replica the same pivot-sorted packed slice — and ``r=1`` leaves the
+  packing byte-identical to the unreplicated layout;
+* any owner view that serves each covered partition on exactly one live
+  shard is *bitwise* the single-device engine on the covered set (the
+  shard-invariance argument survives failover);
+* once a populated group has no live replica, every response carries a
+  *sound* per-query recall lower bound (rb ≤ true recall — verified
+  against the brute-force oracle under an 8-device mesh, the PR-6
+  degraded-mode guard style);
+* a hung collective is converted into a shard failure by the bounded
+  ``attempt_timeout`` instead of hanging ``serve_forever()``, and the
+  scheduler re-checks deadlines at the failover instant
+  (``n_expired_dispatched`` stays hard-zero).
+
+Multi-shard matrices need more than one device, so they run in
+subprocesses with 8 forced host devices (the test_sharded_megastep
+pattern); packing invariants, health semantics, 1-shard failover
+wiring, fault-plan composition and the scheduler ladder run in-process.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import JoinConfig, StreamJoinEngine, build_index
+from repro.core.megastep import MegastepEngine
+from repro.core.sharded import ShardedMegastepEngine, ShardHealth
+from repro.serve.faultinject import (FaultPlan, InjectedFault, ShardFault,
+                                     ShardFailedError)
+from repro.serve.scheduler import (SchedulerConfig, ServeScheduler,
+                                   VirtualClock)
+
+DIM = 6
+
+
+def _data(n=400, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, DIM)).astype(np.float32) * 2).copy()
+
+
+def _index(n=400, k=5):
+    cfg = JoinConfig(k=k, n_pivots=24, n_groups=6, grouping="geometric")
+    return build_index(_data(n), cfg), cfg
+
+
+# ------------------------------------------------ replicated packing
+
+def test_replicated_packing_invariants():
+    idx, _ = _index()
+    for n_sh, r in ((2, 2), (4, 2), (4, 3), (8, 4), (2, 5)):
+        sp = idx.shard_packing(n_sh, r=r)
+        r_eff = min(r, n_sh)
+        assert sp.r == r_eff
+        reps = sp.replicas_of_part
+        assert reps.shape == (r_eff, idx.n_pivots)
+        # replica 0 is the §5 primary placement, all replicas distinct
+        # and in range
+        assert np.array_equal(reps[0], sp.shard_of_part)
+        assert ((reps >= 0) & (reps < n_sh)).all()
+        for p in range(idx.n_pivots):
+            assert len(set(reps[:, p].tolist())) == r_eff
+        # every shard holds r copies' worth of rows in total
+        assert int(sp.rows_per_shard.sum()) == r_eff * idx.n_s
+        # each replica block stays in (partition, dist) packed order
+        for j in range(n_sh):
+            live = sp.gids_local[j] >= 0
+            order = np.lexsort((sp.dist[j][live], sp.part[j][live]))
+            assert np.array_equal(order, np.arange(order.size))
+
+
+def test_owner_view_partitions_served_rows_exactly_once():
+    """For any failed-shard set, the serve mask hands each covered row
+    to exactly one live shard — the union over shards equals the
+    original row set minus uncovered partitions."""
+    idx, _ = _index()
+    sp = idx.shard_packing(4, r=2)
+    for failed in ((), (1,), (0, 2), (3, 1), (0, 1, 2)):
+        owner = sp.owner_view(frozenset(failed))
+        assert not set(np.unique(owner)) & set(failed)
+        mask = sp.serve_mask(owner)
+        served = np.sort(sp.gids_local[mask])
+        covered = ~np.isin(idx.s_part_sorted, np.where(owner < 0)[0])
+        expect = np.sort(idx.s_ids_sorted[covered])
+        assert np.array_equal(served, expect)
+        # coverage bookkeeping is consistent with the same view
+        frac = sp.coverage_fraction(owner)
+        assert frac == pytest.approx(expect.size / idx.n_s)
+        assert sp.uncovered_parts(owner).any() == (frac < 1.0)
+    # healthy view == the primary placement, bit for bit
+    assert np.array_equal(sp.owner_view(()), sp.shard_of_part)
+
+
+def test_owner_view_prefers_primary_then_first_live_backup():
+    idx, _ = _index()
+    sp = idx.shard_packing(4, r=3)
+    reps = sp.replicas_of_part
+    owner = sp.owner_view(frozenset({int(reps[0, 0])}))
+    # partition 0 lost its primary: served by its first live backup
+    assert owner[0] == reps[1, 0]
+    # everything whose primary is alive stays on the primary
+    alive = reps[0] != reps[0, 0]
+    assert np.array_equal(owner[alive], reps[0][alive])
+
+
+def test_partition_counts_deduplicate_replicas():
+    idx, _ = _index()
+    for r in (1, 2, 3):
+        sp = idx.shard_packing(4, r=r)
+        np.testing.assert_array_equal(
+            sp.partition_counts(),
+            np.bincount(idx.s_part, minlength=idx.n_pivots))
+
+
+def test_replication_validation_and_hbm_cost():
+    idx, _ = _index()
+    with pytest.raises(ValueError, match="replication factor"):
+        idx.shard_packing(4, r=0)
+    per1 = idx.shard_packing(4, r=1).nbytes_per_shard()
+    per2 = idx.shard_packing(4, r=2).nbytes_per_shard()
+    # Cor. 2 shape: replication costs ~r× the resident rows, never more
+    assert int(per1.sum()) == idx.nbytes_resident()
+    assert int(per2.sum()) == 2 * idx.nbytes_resident()
+
+
+# ------------------------------------------------------- health tracker
+
+def test_shard_health_semantics():
+    h = ShardHealth(4)
+    assert h.failed == frozenset() and h.generation == 0
+    assert h.mark_failed(2)
+    assert h.failed == frozenset({2}) and h.generation == 1
+    # duplicates / out-of-range / unattributed don't change the view
+    assert not h.mark_failed(2)
+    assert not h.mark_failed(7)
+    assert not h.mark_failed(None)
+    assert h.generation == 1 and h.n_faults == 4
+    h.note_timeout()
+    assert h.n_timeouts == 1
+    h.reset()
+    assert h.failed == frozenset() and h.generation == 2
+
+
+# ---------------------------------------- 1-shard failover wiring
+
+def test_shard_fault_marks_health_and_fails_over():
+    """A ShardFault on the compute site converts into ShardFailedError
+    after marking the shard; join_batch retries internally on the
+    updated view (1 shard + r=1: nothing left — results are honestly
+    empty with rb=0 and coverage 0)."""
+    idx, cfg = _index()
+    eng = ShardedMegastepEngine(idx, cfg, n_shards=1)
+    q = _data(30, seed=3)
+    d0, i0 = eng.join_batch(q)
+    with FaultPlan().fail(
+            "sharded.shard_compute", times=1,
+            exc=ShardFault("sharded.shard_compute", shard=0)) as plan:
+        d, i, rb = eng.join_batch_covered(q)
+    assert plan.fired["sharded.shard_compute"] == 2   # fault + retry
+    assert eng.health.failed == frozenset({0})
+    assert eng.coverage_degraded
+    assert eng.coverage_fraction() == 0.0
+    assert np.isinf(d).all() and (i == -1).all() and (rb == 0.0).all()
+    # recovery restores exact serving, bit for bit
+    eng.recover(wait=True)
+    assert not eng.health.failed and not eng.coverage_degraded
+    d2, i2 = eng.join_batch(q)
+    np.testing.assert_array_equal(d0, d2)
+    np.testing.assert_array_equal(i0, i2)
+
+
+def test_shard_failed_error_exhausts_after_bounded_retries():
+    idx, cfg = _index()
+    eng = ShardedMegastepEngine(idx, cfg, n_shards=1)
+    q = _data(10, seed=4)
+    exc = ShardFault("sharded.shard_compute", shard=0)
+    with FaultPlan().fail("sharded.shard_compute", times=99, exc=exc):
+        with pytest.raises(ShardFailedError):
+            eng.join_batch(q)
+
+
+def test_anonymous_fault_on_shard_site_stays_generic():
+    """A plain InjectedFault on a sharded.* site is a generic transient:
+    no health mark, no ShardFailedError — the retry ladder (not
+    failover) owns it."""
+    idx, cfg = _index()
+    eng = ShardedMegastepEngine(idx, cfg, n_shards=1)
+    with FaultPlan().fail("sharded.shard_compute", times=1):
+        with pytest.raises(InjectedFault):
+            eng.dispatch(_data(8, seed=5))
+    assert eng.health.failed == frozenset()
+    assert eng.health.n_faults == 0
+
+
+def test_poisoned_collective_fails_over():
+    """A ShardFault on the collective (finalize) site marks the shard
+    too — the dispatch and finalize halves share one failover path."""
+    idx, cfg = _index()
+    eng = ShardedMegastepEngine(idx, cfg, n_shards=1)
+    h = eng.dispatch(_data(8, seed=6))
+    with FaultPlan().fail(
+            "sharded.collective", times=1,
+            exc=ShardFault("sharded.collective", shard=0)):
+        with pytest.raises(ShardFailedError):
+            eng.finalize(h)
+    assert eng.health.failed == frozenset({0})
+
+
+# ------------------------------------- fault-plan composition (sat. 2)
+
+def test_mixed_site_plan_fires_each_site_as_armed():
+    """One armed FaultPlan composes shard-level sites with the existing
+    megastep/scheduler sites: each fires independently, exactly as
+    armed, each producing its own failure mode."""
+    idx, cfg = _index()
+    eng = StreamJoinEngine(idx, cfg, megastep=True, n_shards=1)
+    sched = ServeScheduler(eng, config=SchedulerConfig(max_inflight=1),
+                           sleep=lambda _s: None)
+    me = eng.megastep_engine
+    q = _data(12, seed=7)
+    ref_d, ref_i = eng.join_batch_host(q)
+    plan = (FaultPlan()
+            .fail("sharded.shard_compute", times=1,
+                  exc=ShardFault("sharded.shard_compute", shard=0))
+            .fail("megastep.fetch", times=1)
+            .fail("sched.dispatch", times=1)
+            .transform("sharded.collective", lambda v: v))
+    with plan:
+        # shard fault at dispatch → failover retry; that retry's
+        # finalize hits the generic fetch fault, which is NOT a shard
+        # fault and propagates as-is (retry-ladder territory)
+        with pytest.raises(InjectedFault):
+            me.join_batch(q)
+        assert me.health.failed == frozenset({0})
+        # fetch fault exhausted: the covered call now completes on the
+        # failed-over (here: fully-lost) view with honest zero bounds
+        d, i, rb = me.join_batch_covered(q)
+        assert (rb == 0.0).all()
+        # scheduler dispatch fault → ladder retries onto the exact
+        # host-planned oracle, untouched by shard health
+        t = sched.join_now(q)
+    assert t.done and not t.degraded
+    np.testing.assert_array_equal(t.distances, ref_d)
+    np.testing.assert_array_equal(t.indices, ref_i)
+    # every armed site fired, exactly as armed, in one plan
+    assert plan.fired["sharded.shard_compute"] >= 2   # fault + retry
+    assert plan.fired["megastep.fetch"] >= 2          # fault + pass
+    assert plan.fired["sched.dispatch"] >= 2          # fault + retry
+    assert plan.fired["sharded.collective"] >= 1      # identity cross
+
+
+def test_upload_site_fires_during_payload_build():
+    idx, cfg = _index()
+    eng = ShardedMegastepEngine(idx, cfg, n_shards=1)
+    with FaultPlan().transform("quant.eps_inflation",
+                               lambda v: v) as plan:
+        eng.join_batch(_data(8, seed=8))
+    # upload site crossed at least once per shard-partitioned piece
+    assert plan.fired.get("sharded.shard_upload", 0) >= 1
+
+
+# --------------------------------- scheduler: failover + deadlines
+
+def _sharded_sched(mi=2, **cfg_kw):
+    idx, cfg = _index()
+    eng = StreamJoinEngine(idx, cfg, megastep=True, n_shards=1)
+    vc = VirtualClock()
+    sched = ServeScheduler(
+        eng, config=SchedulerConfig(max_inflight=mi, backoff_base_s=0.05,
+                                    **cfg_kw),
+        clock=vc.now, sleep=vc.advance)
+    return sched, eng, vc, cfg
+
+
+def test_scheduler_failover_serves_degraded_with_bounds():
+    """Pipelined dispatch hits a shard failure → the scheduler re-enters
+    the engine rung on the failed-over view and the ticket completes
+    degraded, carrying the engine's certified (here: honestly zero)
+    recall bounds; n_expired_dispatched stays 0."""
+    sched, eng, vc, cfg = _sharded_sched()
+    q = _data(9, seed=9)
+    with FaultPlan().fail(
+            "sharded.shard_compute", times=1,
+            exc=ShardFault("sharded.shard_compute", shard=0)):
+        t = sched.join_now(q)
+    assert t.done and t.degraded
+    assert (t.recall_bound == 0.0).all()
+    assert sched.stats.n_failovers == 1
+    assert sched.stats.n_expired_dispatched == 0
+    assert sched.stats.join.n_failed_shards == 1
+    assert sched.stats.join.coverage_bound == 0.0
+    me = eng.megastep_engine
+    me.recover(wait=True)
+    t2 = sched.join_now(q)
+    assert t2.done and not t2.degraded
+
+
+def test_deadline_rechecked_at_failover_instant():
+    """A request whose deadline expires *during* the failure window is
+    shed at the failover re-entry, never dispatched — the
+    n_expired_dispatched == 0 invariant holds across failover."""
+    sched, eng, vc, cfg = _sharded_sched()
+
+    def hang_then_die(v):
+        vc.advance(10.0)        # the failure burns the whole deadline
+        raise ShardFault("sharded.collective", shard=0)
+
+    q = _data(7, seed=10)
+    with FaultPlan().transform("sharded.collective", hang_then_die):
+        t = sched.submit(q, deadline_s=1.0)
+        sched.drain()
+    assert t.status == "shed" and t.reason == "deadline"
+    assert sched.stats.n_failovers == 1
+    assert sched.stats.n_expired_dispatched == 0
+    assert eng.megastep_engine.health.failed == frozenset({0})
+
+
+def test_sync_path_failover_matches_pipelined():
+    sched, eng, vc, cfg = _sharded_sched(mi=1)
+    with FaultPlan().fail(
+            "sharded.shard_compute", times=1,
+            exc=ShardFault("sharded.shard_compute", shard=0)):
+        t = sched.join_now(_data(6, seed=11))
+    # sync rung: join_batch retries failover internally; the ticket
+    # completes degraded on the covered path in the same step
+    assert t.done and t.degraded
+    assert sched.stats.n_expired_dispatched == 0
+
+
+# -------------------------------------- bounded attempt timeouts (sat. 1)
+
+def test_attempt_timeout_converts_hang_to_failover():
+    """A hung collective (sleeping transform) is bounded by
+    attempt_timeout and surfaces as a ShardFailedError; the internal
+    retry then completes exactly — serve_forever() never hangs."""
+    idx, cfg = _index()
+    eng = ShardedMegastepEngine(idx, cfg, n_shards=1,
+                                attempt_timeout=0.25)
+    q = _data(20, seed=12)
+    d0, i0 = eng.join_batch(q)
+
+    hung_once = threading.Event()
+    release = threading.Event()
+
+    def hang_first(v):
+        if not hung_once.is_set():
+            hung_once.set()
+            release.wait(30.0)      # "forever" — well past the timeout
+        return v
+
+    try:
+        with FaultPlan().transform("sharded.collective", hang_first):
+            d, i = eng.join_batch(q)
+    finally:
+        release.set()               # free the zombie attempt thread
+    assert eng.health.n_timeouts == 1
+    # timeout carries no shard attribution: view unchanged, results
+    # bitwise the healthy ones after the internal retry
+    assert eng.health.failed == frozenset()
+    np.testing.assert_array_equal(d, d0)
+    np.testing.assert_array_equal(i, i0)
+
+
+def test_attempt_timeout_none_keeps_blocking_semantics():
+    idx, cfg = _index()
+    eng = ShardedMegastepEngine(idx, cfg, n_shards=1)
+    assert eng.attempt_timeout is None
+    d, i = eng.join_batch(_data(8, seed=13))   # no pool spun up
+    assert eng._attempt_pool is None
+
+
+# ----------------------------------------------- wiring / validation
+
+def test_stream_engine_replication_plumbing():
+    idx, cfg = _index()
+    eng = StreamJoinEngine(idx, cfg, megastep=True, n_shards=1,
+                           replication=2)
+    # clamped at n_shards, like the engine ctor documents
+    assert eng.megastep_engine.replication == 1
+    with pytest.raises(ValueError, match="sharded-engine knobs"):
+        StreamJoinEngine(idx, cfg, megastep=True, replication=2)
+    qcfg = JoinConfig(k=5, n_pivots=24, n_groups=6, quantize="int8")
+    qidx = build_index(_data(), qcfg)
+    with pytest.raises(ValueError, match="does not replicate"):
+        StreamJoinEngine(qidx, qcfg, quantized=True, n_shards=1,
+                         replication=2)
+    with pytest.raises(ValueError, match="replication must be >= 1"):
+        ShardedMegastepEngine(idx, cfg, n_shards=1, replication=0)
+
+
+def test_datastore_replication_and_recover_shards():
+    from repro.serve.retrieval import Datastore
+    keys = _data(300, seed=14)
+    store = Datastore.build(keys, np.arange(300) % 17, k=4, n_pivots=16,
+                            n_shards=1, replication=2)
+    d0, i0, v0 = store.retrieve(_data(6, seed=15))
+    me = store.engine().megastep_engine
+    assert me.replication == 1          # clamped at n_shards=1
+    with FaultPlan().fail(
+            "sharded.shard_compute", times=1,
+            exc=ShardFault("sharded.shard_compute", shard=0)):
+        store.retrieve(_data(6, seed=15))
+    assert me.health.failed == frozenset({0})
+    threads = store.recover_shards(wait=True)
+    assert threads == [] and not me.health.failed
+    d1, i1, v1 = store.retrieve(_data(6, seed=15))
+    np.testing.assert_array_equal(d0, d1)
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(v0, v1)
+
+
+def test_stats_stamp_failed_shards():
+    from repro.core.types import JoinStats
+    idx, cfg = _index()
+    eng = ShardedMegastepEngine(idx, cfg, n_shards=1)
+    stats = JoinStats()
+    eng.join_batch(_data(8, seed=16), stats=stats)
+    assert stats.n_shards == 1
+    assert stats.n_failed_shards == 0
+    assert stats.coverage_bound == 1.0 and stats.recall_bound == 1.0
+
+
+# ----------------------------------------------- 8-device subprocesses
+
+def _run_sub(script, extra_env=None, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.update(extra_env or {})
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                          env=env, capture_output=True, text=True,
+                          timeout=timeout)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+_COMMON = """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro.core import JoinConfig, build_index
+    from repro.core.megastep import MegastepEngine
+    from repro.core.sharded import ShardedMegastepEngine
+    from repro.serve.faultinject import FaultPlan, ShardFault
+
+    def clustered(n, seed, centers=None):
+        rng = np.random.default_rng(seed)
+        if centers is None:
+            centers = np.random.default_rng(99).normal(
+                size=(40, 8)).astype(np.float32) * 20.0
+        asg = rng.integers(0, centers.shape[0], n)
+        return (centers[asg] + 0.5 * rng.normal(size=(n, 8))
+                ).astype(np.float32), centers
+
+    s, cents = clustered(4000, 0)
+    q, _ = clustered(250, 1, cents)
+    cfg = JoinConfig(k=8, n_pivots=64, n_groups=6,
+                     pivot_strategy="kmeans")
+    idx = build_index(s, cfg)
+    ref = MegastepEngine(idx, cfg)
+    d0, i0 = ref.join_batch(q)
+"""
+
+_FAILOVER_R2_SCRIPT = _COMMON + """
+    eng = ShardedMegastepEngine(idx, cfg, n_shards=8, replication=2)
+    d1, i1 = eng.join_batch(q)
+    healthy_bitwise = (np.array_equal(d0, d1) and np.array_equal(i0, i1))
+
+    # kill a shard mid-stream: the internal failover retry must land
+    # bitwise on the replicas
+    with FaultPlan().fail("sharded.shard_compute", times=1,
+                          exc=ShardFault("sharded.shard_compute",
+                                         shard=3)):
+        d2, i2 = eng.join_batch(q)
+    failover_bitwise = (np.array_equal(d0, d2) and np.array_equal(i0, i2))
+    degraded_after_one = bool(eng.coverage_degraded)
+    failed = sorted(eng.health.failed)
+
+    # background (non-blocking) recovery, then bitwise again
+    t = eng.recover(wait=False)
+    t.join(timeout=120)
+    d3, i3 = eng.join_batch(q)
+    recovered_bitwise = (np.array_equal(d0, d3) and np.array_equal(i0, i3))
+    print(json.dumps(dict(
+        healthy_bitwise=healthy_bitwise, failover_bitwise=failover_bitwise,
+        degraded_after_one=degraded_after_one, failed=failed,
+        recovered=not eng.health.failed,
+        recovered_bitwise=recovered_bitwise)))
+"""
+
+_RECALL_BOUND_SCRIPT = _COMMON + """
+    eng = ShardedMegastepEngine(idx, cfg, n_shards=8, replication=1)
+    with FaultPlan().fail("sharded.shard_compute", times=1,
+                          exc=ShardFault("sharded.shard_compute",
+                                         shard=2)):
+        d, i, rb = eng.join_batch_covered(q)
+
+    # brute-force oracle: per-query true recall of the degraded answer
+    k = cfg.k
+    dd = np.sqrt(np.maximum(
+        (q * q).sum(1)[:, None] + (s * s).sum(1)[None, :]
+        - 2.0 * (q @ s.T), 0.0))
+    true_ids = np.argsort(dd, axis=1, kind="stable")[:, :k]
+    true_recall = np.array([
+        len(set(i[r].tolist()) & set(true_ids[r].tolist())) / k
+        for r in range(q.shape[0])])
+    sound = bool((true_recall >= rb - 1e-6).all())
+    print(json.dumps(dict(
+        coverage=eng.coverage_fraction(), degraded=bool(eng.coverage_degraded),
+        rb_min=float(rb.min()), rb_mean=float(rb.mean()),
+        rb_max=float(rb.max()), sound=sound,
+        frac_fully_proven=float((rb == 1.0).mean()))))
+"""
+
+
+def test_r2_failover_bitwise_subprocess():
+    out = _run_sub(_FAILOVER_R2_SCRIPT)
+    assert out["healthy_bitwise"]
+    assert out["failover_bitwise"], "failover perturbed output bits"
+    assert out["failed"] == [3]
+    # with r=2 a single shard loss keeps every pivot group covered
+    assert not out["degraded_after_one"]
+    assert out["recovered"] and out["recovered_bitwise"]
+
+
+def test_r1_recall_bound_sound_subprocess():
+    out = _run_sub(_RECALL_BOUND_SCRIPT)
+    assert out["degraded"] and out["coverage"] < 1.0
+    assert out["sound"], "reported recall_bound exceeded true recall"
+    # on clustered data the certificate is non-vacuous: most queries
+    # fully proven, the lost clusters' queries honestly uncertified
+    assert out["frac_fully_proven"] > 0.5
+    assert out["rb_max"] == 1.0
