@@ -799,9 +799,9 @@ def shard_failover_bench(n: int = 20000, batches: int = 6) -> List[Row]:
              "recall_bound_min": float(rb.min()),
              "recall_bound_mean": float(rb.mean()),
              "frac_fully_certified": float((rb == 1.0).mean()),
-             "scheduler_failovers": float(sched.stats.n_failovers),
+             "scheduler_failovers": float(sched.snapshot().n_failovers),
              "n_expired_dispatched_failover":
-                 float(sched.stats.n_expired_dispatched),
+                 float(sched.snapshot().n_expired_dispatched),
              "failover_bitwise_equal": bitwise}),
     ]
 
@@ -931,7 +931,9 @@ def serving_under_load_bench(n: int = 20000, batches: int = 8
                                         else deadline_s))
                     for j, t in enumerate(times)]
         tickets = run_open_loop(sched, arrivals, vc)
-        return LoadReport.from_tickets(tickets, sched.stats), sched.stats
+        # snapshot(): locked, immutable copy — never read .stats live
+        st = sched.snapshot()
+        return LoadReport.from_tickets(tickets, st), st
 
     rep08, st08 = one_run(0.8)
     # the overload run is longer (same wall cost — excess rows shed):
@@ -944,6 +946,47 @@ def serving_under_load_bench(n: int = 20000, batches: int = 8
     # dispatch instant (the hard-zero below covers these runs too)
     rep08p, st08p = one_run(0.8, max_inflight=2)
     rep20p, st20p = one_run(2.0, rows_mult=3, max_inflight=2)
+
+    # ---- tracing arm: the flight recorder rides the same hot path ----
+    # steady-state engine batches, min-of-reps, untraced vs traced: the
+    # fractional overhead the always-on instrumentation plus an
+    # *enabled* tracer costs (guarded ≤ 5%)
+    import jax
+
+    from repro import obs
+
+    def loop_time(reps: int = 3, inner: int = 4) -> float:
+        best = float("inf")
+        for _ in range(reps):
+            lt0 = time.perf_counter()
+            for _ in range(inner):
+                engine.join_batch(wq)
+            best = min(best, (time.perf_counter() - lt0) / inner)
+        return best
+
+    t_plain = loop_time()
+    with obs.capture(capacity=1 << 18) as tr:
+        t_traced = loop_time()
+        # traced steady state stays zero-sync: same device-level loop
+        # the megastep bench pins, now with the tracer installed — span
+        # recording must not fetch anything
+        me = engine.megastep_engine
+        qd, nv = me.enqueue(wq)
+        jax.block_until_ready(me.join_batch_device(qd, nv))
+        with _fetch_counter() as fc, jax.transfer_guard("disallow"):
+            jax.block_until_ready(me.join_batch_device(qd, nv))
+        traced_syncs = fc.count
+        # one traced scheduler run → the Perfetto-loadable CI artifact
+        tr.clear()
+        one_run(0.8)
+        obs.write_chrome_trace(tr.spans(), "bench-serving-trace.json")
+    trace_overhead_frac = max(
+        0.0, t_traced / max(t_plain, 1e-12) - 1.0)
+    if traced_syncs:
+        raise AssertionError(
+            f"traced steady state fetched {traced_syncs} arrays — "
+            f"instrumentation broke the zero-sync invariant")
+
     return [
         Row("kernel_serving_under_load",
             f"ns={n_s}x{dim},k={k},req={req},batch={batch_rows}",
@@ -967,6 +1010,8 @@ def serving_under_load_bench(n: int = 20000, batches: int = 8
              "deadline_violations_dispatched": float(
                  st08.n_expired_dispatched + st20.n_expired_dispatched
                  + st08p.n_expired_dispatched + st20p.n_expired_dispatched),
+             "trace_overhead_frac": trace_overhead_frac,
+             "traced_steady_state_syncs": float(traced_syncs),
              "bitwise_equal": 1.0}),
     ]
 

@@ -11,19 +11,26 @@ delta segment — S-side phase 1 never re-runs on the existing base),
 stale ones are tombstoned with ``remove_entries``, and ``compact()``
 folds everything back into one base between decode steps.
 
+Retrieval runs through a ``ServeScheduler`` (admission control +
+deadlines), so the flight recorder's metrics registry fills up as the
+demo serves — a live summary (qps, p99, shed/degraded fractions, the
+paper's pruning selectivity) prints at exit.
+
 Run:  PYTHONPATH=src python examples/serve_retrieval.py
 """
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import get_reduced
 from repro.models import ModelOptions, forward, init_params
 from repro.serve import (
-    BatchedServer, Datastore, KnnLMConfig, ServeConfig, interpolate,
-    knn_logits)
+    BatchedServer, Datastore, KnnLMConfig, ServeConfig, ServeScheduler,
+    interpolate, knn_logits)
 
 
 def main():
@@ -45,10 +52,16 @@ def main():
     # index at ~4x less device memory (repro.quant)
     store = Datastore.build(keys, vals, k=8, n_pivots=64, n_groups=4)
     kcfg = KnnLMConfig(lam=0.3, tau=100.0, k=8)
+    # retrieval through admission control: every decode step's join is a
+    # scheduled request, so the obs metrics registry sees real serving
+    # traffic (latency histogram, shed/degraded counters, §6 join stats)
+    sched = ServeScheduler.for_datastore(store, kcfg.k)
+    t_serve0 = time.perf_counter()
 
     def hook(logits, cache):
         q = np.asarray(logits)[:, :64]
-        kl = knn_logits(q, store, kcfg, vocab=cfg.vocab)
+        kl = knn_logits(q, store, kcfg, vocab=cfg.vocab,
+                        scheduler=sched, deadline_s=5.0)
         return interpolate(logits, kl, kcfg.lam)
 
     srv = BatchedServer(cfg, ServeConfig(batch=4, temperature=0.0),
@@ -82,6 +95,27 @@ def main():
     print(f"compacted to {store.index.n_segments} segment, "
           f"{store.n_entries} live entries "
           f"({store.index.last_compact_s * 1e3:.1f} ms)")
+
+    # --- live metrics summary: what the flight recorder saw ----------
+    elapsed = time.perf_counter() - t_serve0
+    st = sched.snapshot()
+    ms = obs.metrics.REGISTRY.snapshot()
+    qps = st.n_completed / max(elapsed, 1e-9)
+    shed_frac = st.n_shed / max(st.n_submitted, 1)
+    degraded_frac = st.n_degraded_requests / max(st.n_completed, 1)
+    print("\n-- serving metrics (repro.obs) --")
+    print(f"requests: {st.n_submitted} submitted, "
+          f"{st.n_completed} completed ({qps:.1f} req/s), "
+          f"{st.n_retries} retries, {st.n_failovers} failovers")
+    print(f"latency: p50={ms.get('serve_latency_s_p50', float('nan')) * 1e3:.2f}ms "
+          f"p99={ms.get('serve_latency_s_p99', float('nan')) * 1e3:.2f}ms")
+    print(f"shed fraction: {shed_frac:.3f}, "
+          f"degraded fraction: {degraded_frac:.3f}")
+    print(f"pruning: selectivity={st.join.selectivity:.4f} (Eq. 13), "
+          f"tile selectivity={st.join.tile_selectivity:.3f} "
+          f"({st.join.tiles_visited}/{st.join.tiles_total} tiles), "
+          f"index compactions="
+          f"{int(ms.get('index_compact_total', 0))}")
 
 
 if __name__ == "__main__":

@@ -45,10 +45,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
+import time
 from typing import Optional
 
 import jax
 import numpy as np
+
+from repro import obs
 
 from .metrics import canonical_gathered
 from .schedule import compact_visits_jnp, visit_mask_jnp
@@ -461,28 +464,34 @@ class MegastepEngine:
                 return self._payload[1]
             if not segs:
                 raise ValueError("megastep over an empty index")
-            # fault hook: a failure here simulates a device OOM on the
-            # payload (re)upload — nothing is cached, the next call
-            # rebuilds from scratch
-            faultinject.fire("megastep.payload_upload")
-            bn = self._bn
-            k = self.config.k
-            skey = (tuple(id(si) for si, _ in segs), bn, k)
-            if self._struct is None or self._struct[0] != skey:
-                self._struct = (skey, self._build_struct(segs, bn, k))
-            st = self._struct[1]
-            # liveness + tombstone count change per index version; the
-            # rows, geometry and tile stats above change only with the
-            # structure
-            alive = self._alive_mask(st, tomb)
-            payload = _Payload(
-                segs=self._segs_for_view(st),
-                tiles=dict(st["tiles_dev"], alive=self._put_alive(alive)),
-                dead_total=self._put_rep(np.int32(tomb.size)),
-                seg_meta=st["seg_meta"], dim=st["dim"],
-                n_finite_total=st["n_finite_total"], primary=st["primary"])
-            self._payload = (vkey, payload)
-            return payload
+            with obs.span("megastep.refresh", n_segments=len(segs),
+                          n_tombstones=int(tomb.size)):
+                obs.metrics.REGISTRY.counter(
+                    "megastep_payload_refresh_total").inc()
+                # fault hook: a failure here simulates a device OOM on
+                # the payload (re)upload — nothing is cached, the next
+                # call rebuilds from scratch
+                faultinject.fire("megastep.payload_upload")
+                bn = self._bn
+                k = self.config.k
+                skey = (tuple(id(si) for si, _ in segs), bn, k)
+                if self._struct is None or self._struct[0] != skey:
+                    self._struct = (skey, self._build_struct(segs, bn, k))
+                st = self._struct[1]
+                # liveness + tombstone count change per index version;
+                # the rows, geometry and tile stats above change only
+                # with the structure
+                alive = self._alive_mask(st, tomb)
+                payload = _Payload(
+                    segs=self._segs_for_view(st),
+                    tiles=dict(st["tiles_dev"],
+                               alive=self._put_alive(alive)),
+                    dead_total=self._put_rep(np.int32(tomb.size)),
+                    seg_meta=st["seg_meta"], dim=st["dim"],
+                    n_finite_total=st["n_finite_total"],
+                    primary=st["primary"])
+                self._payload = (vkey, payload)
+                return payload
 
     # serving-view hooks: the sharded engines (core.sharded) key the
     # cached payload on shard health, mask rows not served under the
@@ -613,14 +622,27 @@ class MegastepEngine:
         # largest power of two <= tile_r, so pow2 buckets always reshape
         bm = min(bucket, self._bm_cap)
         impl = self.impl or ("pallas" if ops.use_pallas() else "ref")
-        return _megastep(
-            q_dev, n_valid_dev, payload.dead_total, payload.segs,
-            payload.tiles, state,
-            k=self.config.k, bm=bm, bn=self._bn,
-            metric=self.config.metric, dim=payload.dim,
-            n_finite_total=payload.n_finite_total,
-            seg_meta=payload.seg_meta, primary=payload.primary,
-            impl=impl)
+        # span timing = host launch bracket of the one fused call; the
+        # stage instants record the fused pipeline's structure with
+        # host-known attrs only — nothing here fetches or blocks on the
+        # device (the zero-steady-state-sync invariant)
+        with obs.span("megastep.device_step", bucket=bucket, bm=bm,
+                      bn=self._bn, k=self.config.k, impl=impl,
+                      n_segments=len(payload.seg_meta)) as sp:
+            if obs.enabled():
+                for stage in ("assign", "bounds", "schedule",
+                              "gather_topk", "merge"):
+                    obs.event(f"megastep.{stage}", fused=True)
+            out = _megastep(
+                q_dev, n_valid_dev, payload.dead_total, payload.segs,
+                payload.tiles, state,
+                k=self.config.k, bm=bm, bn=self._bn,
+                metric=self.config.metric, dim=payload.dim,
+                n_finite_total=payload.n_finite_total,
+                seg_meta=payload.seg_meta, primary=payload.primary,
+                impl=impl)
+            sp.set(outcome="launched")
+            return out
 
     def _validated_queries(self, queries: np.ndarray):
         q = np.ascontiguousarray(queries, np.float32)
@@ -642,6 +664,8 @@ class MegastepEngine:
             return JoinHandle(kind="empty", n=0)
         payload = self._refresh()
         if stats is not None:
+            stats.n_r += n
+            stats.n_s = max(stats.n_s, self.index.n_s)
             stats.n_segments = len(payload.seg_meta)
             stats.n_tombstones = int(np.asarray(payload.dead_total))
             stats.pivot_pairs_computed += n * sum(
@@ -662,12 +686,20 @@ class MegastepEngine:
         if handle.kind != "mega":
             raise ValueError(f"cannot finalize handle kind {handle.kind!r}")
         from repro.serve import faultinject
-        faultinject.fire("megastep.fetch")     # simulated lost fetch
-        n = handle.n
-        d, hi, lo = handle.dev
-        d = np.asarray(d)[:n]
-        ids = ((np.asarray(hi, np.int64) << 32)
-               | (np.asarray(lo, np.int64) & np.int64(0xFFFFFFFF)))[:n]
+        # the fetch below is the one boundary that synchronizes anyway —
+        # bracketing it costs no extra sync, and its wall time is the
+        # device-step completion time
+        t0 = time.perf_counter()
+        with obs.span("megastep.fetch", rows=handle.n):
+            faultinject.fire("megastep.fetch")     # simulated lost fetch
+            n = handle.n
+            d, hi, lo = handle.dev
+            d = np.asarray(d)[:n]
+            ids = ((np.asarray(hi, np.int64) << 32)
+                   | (np.asarray(lo, np.int64)
+                      & np.int64(0xFFFFFFFF)))[:n]
+        obs.metrics.REGISTRY.histogram("megastep_finalize_s") \
+            .observe(time.perf_counter() - t0)
         return np.ascontiguousarray(d), np.ascontiguousarray(ids)
 
     def join_batch(

@@ -50,6 +50,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
+
 from .api import execute_join
 from .index import SIndex, as_float32_rows, build_index, plan_queries
 from .metrics import canonical_topk, cmp_dist
@@ -196,6 +198,9 @@ class MutableIndex:
         self._buffer_ids.append(ids)
         self._n_buffer += rows.shape[0]
         self._version += 1
+        reg = obs.metrics.REGISTRY
+        reg.counter("index_insert_rows_total").inc(rows.shape[0])
+        reg.gauge("index_segments").set(self.n_segments)
         if self._n_buffer >= self.seal_threshold:
             self.seal()
         return ids
@@ -210,9 +215,13 @@ class MutableIndex:
         offset = int(self._buffer_ids[0][0])
         self._buffer, self._buffer_ids, self._n_buffer = [], [], 0
         self._buffer_seg = None
-        seg = Segment(build_index(rows, self.config), offset)
+        with obs.span("index.seal", rows=rows.shape[0]):
+            seg = Segment(build_index(rows, self.config), offset)
         self.segments.append(seg)
         self._version += 1
+        reg = obs.metrics.REGISTRY
+        reg.counter("index_seal_total").inc()
+        reg.gauge("index_segments").set(self.n_segments)
         return seg
 
     def delete(self, ids) -> None:
@@ -233,6 +242,9 @@ class MutableIndex:
         self._tombstones |= new
         self._tomb_sorted = None
         self._version += 1
+        reg = obs.metrics.REGISTRY
+        reg.counter("index_delete_rows_total").inc(ids.size)
+        reg.gauge("index_tombstones").set(len(self._tombstones))
 
     def compact(self, *, stats: Optional[JoinStats] = None) -> np.ndarray:
         """Fold segments + buffer − tombstones into one rebuilt base.
@@ -244,20 +256,28 @@ class MutableIndex:
         remap row-aligned payloads (``payload_new = payload_old[ret]``).
         """
         t0 = time.perf_counter()
-        rows, old_ids = self.live_rows()
-        self.segments = []
-        self._buffer, self._buffer_ids, self._n_buffer = [], [], 0
-        # drop the ephemeral buffer-segment view: compact re-bases
-        # _next_id downward, so a later buffer could reproduce the cache
-        # key (_next_id, n_buffer) while holding different rows
-        self._buffer_seg = None
-        self._tombstones.clear()
-        self._tomb_sorted = None
-        self._next_id = rows.shape[0]
-        if rows.shape[0]:
-            self.segments.append(Segment(build_index(rows, self.config), 0))
-        self._version += 1
+        with obs.span("index.compact", n_segments=self.n_segments,
+                      n_tombstones=self.n_tombstones):
+            rows, old_ids = self.live_rows()
+            self.segments = []
+            self._buffer, self._buffer_ids, self._n_buffer = [], [], 0
+            # drop the ephemeral buffer-segment view: compact re-bases
+            # _next_id downward, so a later buffer could reproduce the
+            # cache key (_next_id, n_buffer) while holding different rows
+            self._buffer_seg = None
+            self._tombstones.clear()
+            self._tomb_sorted = None
+            self._next_id = rows.shape[0]
+            if rows.shape[0]:
+                self.segments.append(
+                    Segment(build_index(rows, self.config), 0))
+            self._version += 1
         self.last_compact_s = time.perf_counter() - t0
+        reg = obs.metrics.REGISTRY
+        reg.counter("index_compact_total").inc()
+        reg.histogram("index_compact_s").observe(self.last_compact_s)
+        reg.gauge("index_segments").set(self.n_segments)
+        reg.gauge("index_tombstones").set(0)
         if stats is not None:
             stats.compact_time_s += self.last_compact_s
         return old_ids

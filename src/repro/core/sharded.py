@@ -66,6 +66,8 @@ from typing import Optional
 import jax
 import numpy as np
 
+from repro import obs
+
 from .jax_compat import make_mesh, shard_map
 from .megastep import (JoinHandle, MegastepEngine, _assign_bounds_schedule,
                        _bump_trace, _canonical_runs, _gather_topk_run)
@@ -537,6 +539,15 @@ class ShardedMegastepEngine(_ShardedPayloadMixin, MegastepEngine):
         shard = getattr(fault, "shard", None)
         self.health.mark_failed(shard)
         self._cov_cache = None
+        # the remask: the serving view just changed — the next refresh
+        # rebuilds owner-failover masks keyed on this generation
+        obs.event("sharded.failover_remask", shard=shard,
+                  generation=self.health.generation,
+                  n_failed=len(self.health.failed))
+        reg = obs.metrics.REGISTRY
+        reg.counter("shard_failover_total").inc()
+        reg.gauge("shard_failed").set(len(self.health.failed))
+        reg.gauge("shard_generation").set(self.health.generation)
         return ShardFailedError(
             shard, f"shard {shard} failed "
                    f"({len(self.health.failed)}/{self.n_shards} down): "
@@ -563,6 +574,7 @@ class ShardedMegastepEngine(_ShardedPayloadMixin, MegastepEngine):
             from repro.serve.faultinject import ShardFailedError
             fut.cancel()
             self.health.note_timeout()
+            obs.metrics.REGISTRY.counter("shard_timeout_total").inc()
             raise ShardFailedError(
                 None, f"{what} exceeded attempt_timeout={timeout}s "
                       f"(hung shard or collective)") from None
@@ -623,6 +635,8 @@ class ShardedMegastepEngine(_ShardedPayloadMixin, MegastepEngine):
             # taking it could deadlock against a caller holding it
             payload = self._refresh()
             if stats is not None:
+                stats.n_r += n
+                stats.n_s = max(stats.n_s, self.index.n_s)
                 stats.n_segments = len(payload.seg_meta)
                 stats.n_tombstones = int(np.asarray(payload.dead_total))
                 stats.pivot_pairs_computed += n * sum(
@@ -675,8 +689,15 @@ class ShardedMegastepEngine(_ShardedPayloadMixin, MegastepEngine):
                     np.asarray(lmv))
 
         try:
-            d, hi, lo, lm = self._bounded_attempt(
-                fetch, "sharded finalize")
+            # the cross-shard tree-merge result lands here — this fetch
+            # synchronizes anyway, so the span costs no extra sync
+            with obs.span("sharded.collective", rows=n,
+                          n_shards=self.n_shards,
+                          generation=self.health.generation,
+                          n_failed=len(self.health.failed)) as sp:
+                d, hi, lo, lm = self._bounded_attempt(
+                    fetch, "sharded finalize")
+                sp.set(outcome="merged")
         except faultinject.ShardFault as e:
             raise self._shard_failed(e) from e
         d = np.ascontiguousarray(d[:n])
@@ -746,10 +767,16 @@ class ShardedMegastepEngine(_ShardedPayloadMixin, MegastepEngine):
             bn, k = self._bn, self.config.k
             # the expensive half — re-uploading every shard's slice —
             # runs outside refresh_lock so serving never blocks on it
-            st = self._build_struct(segs, bn, k)
-            skey = (tuple(id(si) for si, _ in segs), bn, k)
-            with self.refresh_lock:
-                self._struct = (skey, st)
-                self.health.reset()
-                self._payload = None
-                self._cov_cache = None
+            with obs.span("sharded.recover", n_shards=self.n_shards,
+                          n_failed=len(self.health.failed)):
+                st = self._build_struct(segs, bn, k)
+                skey = (tuple(id(si) for si, _ in segs), bn, k)
+                with self.refresh_lock:
+                    self._struct = (skey, st)
+                    self.health.reset()
+                    self._payload = None
+                    self._cov_cache = None
+            reg = obs.metrics.REGISTRY
+            reg.counter("shard_recover_total").inc()
+            reg.gauge("shard_failed").set(0)
+            reg.gauge("shard_generation").set(self.health.generation)

@@ -295,12 +295,17 @@ class StreamJoinEngine:
         queries = np.ascontiguousarray(queries, np.float32)
         if stats is not None:
             stats.n_batches += 1
-        return self._join_batch_host(queries, stats=stats)
+        from repro import obs
+        with obs.span("stream.host_join", rows=queries.shape[0]):
+            return self._join_batch_host(queries, stats=stats)
 
     def _join_batch_host(self, queries, *, stats=None):
         from .api import execute_join
         from .segments import MutableIndex
 
+        if stats is not None:
+            stats.n_r += queries.shape[0]
+            stats.n_s = max(stats.n_s, self.index.n_s)
         if isinstance(self.index, MutableIndex):
             return self.index.join_batch(queries, config=self.config,
                                          stats=stats)

@@ -170,6 +170,78 @@ class JoinStats:
     n_failed_shards: int = 0
     coverage_bound: float = 1.0
 
+    def merged(self, other: "JoinStats") -> "JoinStats":
+        """Fold ``other`` (a later attempt / retried / failed-over batch
+        of the same serving stream) into a new aggregate — the fix for
+        stats from retries silently overwriting each other when one
+        shared ``JoinStats`` is threaded through every engine call.
+
+        Per-field semantics:
+
+        * **counters sum** — ``n_r``, ``replicas_s``,
+          ``pairs_computed``/``pivot_pairs_computed``,
+          ``tiles_total``/``tiles_visited``, ``n_batches``,
+          ``n_quant_fallback``, ``n_resident_rerank``/``n_host_rerank``,
+          ``n_degraded``, and the ``compact_time_s`` accumulator
+          (selectivity/tile-selectivity stay meaningful as
+          work-weighted aggregates);
+        * **sizes keep the max** — ``n_s`` is the S side every attempt
+          joined against, not work performed: summing it across retries
+          of the *same* index would deflate the aggregate selectivity
+          (Σpairs / (Σn_r · max n_s) is the work-weighted mean);
+        * **degradation keeps the worst** — ``recall_bound`` and
+          ``coverage_bound`` take the min (a sound bound for the union
+          of answers is the worst per-batch bound),
+          ``n_failed_shards`` the max (it is a view size, not a rate);
+        * **routing fields keep the last writer** — ``quant_mode`` /
+          ``quant_autotuned`` / ``quant_mp`` describe which engine the
+          *most recent* batch ran on, ``n_shards`` the mesh it ran
+          over, ``n_segments``/``n_tombstones`` the index snapshot it
+          saw; ``other`` wins whenever it actually stamped them.
+        """
+        out = JoinStats(
+            n_r=self.n_r + other.n_r,
+            n_s=max(self.n_s, other.n_s),
+            replicas_s=self.replicas_s + other.replicas_s,
+            pairs_computed=self.pairs_computed + other.pairs_computed,
+            pivot_pairs_computed=(self.pivot_pairs_computed
+                                  + other.pivot_pairs_computed),
+            tiles_total=self.tiles_total + other.tiles_total,
+            tiles_visited=self.tiles_visited + other.tiles_visited,
+            n_batches=self.n_batches + other.n_batches,
+            compact_time_s=self.compact_time_s + other.compact_time_s,
+            n_quant_fallback=(self.n_quant_fallback
+                              + other.n_quant_fallback),
+            n_resident_rerank=(self.n_resident_rerank
+                               + other.n_resident_rerank),
+            n_host_rerank=self.n_host_rerank + other.n_host_rerank,
+            n_degraded=self.n_degraded + other.n_degraded,
+            recall_bound=min(self.recall_bound, other.recall_bound),
+            coverage_bound=min(self.coverage_bound, other.coverage_bound),
+            n_failed_shards=max(self.n_failed_shards,
+                                other.n_failed_shards),
+            n_shards=other.n_shards or self.n_shards,
+        )
+        # quant routing: the trio travels together (autotuned=False is a
+        # meaningful stamp once a mode is set)
+        if other.quant_mode:
+            out.quant_mode = other.quant_mode
+            out.quant_autotuned = other.quant_autotuned
+            out.quant_mp = other.quant_mp
+        else:
+            out.quant_mode = self.quant_mode
+            out.quant_autotuned = self.quant_autotuned
+            out.quant_mp = self.quant_mp
+        # index snapshot: tombstones ride with the segment count (0
+        # tombstones under live segments is a real observation)
+        if other.n_segments:
+            out.n_segments = other.n_segments
+            out.n_tombstones = other.n_tombstones
+        else:
+            out.n_segments = self.n_segments
+            out.n_tombstones = self.n_tombstones
+        return out
+
     @property
     def selectivity(self) -> float:
         """Computation selectivity, Eq. 13 (pivot distances included)."""

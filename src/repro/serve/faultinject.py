@@ -138,25 +138,40 @@ class FaultPlan:
     # ---- the hook side ---------------------------------------------
 
     def _fire(self, site: str) -> None:
+        from repro import obs
         with self._lock:
             self.fired[site] = self.fired.get(site, 0) + 1
             ent = self._fail.get(site)
             if ent is None or ent[0] <= 0:
+                obs.metrics.REGISTRY.counter(
+                    "fault_crossings_total", site=site).inc()
                 return
             ent[0] -= 1
             exc = ent[1]
+        reg = obs.metrics.REGISTRY
+        reg.counter("fault_crossings_total", site=site).inc()
+        reg.counter("fault_injected_total", site=site).inc()
+        obs.event("fault.injected", site=site)
         raise exc if exc is not None else InjectedFault(site)
 
     def _transform_value(self, site: str, value):
+        from repro import obs
         with self._lock:
             self.fired[site] = self.fired.get(site, 0) + 1
             fn = self._transform.get(site)
-        return value if fn is None else fn(value)
+        reg = obs.metrics.REGISTRY
+        reg.counter("fault_crossings_total", site=site).inc()
+        if fn is None:
+            return value
+        reg.counter("fault_injected_total", site=site).inc()
+        obs.event("fault.injected", site=site, kind="transform")
+        return fn(value)
 
     def _cross(self, site: str, value):
         """fire + transform as ONE counted crossing (see :func:`cross`):
         a scheduled failure wins; otherwise an armed transform maps the
         value through (and may sleep — a hang — or raise itself)."""
+        from repro import obs
         exc = fn = None
         with self._lock:
             self.fired[site] = self.fired.get(site, 0) + 1
@@ -166,9 +181,17 @@ class FaultPlan:
                 exc = ent[1] if ent[1] is not None else InjectedFault(site)
             else:
                 fn = self._transform.get(site)
+        reg = obs.metrics.REGISTRY
+        reg.counter("fault_crossings_total", site=site).inc()
         if exc is not None:
+            reg.counter("fault_injected_total", site=site).inc()
+            obs.event("fault.injected", site=site)
             raise exc
-        return value if fn is None else fn(value)
+        if fn is None:
+            return value
+        reg.counter("fault_injected_total", site=site).inc()
+        obs.event("fault.injected", site=site, kind="transform")
+        return fn(value)
 
     # ---- arming scope ----------------------------------------------
 

@@ -212,6 +212,9 @@ class Datastore:
         mutation retry, and after ``max_retries`` collisions finish the
         join while *holding* the lock (writers block briefly — bounded
         starvation instead of unbounded retries)."""
+        from repro import obs
+        reg = obs.metrics.REGISTRY
+        reg.counter("retrieval_joins_total").inc()
         queries = np.ascontiguousarray(queries, np.float32)
         for _ in range(max_retries):
             with self._lock:
@@ -223,11 +226,14 @@ class Datastore:
             except Exception:
                 with self._lock:
                     if self.index.version != v0:
+                        reg.counter(
+                            "retrieval_version_retries_total").inc()
                         continue     # mutated mid-join; retry, not a fault
                 raise
             with self._lock:
                 if self.index.version == v0:
                     return d, idx, values
+            reg.counter("retrieval_version_retries_total").inc()
         with self._lock:             # write-heavy: serialize this one
             d, idx = self.engine(k).join_batch(queries, stats=stats)
             return d, idx, self.values

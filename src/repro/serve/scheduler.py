@@ -66,6 +66,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import itertools
 import threading
 import time
 from collections import deque
@@ -73,6 +74,7 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.types import JoinStats
 
 from . import faultinject
@@ -89,6 +91,34 @@ class Priority(enum.IntEnum):
 
     INTERACTIVE = 0        # latency-sensitive decode traffic
     BULK = 1               # backfill / batch re-scoring
+
+
+# process-wide request ids: the flight recorder's correlation key
+# (``repro.obs.explain(ticket)`` reconstructs one request's span tree
+# by matching these against span ``ticket``/``tickets`` attributes)
+_TICKET_IDS = itertools.count(1)
+
+
+def _join_attrs(js: JoinStats) -> dict:
+    """The paper's §6 metrics (plus serving-state fields) as span
+    attributes — host-side ints/floats only, attached after the engine
+    call returned (so nothing here ever forces a device fetch)."""
+    out = dict(tiles_total=js.tiles_total, tiles_visited=js.tiles_visited,
+               tiles_pruned=js.tiles_total - js.tiles_visited,
+               selectivity=js.selectivity, replicas=js.replicas_s,
+               pivot_pairs=js.pivot_pairs_computed,
+               n_segments=js.n_segments, n_tombstones=js.n_tombstones)
+    if js.n_shards:
+        out.update(n_shards=js.n_shards,
+                   n_failed_shards=js.n_failed_shards,
+                   coverage_bound=js.coverage_bound)
+    if js.quant_mode:
+        out.update(quant_mode=js.quant_mode, quant_mp=js.quant_mp,
+                   n_quant_fallback=js.n_quant_fallback)
+    if js.n_degraded:
+        out.update(n_degraded=js.n_degraded,
+                   recall_bound=js.recall_bound)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,6 +180,7 @@ class Ticket:
 
     rows: np.ndarray = dataclasses.field(repr=False)
     n: int = 0
+    ticket_id: int = 0
     priority: Priority = Priority.INTERACTIVE
     arrival: float = 0.0
     deadline: float = 0.0
@@ -177,6 +208,12 @@ class SchedulerStats:
     handed to an engine. The scheduler sheds expired requests at batch
     formation *and* re-checks across retry backoff, so this must stay
     0 — the CI bench guard fails on any nonzero value.
+
+    Concurrency: the background ``serve_forever()`` worker mutates
+    these fields (and folds per-attempt ``JoinStats`` into ``join``)
+    under the scheduler's lock — read through
+    :meth:`ServeScheduler.snapshot` from any other thread; a bare
+    ``sched.stats`` read races the worker.
     """
 
     n_submitted: int = 0
@@ -287,8 +324,9 @@ class ServeScheduler:
         arr = now if arrival is None else float(arrival)
         dls = self.config.default_deadline_s if deadline_s is None \
             else float(deadline_s)
-        t = Ticket(rows=q, n=q.shape[0], priority=priority, arrival=arr,
-                   deadline=arr + dls)
+        t = Ticket(rows=q, n=q.shape[0], ticket_id=next(_TICKET_IDS),
+                   priority=priority, arrival=arr, deadline=arr + dls)
+        n_evicted = 0
         with self._lock:
             self.stats.n_submitted += 1
             self.stats.rows_submitted += t.n
@@ -302,15 +340,39 @@ class ServeScheduler:
                     victim = bulk.pop()
                     self._mark_shed_locked(victim, "overload")
                     self._drop_rows_locked(victim.n)
+                    n_evicted += 1
             if self._queued_rows + t.n > cap:
                 t.status, t.reason = "rejected", "queue_full"
                 self.stats.n_rejected += 1
                 self.stats.rows_shed += t.n
+                reg = obs.metrics.REGISTRY
+                reg.counter("serve_submitted_total").inc()
+                reg.counter("serve_rejected_total").inc()
+                obs.event("serve.admission", ticket=t.ticket_id, rows=t.n,
+                          priority=int(priority), outcome="rejected")
                 return t
             self._lanes[priority].append(t)
             self._queued_rows += t.n
+            queued = self._queued_rows
             self._work.notify()
+        reg = obs.metrics.REGISTRY
+        reg.counter("serve_submitted_total").inc()
+        reg.gauge("serve_queued_rows").set(queued)
+        obs.event("serve.admission", ticket=t.ticket_id, rows=t.n,
+                  priority=int(priority), outcome="admitted",
+                  evicted_bulk=n_evicted, queued_rows=queued)
         return t
+
+    def snapshot(self) -> SchedulerStats:
+        """Consistent copy of :attr:`stats` taken under the scheduler
+        lock — the race-free read for benches, guards and dashboards
+        while ``serve_forever()`` mutates the originals. The returned
+        object (including its ``join``) is detached: mutating it never
+        touches the live counters, and the live counters never mutate
+        it."""
+        with self._lock:
+            return dataclasses.replace(
+                self.stats, join=dataclasses.replace(self.stats.join))
 
     @property
     def queued_rows(self) -> int:
@@ -335,6 +397,9 @@ class ServeScheduler:
         else:
             self.stats.n_shed_overload += 1
         self.stats.rows_shed += t.n
+        obs.metrics.REGISTRY.counter("serve_shed_total",
+                                     reason=reason).inc()
+        obs.event("serve.shed", ticket=t.ticket_id, reason=reason)
 
     def _drop_rows_locked(self, n: int) -> None:
         self._queued_rows -= n
@@ -391,6 +456,13 @@ class ServeScheduler:
         with self._lock:
             pressure = self._queued_rows
             batch = self._form_batch_locked(now)
+        if batch and obs.enabled():
+            obs.event("serve.coalesce",
+                      tickets=tuple(t.ticket_id for t in batch),
+                      rows=sum(t.n for t in batch),
+                      queued_rows=pressure)
+        obs.metrics.REGISTRY.gauge("serve_queued_rows") \
+            .set(self._queued_rows)
         degraded = (self.degraded_engine is not None
                     and pressure > self.config.degrade_queued_rows)
         # degraded coverage (shard loss with no live replica) routes
@@ -458,23 +530,46 @@ class ServeScheduler:
         with self._lock:
             self.stats.n_dispatches += 1
             self.stats.n_expired_dispatched += n_exp
+        reg = obs.metrics.REGISTRY
+        reg.counter("serve_dispatch_total").inc()
+        if n_exp:
+            reg.counter("serve_expired_dispatched_total").inc(n_exp)
         for t in live:
             t.dispatched_at = dispatch_at
             t.attempts += 1
+        # per-batch JoinStats: engine stamps land here and are *merged*
+        # into the aggregate (JoinStats.merged) instead of overwriting a
+        # shared object from a worker thread
+        js = JoinStats()
+        tks = tuple(t.ticket_id for t in live) if obs.enabled() else ()
         try:
-            faultinject.fire("sched.dispatch")
-            handle = self.engine.dispatch(q, stats=self.stats.join)
-        except faultinject.ShardFailedError:
+            with obs.span("serve.attempt", tickets=tks, attempt=0,
+                          rung="engine", pipelined=True) as sp:
+                try:
+                    faultinject.fire("sched.dispatch")
+                    handle = self.engine.dispatch(q, stats=js)
+                except faultinject.ShardFailedError as e:
+                    sp.set(outcome="shard_failed", shard=e.shard)
+                    raise
+                sp.set(outcome="dispatched", **_join_attrs(js))
+        except faultinject.ShardFailedError as e:
             # the engine failed over its serving view: re-enter the
             # engine rung (not the host oracle) — _execute re-checks
             # deadlines at this failover instant before dispatching
             with self._lock:
                 self.stats.n_failovers += 1
+                self.stats.join = self.stats.join.merged(js)
+            reg.counter("serve_failovers_total").inc()
+            obs.event("serve.failover", tickets=tks, shard=e.shard)
             self._execute(live, False)
             return sum(t.n for t in batch)
         except Exception:    # noqa: BLE001 — transient-fault ladder
+            with self._lock:
+                self.stats.join = self.stats.join.merged(js)
             self._execute(live, False, first_attempt=1)
             return sum(t.n for t in batch)
+        with self._lock:
+            self.stats.join = self.stats.join.merged(js)
         self._inflight.append((handle, live))
         return sum(t.n for t in batch)
 
@@ -483,18 +578,33 @@ class ServeScheduler:
         fault (failed fetch, poisoned result) re-runs the batch's
         tickets through the synchronous retry ladder."""
         handle, live = self._inflight.popleft()
+        js = JoinStats()
+        tks = tuple(t.ticket_id for t in live) if obs.enabled() else ()
         try:
-            d, i = self.engine.finalize(handle, stats=self.stats.join)
-        except faultinject.ShardFailedError:
+            with obs.span("serve.finalize", tickets=tks) as sp:
+                try:
+                    d, i = self.engine.finalize(handle, stats=js)
+                except faultinject.ShardFailedError as e:
+                    sp.set(outcome="shard_failed", shard=e.shard)
+                    raise
+                sp.set(outcome="done", **_join_attrs(js))
+        except faultinject.ShardFailedError as e:
             # failover: re-run on the engine's updated serving view,
             # deadlines re-checked at the failover instant
             with self._lock:
                 self.stats.n_failovers += 1
+                self.stats.join = self.stats.join.merged(js)
+            obs.metrics.REGISTRY.counter("serve_failovers_total").inc()
+            obs.event("serve.failover", tickets=tks, shard=e.shard)
             self._execute(live, False)
             return sum(t.n for t in live)
         except Exception:    # noqa: BLE001 — transient-fault ladder
+            with self._lock:
+                self.stats.join = self.stats.join.merged(js)
             self._execute(live, False, first_attempt=1)
             return sum(t.n for t in live)
+        with self._lock:
+            self.stats.join = self.stats.join.merged(js)
         self._complete(live, d, i, None)
         return sum(t.n for t in live)
 
@@ -517,6 +627,18 @@ class ServeScheduler:
                 self.stats.rows_completed += t.n
                 if t.degraded:
                     self.stats.n_degraded_requests += 1
+        reg = obs.metrics.REGISTRY
+        lat = reg.histogram("serve_latency_s")
+        reg.counter("serve_completed_total").inc(len(live))
+        if rb is not None:
+            reg.counter("serve_degraded_total").inc(len(live))
+        for t in live:
+            lat.observe(max(0.0, done_at - t.arrival))
+        if obs.enabled():
+            obs.event("serve.complete",
+                      tickets=tuple(t.ticket_id for t in live),
+                      rows=sum(t.n for t in live),
+                      degraded=rb is not None)
 
     def _execute(self, batch: List[Ticket], degraded: bool, *,
                  first_attempt: int = 0) -> None:
@@ -536,6 +658,13 @@ class ServeScheduler:
             still, dead = [], []
             for t in live:
                 (still if t.deadline >= now else dead).append(t)
+            # re-check at the attempt instant — the one place this event
+            # is emitted, so a traced request shows exactly one
+            # deadline_recheck per (re)attempt of the synchronous ladder
+            obs.event("serve.deadline_recheck",
+                      tickets=tuple(t.ticket_id for t in live)
+                      if obs.enabled() else (),
+                      attempt=attempt, shed=len(dead))
             if dead:
                 # expired mid-backoff: shed now — never dispatched
                 with self._lock:
@@ -553,37 +682,65 @@ class ServeScheduler:
                 self.stats.n_expired_dispatched += n_exp
                 if attempt > 0:
                     self.stats.n_retries += 1
+            reg = obs.metrics.REGISTRY
+            reg.counter("serve_dispatch_total").inc()
+            if n_exp:
+                reg.counter("serve_expired_dispatched_total").inc(n_exp)
+            if attempt > 0:
+                reg.counter("serve_retries_total").inc()
             for t in live:
                 t.dispatched_at = dispatch_at
                 t.attempts += 1
-            faultinject.fire("sched.dispatch")
-            if attempt == 0:
-                if degraded:
-                    d, i, rb = self.degraded_engine.join_batch_approx(
-                        q, stats=self.stats.join)
-                    return d, i, rb
-                ce = self._coverage_engine
-                if ce is not None:
-                    # engine rung via the covered call: surviving shards
-                    # answer and each response carries a certified
-                    # per-query recall lower bound. The bound is kept
-                    # only when the batch actually ran on a
-                    # degraded-coverage view — a mid-call failover past
-                    # the last replica flips ``coverage_degraded``, and
-                    # the engine's internal retry already computed the
-                    # batch (and its bound) on that updated view.
-                    d, i, rb = ce.join_batch_covered(
-                        q, stats=self.stats.join)
-                    if ce.coverage_degraded:
-                        return d, i, rb
+            # per-attempt JoinStats, merged into the aggregate on every
+            # exit path — retried/failed-over attempts no longer
+            # overwrite each other's engine stamps
+            js = JoinStats()
+            rung = ("degraded" if attempt == 0 and degraded else
+                    "covered" if attempt == 0
+                    and self._coverage_engine is not None else
+                    "engine" if attempt == 0 else "host")
+            tks = tuple(t.ticket_id for t in live) if obs.enabled() \
+                else ()
+            try:
+                with obs.span("serve.attempt", tickets=tks,
+                              attempt=attempt, rung=rung) as sp:
+                    faultinject.fire("sched.dispatch")
+                    if attempt == 0:
+                        if degraded:
+                            d, i, rb = \
+                                self.degraded_engine.join_batch_approx(
+                                    q, stats=js)
+                            sp.set(outcome="ok", **_join_attrs(js))
+                            return d, i, rb
+                        ce = self._coverage_engine
+                        if ce is not None:
+                            # engine rung via the covered call:
+                            # surviving shards answer and each response
+                            # carries a certified per-query recall lower
+                            # bound. The bound is kept only when the
+                            # batch actually ran on a degraded-coverage
+                            # view — a mid-call failover past the last
+                            # replica flips ``coverage_degraded``, and
+                            # the engine's internal retry already
+                            # computed the batch (and its bound) on that
+                            # updated view.
+                            d, i, rb = ce.join_batch_covered(q, stats=js)
+                            sp.set(outcome="ok", **_join_attrs(js))
+                            if ce.coverage_degraded:
+                                return d, i, rb
+                            return d, i, None
+                        d, i = self.engine.join_batch(q, stats=js)
+                        sp.set(outcome="ok", **_join_attrs(js))
+                        return d, i, None
+                    # retry rung: the host-planned oracle — exact, no
+                    # resident device payload to re-fault on
+                    degraded = False
+                    d, i = self._host_join(q, stats=js)
+                    sp.set(outcome="ok", **_join_attrs(js))
                     return d, i, None
-                d, i = self.engine.join_batch(q, stats=self.stats.join)
-                return d, i, None
-            # retry rung: the host-planned oracle — exact, no resident
-            # device payload to re-fault on
-            degraded = False
-            d, i = self._host_join(q, stats=self.stats.join)
-            return d, i, None
+            finally:
+                with self._lock:
+                    self.stats.join = self.stats.join.merged(js)
 
         try:
             out = faultinject.retry_with_backoff(
@@ -598,6 +755,12 @@ class ServeScheduler:
                     t.status, t.reason = "failed", f"fault: {e!r}"
                     t.completed_at = self._clock()
                     self.stats.n_failed += 1
+            obs.metrics.REGISTRY.counter("serve_failed_total") \
+                .inc(len(live))
+            if obs.enabled():
+                obs.event("serve.failed",
+                          tickets=tuple(t.ticket_id for t in live),
+                          error=type(e).__name__)
             return
         if out is None:
             return                      # everything expired pre-dispatch
